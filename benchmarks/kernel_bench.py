@@ -1,0 +1,93 @@
+"""Kernel micro-benchmarks + analytic TPU roofline for the Pallas kernels.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-times are NOT TPU numbers; we report them for regression tracking
+and derive the *analytic* kernel roofline from the block configuration
+(VMEM footprint, MXU-aligned dims, arithmetic intensity) — the same
+numbers the §Perf log iterates on.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imbue
+from repro.core.tm import TMConfig, include_mask, init_ta_state, literals
+from repro.core.variations import VariationConfig
+from repro.kernels import ops
+from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+
+
+def kernel_roofline(b, c, l, *, bt, ct, kt, dtype_bytes=4,
+                    analog=False, width=32):
+    """Analytic per-kernel roofline on TPU v5e constants."""
+    flops = 2.0 * b * c * l * (2 if analog else 1)   # on+leak paths
+    hbm = dtype_bytes * (b * l + c * l * (2 if analog else 1) + b * c / 8)
+    vmem = dtype_bytes * (bt * kt * (2 if analog else 1)
+                          + kt * ct * (2 if analog else 1) + bt * ct)
+    intensity = flops / hbm
+    t_comp = flops / PEAK_FLOPS
+    t_mem = hbm / HBM_BW
+    # MXU efficiency: contraction dim per pass (128 ideal)
+    contract = width if analog else min(kt, 512)
+    mxu_eff = min(contract, 128) / 128.0
+    return {"flops": flops, "hbm_bytes": hbm, "vmem_bytes": vmem,
+            "intensity": intensity, "t_compute_s": t_comp,
+            "t_memory_s": t_mem, "mxu_eff": mxu_eff,
+            "bound": "compute" if t_comp / max(mxu_eff, 1e-9) > t_mem
+            else "memory"}
+
+
+def bench(reps: int = 3):
+    rows, checks = [], []
+    cfg = TMConfig(n_classes=10, clauses_per_class=100, n_features=784,
+                   n_states=127)
+    ta = init_ta_state(jax.random.PRNGKey(0), cfg)
+    x = jax.random.bernoulli(jax.random.PRNGKey(1), 0.3,
+                             (256, cfg.n_features)).astype(jnp.uint8)
+    lits = literals(x)
+    inc = include_mask(ta, cfg).astype(jnp.uint8)
+
+    def timeit(fn):
+        out = fn()
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+            jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    t_kernel = timeit(lambda: ops.tm_class_sums(lits, inc, cfg))
+    from repro.kernels import ref
+    pol = ops.polarity_matrix(cfg, inc)[:, :cfg.n_classes]
+    t_ref = timeit(lambda: ref.tm_infer_ref(
+        (1 - lits).astype(jnp.float32), inc.astype(jnp.float32), pol))
+    rows.append(("tm_class_sums_pallas_interp_us", t_kernel, t_ref))
+
+    xbar = imbue.program_crossbar(inc > 0, jax.random.PRNGKey(2),
+                                  VariationConfig.nominal())
+    t_analog = timeit(lambda: ops.imbue_class_sums(lits, xbar, cfg))
+    rows.append(("imbue_class_sums_pallas_interp_us", t_analog, 0))
+
+    # analytic rooflines for the MNIST-scale model (Table IV row)
+    b, c, l = 8192, 2000, 1568
+    dig = kernel_roofline(b, c, l, bt=128, ct=128, kt=512, dtype_bytes=2)
+    ana = kernel_roofline(b, c, l, bt=128, ct=128, kt=256, dtype_bytes=4,
+                          analog=True)
+    rows.append(("digital_kernel_tpu_intensity", dig["intensity"],
+                 dig["bound"]))
+    rows.append(("analog_kernel_tpu_intensity", ana["intensity"],
+                 ana["bound"]))
+    rows.append(("digital_vmem_KB", dig["vmem_bytes"] / 1024, 0))
+    rows.append(("analog_vmem_KB", ana["vmem_bytes"] / 1024, 0))
+    checks.append(("kernel/vmem_fits",
+                   dig["vmem_bytes"] < 16e6 and ana["vmem_bytes"] < 16e6,
+                   f"{dig['vmem_bytes']/1e3:.0f}/"
+                   f"{ana['vmem_bytes']/1e3:.0f} KB"))
+    checks.append(("kernel/mxu_aligned",
+                   dig["mxu_eff"] == 1.0, f"digital {dig['mxu_eff']}"))
+    return rows, checks

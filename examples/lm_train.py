@@ -1,0 +1,19 @@
+"""End-to-end LM training driver example (~100M-class model, CPU).
+
+Trains xlstm-125m at reduced width for a few hundred steps with the
+production trainer (checkpointing, auto-resume, watchdog).  Swap
+``--arch`` for any of the 10 assigned architectures.
+
+  PYTHONPATH=src python examples/lm_train.py
+  PYTHONPATH=src python examples/lm_train.py --arch qwen2-0.5b --steps 100
+"""
+
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "xlstm-125m", "--steps", "200",
+                            "--batch", "8", "--seq", "256",
+                            "--ckpt-dir", "/tmp/repro_lm_ckpt"]
+    main(argv)

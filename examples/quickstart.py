@@ -1,0 +1,69 @@
+"""Quickstart: the full IMBUE pipeline on Noisy XOR in ~1 minute (CPU).
+
+  1. train a Tsetlin Machine (Type I/II feedback, pure JAX)
+  2. program its TA actions into a simulated 1T1R ReRAM crossbar
+     (D2D variation draws at SET/RESET time)
+  3. run Boolean-to-Current inference (KCL column currents -> CSA)
+     under cycle-to-cycle + CSA-offset noise
+  4. compare digital vs analog accuracy and report the paper's energy
+     metrics (Table II/IV models)
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import energy, imbue, tm, tm_train
+from repro.core.mapping import csa_count_packed
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.data.tm_datasets import noisy_xor
+
+
+def main():
+    cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
+                   n_states=100, threshold=15, specificity=3.9)
+    print(f"TM: {cfg.n_classes} classes x {cfg.clauses_per_class} clauses,"
+          f" {cfg.n_ta} TA cells")
+
+    # 1. train
+    xtr, ytr, xte, yte = noisy_xor(jax.random.PRNGKey(0), 4000, 1000)
+    ta = tm.init_ta_state(jax.random.PRNGKey(1), cfg)
+    ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                      epochs=80, batch_size=2000)
+    acc_digital = float(tm.accuracy(ta, xte, yte, cfg))
+    stats = tm.include_stats(ta, cfg)
+    print(f"digital accuracy: {acc_digital:.4f} "
+          f"(paper: 0.992) — includes {stats['include_pct']:.1f}%")
+
+    # 2. program the crossbar (one-time; D2D drawn at programming)
+    vcfg = VariationConfig()
+    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
+                                  jax.random.PRNGKey(3), vcfg)
+    e_prog = energy.programming_energy(stats["includes"], cfg.n_ta)
+    print(f"programmed {cfg.n_ta} cells, one-time energy "
+          f"{e_prog * 1e9:.2f} nJ")
+
+    # 3. analog inference under C2C + CSA noise, 8 manufactured chips
+    accs = imbue.monte_carlo_accuracy(ta, xte, yte, jax.random.PRNGKey(4),
+                                      cfg, vcfg, draws=8)
+    accs = np.asarray(accs)
+    print(f"analog accuracy under D2D+C2C+CSA variation: "
+          f"{accs.mean():.4f} +- {accs.std():.4f} over 8 chips")
+
+    # 4. energy per datapoint (paper's models)
+    csas = csa_count_packed(cfg.n_ta)
+    e = energy.imbue_energy_per_datapoint(stats["includes"], cfg.n_ta,
+                                          csas)
+    e_cmos = energy.cmos_tm_energy(cfg.n_ta)
+    print(f"IMBUE energy/datapoint: {e.total_nj:.4f} nJ "
+          f"(CMOS TM baseline: {e_cmos * 1e9:.4f} nJ)")
+    print(f"TopJ^-1: {energy.top_j_inv(cfg.n_ta, e.total_j):.1f} "
+          f"trillion TA-ops/J")
+    print(f"latency (fully parallel columns): "
+          f"{energy.inference_latency_s(csas) * 1e9:.0f} ns/datapoint")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Booleanization of raw inputs (paper Fig. 1b, method of ref [13]).
+
+Raw scalar features are encoded into Boolean features with a thermometer
+code against per-feature thresholds.  Thresholds are fit from training data
+at uniform quantiles (the quantile booleanizer of Lei et al. 2021, used by
+the paper's KWS-6 models) or spaced uniformly across the observed range.
+
+``fit`` is numpy/JAX host-side (one-time preprocessing); ``transform`` is a
+jit-friendly pure function.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Booleanizer:
+    """Thermometer encoder: feature f -> bits [x > t_1, ..., x > t_k]."""
+
+    thresholds: jax.Array   # [F, K] ascending per-feature thresholds
+
+    @property
+    def bits_per_feature(self) -> int:
+        return self.thresholds.shape[1]
+
+    @property
+    def n_boolean_features(self) -> int:
+        return self.thresholds.shape[0] * self.thresholds.shape[1]
+
+    def transform(self, x: jax.Array) -> jax.Array:
+        """``[B, F]`` raw -> ``[B, F*K]`` uint8 thermometer bits."""
+        bits = x[..., :, None] > self.thresholds[None, :, :]
+        return bits.reshape(*x.shape[:-1], -1).astype(jnp.uint8)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.transform(x)
+
+
+def fit_quantile(x: np.ndarray, bits: int) -> Booleanizer:
+    """Quantile thermometer thresholds from training data ``[N, F]``."""
+    qs = np.linspace(0.0, 1.0, bits + 2)[1:-1]
+    thr = np.quantile(np.asarray(x, dtype=np.float64), qs, axis=0).T  # [F, K]
+    # Guard degenerate (constant) features: nudge ties so bits stay ordered.
+    eps = 1e-9 * (1.0 + np.abs(thr))
+    thr = thr + eps * np.arange(bits)[None, :]
+    return Booleanizer(thresholds=jnp.asarray(thr, dtype=jnp.float32))
+
+
+def fit_uniform(x: np.ndarray, bits: int) -> Booleanizer:
+    """Uniformly spaced thresholds across each feature's observed range."""
+    lo = np.min(x, axis=0).astype(np.float64)
+    hi = np.max(x, axis=0).astype(np.float64)
+    steps = np.linspace(0.0, 1.0, bits + 2)[1:-1]
+    thr = lo[:, None] + (hi - lo)[:, None] * steps[None, :]
+    return Booleanizer(thresholds=jnp.asarray(thr, dtype=jnp.float32))
+
+
+def binarize(x: jax.Array, threshold: float = 0.5) -> jax.Array:
+    """1-bit booleanization (the paper's image datasets use binarized
+    pixels: MNIST-family inputs -> 784 Boolean features)."""
+    return (x > threshold).astype(jnp.uint8)

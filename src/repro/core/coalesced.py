@@ -1,0 +1,174 @@
+"""Coalesced Tsetlin Machine (paper §V future work).
+
+The paper closes with: "Recent works with TMs have proposed coalesced
+clause architectures where clauses are shared between classes [17].
+Future work aims to explore the associated trade-offs from applying the
+principles of IMBUE to such an algorithm."  This module explores exactly
+that (Glimsdal & Granmo 2021, arXiv:2108.07594):
+
+* ONE pool of clauses shared by all classes; each (clause, class) pair
+  carries an integer weight.  Inference: ``sums = clauses @ W``.
+* Training: per example, the target class strengthens firing clauses
+  (w += 1, TA Type I); a sampled negative class weakens them (w -= 1,
+  TA Type II on firing clauses).
+
+IMBUE mapping — the whole point: the crossbar is UNCHANGED (same TA
+columns, same CSAs, same Boolean-to-Current path); only the digital tail
+swaps polarity ±1 counters for weighted counters.  The fused Pallas
+kernels already take an arbitrary [C, M] combine matrix, so
+``kernels/ops.tm_class_sums``-style inference works verbatim with W.
+The trade-off measured in benchmarks/ablations.py: a coalesced pool
+needs ~2x fewer TA cells for the same accuracy -> proportionally less
+crossbar energy (Table II economics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tm import literals
+from repro.core.tm_train import _bernoulli_u8, _clip_state
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescedConfig:
+    n_classes: int
+    n_clauses: int              # TOTAL shared clause pool
+    n_features: int
+    n_states: int = 127
+    threshold: int = 15
+    specificity: float = 3.9
+    max_weight: int = 127
+    state_dtype: jnp.dtype = jnp.int16
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+    @property
+    def n_ta(self) -> int:
+        return self.n_clauses * self.n_literals
+
+
+def init_coalesced(key, cfg: CoalescedConfig):
+    """(ta_state [C, L], weights [C, M])."""
+    u = jax.random.bernoulli(key, 0.5, (cfg.n_clauses, cfg.n_literals))
+    ta = (cfg.n_states + u.astype(cfg.state_dtype)).astype(cfg.state_dtype)
+    w = jnp.ones((cfg.n_clauses, cfg.n_classes), jnp.int32)
+    return ta, w
+
+
+def clause_outputs(ta_state, lits, cfg: CoalescedConfig, *,
+                   training=False):
+    inc = ta_state > cfg.n_states
+    viol = (1 - lits).astype(jnp.float32) @ inc.astype(jnp.float32).T
+    fired = viol == 0
+    if not training:
+        fired = jnp.logical_and(fired, inc.any(-1)[None, :])
+    return fired.astype(jnp.uint8)
+
+
+def forward(ta_state, weights, x, cfg: CoalescedConfig):
+    cls = clause_outputs(ta_state, literals(x), cfg)
+    return cls.astype(jnp.int32) @ weights
+
+
+def predict(ta_state, weights, x, cfg: CoalescedConfig):
+    return jnp.argmax(forward(ta_state, weights, x, cfg), axis=-1)
+
+
+def accuracy(ta_state, weights, x, y, cfg: CoalescedConfig):
+    return (predict(ta_state, weights, x, cfg) == y).mean()
+
+
+def _example_update(key, ta_state, weights, lits, cls, sums, y,
+                    cfg: CoalescedConfig):
+    """Deltas for one example: (d_state i8 [C, L], d_w i8 [C, M]).
+
+    Vanilla-multiclass CoTM semantics: the target class pulls with prob
+    (T - s_y)/2T and ONE sampled negative pushes with prob (T + s_q)/2T.
+    Feedback type mirrors the weight sign for the feedback class (a
+    clause whose weight opposes the class swaps Type I/II roles), which
+    is how shared clauses specialize."""
+    k_neg, k_sel, k_hi, k_lo = jax.random.split(key, 4)
+    m = cfg.n_classes
+    t = float(cfg.threshold)
+    q = jax.random.randint(k_neg, (), 0, m - 1)
+    q = jnp.where(q >= y, q + 1, q)
+    is_tgt = jax.nn.one_hot(y, m, dtype=jnp.bool_)
+    active = jnp.logical_or(is_tgt, jax.nn.one_hot(q, m, dtype=jnp.bool_))
+    clipped = jnp.clip(sums.astype(jnp.float32), -t, t)
+    p = jnp.where(is_tgt, (t - clipped) / (2 * t),
+                  (t + clipped) / (2 * t)) * active           # [M]
+    sel = jax.random.uniform(k_sel, (cfg.n_clauses, m)) < p[None, :]
+
+    fired = cls == 1
+    s = float(cfg.specificity)
+    lit1 = (lits == 1)[None, :]
+    f = fired[:, None]
+    pos = weights >= 0                                       # [C, M]
+
+    # Type I where (target & supportive) or (negative & opposing);
+    # Type II where the clause's weight sign conflicts with the class.
+    t1_cm = jnp.logical_and(sel, jnp.where(is_tgt[None, :], pos, ~pos))
+    t2_cm = jnp.logical_and(sel, jnp.where(is_tgt[None, :], ~pos, pos))
+    type1 = t1_cm.any(axis=1)
+    type2 = t2_cm.any(axis=1)
+
+    # Type I (recognize)
+    r_hi = _bernoulli_u8(k_hi, (s - 1.0) / s, ta_state.shape)
+    r_lo = _bernoulli_u8(k_lo, 1.0 / s, ta_state.shape)
+    inc_t1 = jnp.logical_and(jnp.logical_and(f, lit1), r_hi)
+    dec_t1 = jnp.logical_and(
+        jnp.logical_or(~f, jnp.logical_and(f, ~lit1)), r_lo)
+    d1 = (inc_t1.astype(jnp.int8) - dec_t1.astype(jnp.int8)) \
+        * type1[:, None].astype(jnp.int8)
+    # Type II (reject) on firing clauses
+    excl = ta_state <= cfg.n_states
+    inc_t2 = jnp.logical_and(jnp.logical_and(f, ~lit1), excl)
+    d2 = inc_t2.astype(jnp.int8) * jnp.logical_and(
+        type2, fired)[:, None].astype(jnp.int8)
+    d_state = d1 + d2
+
+    # weight deltas on firing clauses: +1 toward the target column,
+    # -1 on the selected negative column
+    dw = jnp.where(is_tgt[None, :], 1, -1).astype(jnp.int8) \
+        * jnp.logical_and(sel, f).astype(jnp.int8)
+    return d_state, dw
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step_batch(ta_state, weights, key, x, y, cfg: CoalescedConfig):
+    lits_b = literals(x)
+    cls = clause_outputs(ta_state, lits_b, cfg, training=True)
+    sums = cls.astype(jnp.int32) @ weights
+    keys = jax.random.split(key, x.shape[0])
+    d_state, d_w = jax.vmap(
+        lambda k, l, c, s, yy: _example_update(
+            k, ta_state, weights, l, c, s, yy, cfg)
+    )(keys, lits_b, cls, sums, y)
+    new_state = _clip_state(
+        ta_state.astype(jnp.int32) + d_state.astype(jnp.int32).sum(0),
+        dataclasses.replace(cfg, state_dtype=cfg.state_dtype))
+    new_w = jnp.clip(weights + d_w.astype(jnp.int32).sum(0),
+                     -cfg.max_weight, cfg.max_weight)
+    return new_state, new_w
+
+
+def fit(ta_state, weights, key, x, y, cfg: CoalescedConfig, *,
+        epochs=10, batch_size=256):
+    n = x.shape[0]
+    for _ in range(epochs):
+        key, kp, ks = jax.random.split(key, 3)
+        perm = jax.random.permutation(kp, n)
+        xs, ys = x[perm], y[perm]
+        for i in range(0, n - batch_size + 1, batch_size):
+            ks, kb = jax.random.split(ks)
+            ta_state, weights = train_step_batch(
+                ta_state, weights, kb, xs[i:i + batch_size],
+                ys[i:i + batch_size], cfg)
+    return ta_state, weights

@@ -1,0 +1,230 @@
+"""IMBUE: the analog Boolean-to-Current crossbar, simulated in JAX.
+
+This is the paper's primary contribution (§II): TM inference computed as
+ReRAM column currents instead of digital logic.
+
+Pipeline (mirrors Fig. 2):
+
+  1. **Program**: trained TA actions -> per-cell memristor resistance
+     (include -> LRS, exclude -> HRS), with D2D variation draws.
+  2. **Drive**: Boolean literals -> read voltages (logic '1' -> 0 V,
+     logic '0' -> 0.2 V; inverted so only *violations* conduct).
+  3. **KCL**: each partial-clause column of W=32 cells sums its cell
+     currents; the 100 Ω divider converts to a column voltage.
+  4. **CSA**: the column voltage is compared against ``v_ref`` (placed in
+     the sensing margin between the all-exclude leak band and a single
+     include violation); output is the Boolean partial-clause value.
+  5. **Digital tail**: AND of partial clauses -> full clause; polarity
+     up/down counters -> class sums; comparator -> argmax.
+
+Everything is vectorized: column currents are two einsums (on-path and
+leak-path), so the ``[B, C, L]`` per-cell current tensor is never
+materialized.  Monte-Carlo studies vmap this module over device draws.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import variations as var
+from repro.core.mapping import CrossbarMapping, pad_to_columns
+from repro.core.tm import TMConfig, class_sums, include_mask, literals
+
+# Nominal single-cell read currents (Table I).
+I_INCLUDE_ON = var.V_READ / (var.SERIES_FACTOR * var.LRS_MEAN_OHM)   # ~75.7 uA
+I_EXCLUDE_ON = var.V_READ / (var.SERIES_FACTOR * var.HRS_MEAN_OHM)   # ~1.89 uA
+
+
+@dataclasses.dataclass(frozen=True)
+class IMBUEConfig:
+    """Electrical configuration of the crossbar (paper §II/III)."""
+
+    width: int = 32                 # W: TA cells per partial-clause column
+    r_divider: float = 100.0        # column divider resistance (Ω)
+    v_read: float = var.V_READ      # literal '0' drive voltage (V)
+    series_factor: float = var.SERIES_FACTOR
+    # Reference current midway between the all-exclude leak band and one
+    # include violation (the "careful design choice" of §II-B).
+    v_ref: Optional[float] = None   # None -> computed from width
+
+    def reference_voltage(self) -> float:
+        if self.v_ref is not None:
+            return self.v_ref
+        i_leak_band = self.width * I_EXCLUDE_ON
+        i_violation = I_INCLUDE_ON
+        return self.r_divider * 0.5 * (i_leak_band + i_violation)
+
+    def sensing_margin(self) -> float:
+        """Half-width of the [all-exclude, one-include] current band (V)."""
+        return self.r_divider * 0.5 * (I_INCLUDE_ON - self.width * I_EXCLUDE_ON)
+
+
+@dataclasses.dataclass
+class ProgrammedCrossbar:
+    """A crossbar with TA actions programmed into memristor states."""
+
+    r_mem: jax.Array        # [C, L] programmed memristor resistance (Ω)
+    include: jax.Array      # [C, L] bool TA actions
+    mapping: CrossbarMapping
+    cfg: IMBUEConfig
+
+
+def program_crossbar(
+    ta_include: jax.Array,             # [C, L] bool include mask
+    key: jax.Array,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+    cfg: IMBUEConfig = IMBUEConfig(),
+) -> ProgrammedCrossbar:
+    """One-time programming (paper Fig. 5): D2D drawn at SET/RESET time."""
+    c, l = ta_include.shape
+    r_mem = var.sample_device_resistance(key, ta_include, vcfg)
+    return ProgrammedCrossbar(
+        r_mem=r_mem, include=ta_include,
+        mapping=CrossbarMapping(n_clauses=c, n_literals=l, width=cfg.width),
+        cfg=cfg)
+
+
+def cell_conductances(xbar: ProgrammedCrossbar, key: Optional[jax.Array],
+                      vcfg: var.VariationConfig):
+    """Per-cell on-path conductance and leak current for this read cycle."""
+    r = xbar.r_mem
+    if key is not None:
+        r = var.apply_c2c(key, r, xbar.include, vcfg)
+    g_on = 1.0 / (xbar.cfg.series_factor * r)               # [C, L] siemens
+    # Leak at literal '1' scales with 1/R around the Table I operating point.
+    i_leak_nom = jnp.where(xbar.include, var.I_LEAK_INCLUDE,
+                           var.I_LEAK_EXCLUDE)
+    r_nom = jnp.where(xbar.include, var.LRS_MEAN_OHM, var.HRS_MEAN_OHM)
+    i_leak = i_leak_nom * (r_nom / r)
+    return g_on, i_leak
+
+
+def column_currents(
+    xbar: ProgrammedCrossbar,
+    lits: jax.Array,                  # [B, L] uint8
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+) -> jax.Array:
+    """KCL column currents ``[B, C, columns_per_clause]`` (amps)."""
+    g_on, i_leak = cell_conductances(xbar, key, vcfg)
+    m = xbar.mapping
+    lit0 = pad_to_columns((1 - lits).astype(jnp.float32) * xbar.cfg.v_read,
+                          m)                                  # [B, K, W] volts
+    lit1 = pad_to_columns(lits.astype(jnp.float32), m)        # [B, K, W]
+    g_on_f = pad_to_columns(g_on, m)                          # [C, K, W]
+    i_leak_f = pad_to_columns(i_leak, m)
+    on = jnp.einsum("bkw,ckw->bck", lit0, g_on_f)
+    leak = jnp.einsum("bkw,ckw->bck", lit1, i_leak_f)
+    return on + leak
+
+
+def csa_sense(
+    i_col: jax.Array,                 # [..., columns] column currents
+    cfg: IMBUEConfig,
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+) -> jax.Array:
+    """CSA compare (Fig. 4a): partial clause = 1 iff V_col < V_ref+offset."""
+    v_col = i_col * cfg.r_divider
+    v_ref = cfg.reference_voltage()
+    off = (var.csa_offset(key, i_col.shape, vcfg)
+           if key is not None else 0.0)
+    return (v_col < v_ref + off).astype(jnp.uint8)
+
+
+def analog_clause_outputs(
+    xbar: ProgrammedCrossbar,
+    lits: jax.Array,                  # [B, L]
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+) -> jax.Array:
+    """Full clause outputs ``[B, C]`` via partial-clause AND (Fig. 4b)."""
+    if key is not None:
+        k_c2c, k_csa = jax.random.split(key)
+    else:
+        k_c2c = k_csa = None
+    i_col = column_currents(xbar, lits, k_c2c, vcfg)
+    partial = csa_sense(i_col, xbar.cfg, k_csa, vcfg)         # [B, C, K]
+    return jnp.min(partial, axis=-1)                          # AND over cols
+
+
+def analog_forward(
+    xbar: ProgrammedCrossbar,
+    x: jax.Array,                     # [B, F] raw Boolean features
+    tm_cfg: TMConfig,
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+) -> jax.Array:
+    """Class sums ``[B, M]`` from the analog crossbar."""
+    lits = literals(x)
+    cls = analog_clause_outputs(xbar, lits, key, vcfg)
+    # Digital tail: the control unit masks empty clauses at inference.
+    nonempty = xbar.include.any(axis=-1)
+    cls = cls * nonempty[None, :].astype(cls.dtype)
+    return class_sums(cls, tm_cfg)
+
+
+def analog_predict(xbar, x, tm_cfg, key=None,
+                   vcfg: var.VariationConfig = var.VariationConfig()):
+    return jnp.argmax(analog_forward(xbar, x, tm_cfg, key, vcfg), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Monte-Carlo variation studies (paper §III-C / Fig. 7)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("tm_cfg", "vcfg", "draws"))
+def monte_carlo_accuracy(
+    ta_state: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    key: jax.Array,
+    tm_cfg: TMConfig,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+    draws: int = 16,
+) -> jax.Array:
+    """Accuracy distribution over independent device/cycle draws ``[draws]``.
+
+    Each draw programs a fresh crossbar (D2D), then evaluates the batch
+    under fresh C2C + CSA-offset noise — i.e. one manufactured chip and one
+    read cycle per draw.
+    """
+    inc = include_mask(ta_state, tm_cfg)
+
+    def one(k):
+        k_prog, k_read = jax.random.split(k)
+        xbar = program_crossbar(inc, k_prog, vcfg)
+        pred = analog_predict(xbar, x, tm_cfg, k_read, vcfg)
+        return (pred == y).mean()
+
+    return jax.vmap(one)(jax.random.split(key, draws))
+
+
+@partial(jax.jit, static_argnames=("tm_cfg", "vcfg", "draws"))
+def clause_error_rate(
+    ta_state: jax.Array,
+    x: jax.Array,
+    key: jax.Array,
+    tm_cfg: TMConfig,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+    draws: int = 16,
+) -> jax.Array:
+    """Fraction of (datapoint, clause) cells where the analog readout
+    disagrees with the digital oracle, per draw."""
+    from repro.core.tm import clause_outputs  # local to avoid cycle
+    inc = include_mask(ta_state, tm_cfg)
+    lits = literals(x)
+    oracle = clause_outputs(ta_state, lits, tm_cfg, training=True)
+
+    def one(k):
+        k_prog, k_read = jax.random.split(k)
+        xbar = program_crossbar(inc, k_prog, vcfg)
+        got = analog_clause_outputs(xbar, lits, k_read, vcfg)
+        return (got != oracle).mean()
+
+    return jax.vmap(one)(jax.random.split(key, draws))

@@ -1,0 +1,75 @@
+"""TM -> crossbar mapping (paper Fig. 2, §II-B).
+
+A full clause of K literals is split into partial clauses of at most
+``W = 32`` TA cells per crossbar column (to bound HRS-leakage accumulation
+and sneak currents); the full clause is the AND of its column outputs
+(Fig. 4b).  The *literals decoder* routes each Boolean literal to its TA
+rows so every clause column sees its own TA actions against the shared
+literal bus.
+
+Two CSA-count conventions appear in the paper:
+
+* **architectural** (Fig. 2/4b): one CSA per partial-clause column,
+  ``clauses x ceil(K / W)``;
+* **packed** (Table IV): ``ceil(total_TA_cells / W)`` — columns packed
+  densely across clause boundaries.  All five Table IV rows match this
+  formula exactly (e.g. MNIST 3,136,000/32 = 98,000), so the energy
+  benchmarks use it; the analog simulator uses the architectural mapping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+PARTIAL_CLAUSE_WIDTH = 32   # W, TA cells per crossbar column (paper §III)
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarMapping:
+    """Static mapping facts for a TM of C clauses x L literals."""
+
+    n_clauses: int
+    n_literals: int
+    width: int = PARTIAL_CLAUSE_WIDTH
+
+    @property
+    def columns_per_clause(self) -> int:
+        return math.ceil(self.n_literals / self.width)
+
+    @property
+    def n_columns(self) -> int:
+        """Architectural column (CSA) count."""
+        return self.n_clauses * self.columns_per_clause
+
+    @property
+    def n_cells(self) -> int:
+        return self.n_clauses * self.n_literals
+
+    @property
+    def n_columns_packed(self) -> int:
+        """Packed CSA count used by Table IV."""
+        return math.ceil(self.n_cells / self.width)
+
+    @property
+    def padded_literals(self) -> int:
+        return self.columns_per_clause * self.width
+
+
+def csa_count_packed(ta_cells: int, width: int = PARTIAL_CLAUSE_WIDTH) -> int:
+    return math.ceil(ta_cells / width)
+
+
+def pad_to_columns(x: jax.Array, mapping: CrossbarMapping,
+                   fill_value=0) -> jax.Array:
+    """Pad the literal axis (last) to a multiple of W and fold it into
+    ``[..., columns_per_clause, W]``.  Padding cells behave like excluded
+    TAs driven by literal 1 (no current)."""
+    pad = mapping.padded_literals - x.shape[-1]
+    if pad:
+        pads = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+        x = jnp.pad(x, pads, constant_values=fill_value)
+    return x.reshape(*x.shape[:-1], mapping.columns_per_clause, mapping.width)

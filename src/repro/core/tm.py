@@ -1,0 +1,151 @@
+"""Tsetlin Machine inference in pure JAX.
+
+The TM (Granmo 2018, arXiv:1804.01508) classifies Boolean feature vectors
+with conjunctive clauses over *literals* (features and their negations).
+Each (clause, literal) pair owns a Tsetlin Automaton (TA) whose trained
+action is *include* or *exclude*; a clause fires iff every included literal
+is 1.  Class scores are polarity-weighted clause sums; prediction is argmax.
+
+This module is the digital (Boolean-domain) reference the IMBUE crossbar
+architecture implements in the current domain — see ``core/imbue.py`` for
+the analog counterpart and ``kernels/clause_eval.py`` for the TPU kernel.
+
+Shape conventions
+-----------------
+  B  batch, F  features, L = 2F literals,
+  M  classes, J  clauses per class, C = M*J total clauses.
+
+TA state is an integer tensor ``[C, L]`` in ``[1, 2N]``; action is include
+iff ``state > N``.  Clause ``c`` of class ``m`` has polarity ``+1`` for even
+``c`` and ``-1`` for odd ``c`` (interleaved, as in the reference CAIR
+implementation and the paper's Fig. 1d).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TMConfig:
+    """Hyper-parameters of a (multi-class) Tsetlin Machine."""
+
+    n_classes: int
+    clauses_per_class: int          # J; must be even (half +, half - polarity)
+    n_features: int                 # F booleanized input features
+    n_states: int = 127             # N; TA states span [1, 2N]
+    threshold: int = 15             # T; vote clamp used by training feedback
+    specificity: float = 3.9        # s; Type-I feedback sharpness
+    state_dtype: jnp.dtype = jnp.int16
+
+    @property
+    def n_literals(self) -> int:
+        return 2 * self.n_features
+
+    @property
+    def n_clauses(self) -> int:
+        return self.n_classes * self.clauses_per_class
+
+    @property
+    def n_ta(self) -> int:
+        return self.n_clauses * self.n_literals
+
+    def __post_init__(self):
+        if self.clauses_per_class % 2 != 0:
+            raise ValueError("clauses_per_class must be even (polarity pairs)")
+        if self.n_states < 1:
+            raise ValueError("n_states must be >= 1")
+
+
+def init_ta_state(key: jax.Array, cfg: TMConfig) -> jax.Array:
+    """Random init on the include/exclude boundary (states N or N+1)."""
+    u = jax.random.bernoulli(key, 0.5, (cfg.n_clauses, cfg.n_literals))
+    return (cfg.n_states + u.astype(cfg.state_dtype)).astype(cfg.state_dtype)
+
+
+def literals(x: jax.Array) -> jax.Array:
+    """``[B, F] -> [B, 2F]``: features followed by their complements."""
+    x = x.astype(jnp.uint8)
+    return jnp.concatenate([x, 1 - x], axis=-1)
+
+
+def include_mask(ta_state: jax.Array, cfg: TMConfig) -> jax.Array:
+    """TA action: include iff state is in the upper half ``(N, 2N]``."""
+    return ta_state > cfg.n_states
+
+
+def polarity(cfg: TMConfig) -> jax.Array:
+    """``[C]`` vector of +1/-1 clause polarities, interleaved per class."""
+    pol = jnp.where(jnp.arange(cfg.clauses_per_class) % 2 == 0, 1, -1)
+    return jnp.tile(pol, cfg.n_classes).astype(jnp.int32)
+
+
+def clause_outputs(
+    ta_state: jax.Array,
+    lits: jax.Array,
+    cfg: TMConfig,
+    *,
+    training: bool = False,
+) -> jax.Array:
+    """Evaluate every clause on every datapoint.
+
+    A clause fires iff no included literal is 0.  We count *violations*
+    ``v[b, c] = sum_i (1 - lit[b, i]) * include[c, i]`` — a binary matmul —
+    and fire on ``v == 0``.  This is exactly the IMBUE Boolean-to-current
+    sum (violating cells conduct; the CSA thresholds the column current).
+
+    Empty clauses (no includes) output 1 during training and 0 during
+    inference, per the reference implementation.
+
+    Returns ``uint8 [B, C]``.
+    """
+    inc = include_mask(ta_state, cfg)
+    lit0 = (1 - lits).astype(jnp.float32)              # violating inputs
+    viol = lit0 @ inc.astype(jnp.float32).T            # [B, C]
+    fired = viol == 0
+    if not training:
+        nonempty = inc.any(axis=-1)                    # [C]
+        fired = jnp.logical_and(fired, nonempty[None, :])
+    return fired.astype(jnp.uint8)
+
+
+def class_sums(clauses: jax.Array, cfg: TMConfig) -> jax.Array:
+    """Polarity-weighted vote totals per class: ``[B, C] -> [B, M]``."""
+    pol = polarity(cfg)
+    votes = clauses.astype(jnp.int32) * pol[None, :]
+    return votes.reshape(*clauses.shape[:-1], cfg.n_classes,
+                         cfg.clauses_per_class).sum(axis=-1)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def forward(ta_state: jax.Array, x: jax.Array, cfg: TMConfig) -> jax.Array:
+    """Class sums for raw Boolean features ``x [B, F]`` -> ``[B, M]``."""
+    return class_sums(clause_outputs(ta_state, literals(x), cfg), cfg)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def predict(ta_state: jax.Array, x: jax.Array, cfg: TMConfig) -> jax.Array:
+    """Argmax classification ``[B, F] -> [B]``."""
+    return jnp.argmax(forward(ta_state, x, cfg), axis=-1)
+
+
+def accuracy(ta_state: jax.Array, x: jax.Array, y: jax.Array,
+             cfg: TMConfig) -> jax.Array:
+    return (predict(ta_state, x, cfg) == y).mean()
+
+
+def include_stats(ta_state: jax.Array, cfg: TMConfig) -> dict:
+    """Model statistics used throughout the paper's evaluation (Table IV)."""
+    inc = include_mask(ta_state, cfg)
+    n_inc = int(inc.sum())
+    return {
+        "ta_cells": cfg.n_ta,
+        "includes": n_inc,
+        "include_pct": 100.0 * n_inc / cfg.n_ta,
+        "clauses": cfg.n_clauses,
+        "classes": cfg.n_classes,
+    }

@@ -1,0 +1,130 @@
+"""TM training/inference as a distributed (multi-pod) workload.
+
+The paper's workload, mapped onto the production mesh (DESIGN.md §4):
+
+* batch -> (pod, data); clauses -> model.  Clause evaluation is the
+  violation matmul ``lit0 @ include^T`` with the clause dim sharded
+  (tensor parallel over clauses); class sums contract the sharded clause
+  dim against the polarity one-hot -> one small psum; TA updates are
+  elementwise over the sharded state.
+* ``tm_train_step``: the batch-parallel Type I/II update (exact
+  semantics per draw; deltas psum over the batch shards implicitly).
+* ``tm_infer_step``: fused digital inference (violation matmul ->
+  threshold -> polarity matmul), the jnp formulation of the Pallas
+  kernel in kernels/clause_eval.py (the kernel itself targets TPU; the
+  dry-run lowers this mathematically identical form).
+* ``imbue_infer_step``: the analog current-domain inference (per-column
+  CSA thresholds) on programmed conductances.
+
+Shardings for the dry-run come from ``tm_shardings``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import tm_train
+from repro.core.tm import TMConfig, literals
+from repro.kernels import ref as kref
+from repro.kernels.ops import polarity_matrix
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def tm_train_step(ta_state, key, x, y, cfg: TMConfig):
+    return tm_train.train_step_batch(ta_state, key, x, y, cfg)
+
+
+def tm_infer_step(ta_state, x, cfg: TMConfig):
+    """Digital fused inference -> predictions [B].
+
+    bf16 violation matmul: counts are small integers (exact in bf16 up to
+    256; columns hold <= 2F <= 1568 literals — accumulate in f32 via
+    preferred_element_type, values exact)."""
+    lits = literals(x)
+    inc = (ta_state > cfg.n_states).astype(jnp.bfloat16)
+    pol = polarity_matrix(cfg, inc > 0)[:, :cfg.n_classes]
+    lit0 = (1 - lits).astype(jnp.bfloat16)
+    viol = jnp.dot(lit0, inc.T, preferred_element_type=jnp.float32)
+    clauses = (viol == 0).astype(jnp.bfloat16)
+    sums = jnp.dot(clauses, pol.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    return jnp.argmax(sums, axis=-1)
+
+
+def imbue_infer_step(g_on, i_leak, include, x, cfg: TMConfig, *,
+                     v_read, r_div, v_ref, width=32):
+    """Analog (current-domain) inference -> predictions [B].
+
+    Currents run in bf16 (relative error ~0.4% vs the ~11% sensing
+    margin; §Perf iter T2) with f32 accumulation for the KCL sums."""
+    lits = literals(x)
+    pol = polarity_matrix(cfg, include)[:, :cfg.n_classes]
+    l = lits.shape[-1]
+    pad = (-l) % width
+    if pad:
+        lits = jnp.pad(lits, ((0, 0), (0, pad)), constant_values=1)
+        g_on = jnp.pad(g_on, ((0, 0), (0, pad)))
+        i_leak = jnp.pad(i_leak, ((0, 0), (0, pad)))
+    b = lits.shape[0]
+    c = g_on.shape[0]
+    k = lits.shape[-1] // width
+    v_drive = ((1.0 - lits.astype(jnp.float32)) * v_read
+               ).astype(jnp.bfloat16).reshape(b, k, width)
+    lit1 = lits.astype(jnp.bfloat16).reshape(b, k, width)
+    gf = g_on.astype(jnp.bfloat16).reshape(c, k, width)
+    lf = i_leak.astype(jnp.bfloat16).reshape(c, k, width)
+    i_col = (jnp.einsum("bkw,ckw->bck", v_drive, gf,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bkw,ckw->bck", lit1, lf,
+                          preferred_element_type=jnp.float32))
+    partial = (i_col * r_div < v_ref)
+    clauses = partial.all(axis=-1).astype(jnp.bfloat16)
+    sums = jnp.dot(clauses, pol.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32)
+    return jnp.argmax(sums, axis=-1)
+
+
+def tm_shardings(cfg: TMConfig, mesh: Mesh, batch: int):
+    """(state, batch_x, batch_y) NamedShardings on the production mesh."""
+    b_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_b = 1
+    for a in b_axes:
+        n_b *= mesh.shape[a]
+    bspec = b_axes if (b_axes and batch % n_b == 0) else None
+    clause_ax = "model" if ("model" in mesh.shape and
+                            cfg.n_clauses % mesh.shape["model"] == 0) \
+        else None
+    state_sh = NamedSharding(mesh, P(clause_ax, None))
+    x_sh = NamedSharding(mesh, P(bspec, None))
+    y_sh = NamedSharding(mesh, P(bspec))
+    return state_sh, x_sh, y_sh
+
+
+def pad_clauses_for_mesh(cfg: TMConfig, mesh: Mesh) -> TMConfig:
+    """Round clauses_per_class up so total clauses divide the model axis.
+
+    Without this, a clause count like F-MNIST's 5000 leaves the TA state
+    REPLICATED (5000 % 16 != 0) and every device does full-clause work —
+    measured 40x slower than the sharded MNIST cell (§Perf iter T3).
+    Padding is class-blocked so clause->class indexing is preserved.
+    At inference the extra clauses are programmed all-exclude (empty
+    clauses output 0: EXACT original semantics); for training it is a
+    marginally larger TM (e.g. 5120 vs 5000 clauses)."""
+    import dataclasses
+    import math
+    if "model" not in mesh.shape:
+        return cfg
+    m = mesh.shape["model"]
+    if cfg.n_clauses % m == 0:
+        return cfg
+    # per-class count must be even (polarity pairs) and make M*J % m == 0
+    j = cfg.clauses_per_class
+    while True:
+        j += 2
+        if (cfg.n_classes * j) % m == 0:
+            return dataclasses.replace(cfg, clauses_per_class=j)

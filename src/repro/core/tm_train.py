@@ -1,0 +1,221 @@
+"""Tsetlin Machine training (Type I / Type II feedback) in pure JAX.
+
+Implements the standard simplified feedback rules used by the reference
+CAIR implementation and by every TM hardware paper (including IMBUE's
+source models):
+
+Per example ``(x, y)`` with literals ``l`` and class sums ``s``:
+
+* target class ``y``      — clause feedback prob ``p = (T - clip(s_y)) / 2T``
+    positive-polarity clauses receive **Type I**, negative **Type II**
+* random other class ``q`` — prob ``p = (T + clip(s_q)) / 2T``
+    positive-polarity clauses receive **Type II**, negative **Type I**
+
+Type I (recognize / boost true positives), applied per TA:
+    clause==1 and literal==1 : state += 1  w.p. (s-1)/s
+    clause==1 and literal==0 : state -= 1  w.p. 1/s
+    clause==0                : state -= 1  w.p. 1/s
+Type II (reject / combat false positives):
+    clause==1 and literal==0 and action==exclude : state += 1   (w.p. 1)
+
+States clip to ``[1, 2N]``.
+
+Two drivers are provided:
+
+``train_step``        exact sequential semantics via ``lax.scan`` over the
+                      batch (each example sees the states left by the
+                      previous one) — the faithful reference.
+``train_step_batch``  batch-parallel: all examples compute feedback against
+                      the same start-of-batch state; integer deltas are
+                      summed then applied.  This is the scalable variant we
+                      shard over (pod, data) x model meshes; convergence
+                      matches the sequential variant on the paper's
+                      datasets (see tests/test_tm_train.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tm import (
+    TMConfig,
+    class_sums,
+    clause_outputs,
+    include_mask,
+    literals,
+    polarity,
+)
+
+
+def _clip_state(state: jax.Array, cfg: TMConfig) -> jax.Array:
+    return jnp.clip(state, 1, 2 * cfg.n_states).astype(cfg.state_dtype)
+
+
+def _bernoulli_u8(key: jax.Array, p: float, shape) -> jax.Array:
+    """Bernoulli(p) from PACKED 8-bit random words.
+
+    The per-TA feedback draws dominate the training step's HBM traffic
+    (2 x [B, C, L] tensors).  ``jax.random.bernoulli`` materializes f32
+    uniforms (and ``bits(uint8)`` still materializes one u32 word per
+    draw); here each threefry u32 word feeds FOUR draws via bitcast, so
+    the random tensor costs 1 byte/draw.  Probability resolution is
+    1/256 — <0.2% bias on the (s-1)/s, 1/s Type-I probabilities, far
+    below TM training noise (EXPERIMENTS.md §Perf iter T1; accuracy
+    parity asserted in tests/test_tm_core.py)."""
+    n = 1
+    for d in shape:
+        n *= d
+    n_words = (n + 3) // 4
+    words = jax.random.bits(key, (n_words,), dtype=jnp.uint32)
+    bytes_ = jax.lax.bitcast_convert_type(words, jnp.uint8).reshape(-1)
+    thresh = jnp.uint8(min(255, round(p * 256.0)))
+    return (bytes_[:n] < thresh).reshape(shape)
+
+
+def _feedback_probs(sums: jax.Array, y: jax.Array, q: jax.Array,
+                    cfg: TMConfig) -> Tuple[jax.Array, jax.Array]:
+    """Per-example feedback probabilities for target class y and sampled
+    negative class q.  ``sums`` is ``[M]`` (single example)."""
+    t = float(cfg.threshold)
+    sy = jnp.clip(sums[y], -t, t)
+    sq = jnp.clip(sums[q], -t, t)
+    return (t - sy) / (2.0 * t), (t + sq) / (2.0 * t)
+
+
+def _ta_delta(
+    key: jax.Array,
+    state: jax.Array,       # [C, L] current TA states
+    lits: jax.Array,        # [L] uint8 literals of this example
+    clauses: jax.Array,     # [C] uint8 clause outputs on this example
+    sums: jax.Array,        # [M] class sums on this example
+    y: jax.Array,           # scalar target class
+    cfg: TMConfig,
+) -> jax.Array:
+    """Integer state delta ``[C, L]`` for one example (Type I + II)."""
+    k_neg, k_sel, k_r1a, k_r1b = jax.random.split(key, 4)
+
+    m, j = cfg.n_classes, cfg.clauses_per_class
+    # Sample a negative class uniformly from the other M-1 classes.
+    q = jax.random.randint(k_neg, (), 0, m - 1)
+    q = jnp.where(q >= y, q + 1, q)
+
+    p_tgt, p_neg = _feedback_probs(sums, y, q, cfg)
+
+    # Which clauses belong to the target / negative class, and polarity.
+    clause_class = jnp.arange(cfg.n_clauses) // j                   # [C]
+    pol = polarity(cfg)                                             # [C]
+    is_tgt = clause_class == y
+    is_neg = clause_class == q
+
+    # Per-clause selection draw (one coin per clause, as in reference impl).
+    u = jax.random.uniform(k_sel, (cfg.n_clauses,))
+    sel_tgt = jnp.logical_and(is_tgt, u < p_tgt)
+    sel_neg = jnp.logical_and(is_neg, u < p_neg)
+
+    # Clause receives Type I if (target & pol+) or (negative & pol-);
+    # Type II if (target & pol-) or (negative & pol+).
+    type1 = jnp.logical_or(jnp.logical_and(sel_tgt, pol > 0),
+                           jnp.logical_and(sel_neg, pol < 0))       # [C]
+    type2 = jnp.logical_or(jnp.logical_and(sel_tgt, pol < 0),
+                           jnp.logical_and(sel_neg, pol > 0))       # [C]
+
+    s = float(cfg.specificity)
+    lit1 = (lits == 1)[None, :]                                     # [1, L]
+    cl1 = (clauses == 1)[:, None]                                   # [C, 1]
+
+    # --- Type I ---------------------------------------------------------
+    r_hi = _bernoulli_u8(k_r1a, (s - 1.0) / s, state.shape)
+    r_lo = _bernoulli_u8(k_r1b, 1.0 / s, state.shape)
+    inc_t1 = jnp.logical_and(jnp.logical_and(cl1, lit1), r_hi)
+    dec_t1 = jnp.logical_and(
+        jnp.logical_or(~cl1, jnp.logical_and(cl1, ~lit1)), r_lo)
+    d1 = inc_t1.astype(jnp.int8) - dec_t1.astype(jnp.int8)
+    d1 = d1 * type1[:, None].astype(jnp.int8)
+
+    # --- Type II --------------------------------------------------------
+    excl = ~include_mask(state, cfg)
+    inc_t2 = jnp.logical_and(jnp.logical_and(cl1, ~lit1), excl)
+    d2 = inc_t2.astype(jnp.int8) * type2[:, None].astype(jnp.int8)
+
+    # int8 deltas: the [B, C, L] delta tensor is the other big traffic
+    # term in the batch-parallel step; values are in {-1, 0, 1}
+    return d1 + d2
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step(
+    ta_state: jax.Array,
+    key: jax.Array,
+    x: jax.Array,           # [B, F] uint8
+    y: jax.Array,           # [B] int
+    cfg: TMConfig,
+) -> jax.Array:
+    """Sequential (exact) TM epoch over one batch via ``lax.scan``."""
+
+    lits_b = literals(x)                                            # [B, L]
+
+    def body(state, inputs):
+        k, lits, yy = inputs
+        cls = clause_outputs(state, lits[None, :], cfg, training=True)[0]
+        sums = class_sums(cls[None, :], cfg)[0]
+        delta = _ta_delta(k, state, lits, cls, sums, yy, cfg)
+        new = _clip_state(state.astype(jnp.int32) + delta, cfg)
+        return new, ()
+
+    keys = jax.random.split(key, x.shape[0])
+    final, _ = jax.lax.scan(body, ta_state, (keys, lits_b, y))
+    return final
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def train_step_batch(
+    ta_state: jax.Array,
+    key: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: TMConfig,
+) -> jax.Array:
+    """Batch-parallel TM update: deltas vs. start-of-batch state, summed.
+
+    This is the variant that distributes: clause dim shards over ``model``,
+    batch over ``(pod, data)``; the delta sum is a psum over batch shards.
+    """
+    b = x.shape[0]
+    lits_b = literals(x)
+    cls = clause_outputs(ta_state, lits_b, cfg, training=True)      # [B, C]
+    sums = class_sums(cls, cfg)                                     # [B, M]
+    keys = jax.random.split(key, b)
+    deltas = jax.vmap(
+        lambda k, l, c, s, yy: _ta_delta(k, ta_state, l, c, s, yy, cfg)
+    )(keys, lits_b, cls, sums, y)                            # [B, C, L] i8
+    total = deltas.astype(jnp.int32).sum(axis=0)
+    return _clip_state(ta_state.astype(jnp.int32) + total, cfg)
+
+
+def fit(
+    ta_state: jax.Array,
+    key: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: TMConfig,
+    *,
+    epochs: int = 10,
+    batch_size: int = 0,
+    parallel: bool = False,
+) -> jax.Array:
+    """Convenience host-loop trainer (shuffles every epoch)."""
+    n = x.shape[0]
+    bs = batch_size or n
+    step = train_step_batch if parallel else train_step
+    for _ in range(epochs):
+        key, kperm, kstep = jax.random.split(key, 3)
+        perm = jax.random.permutation(kperm, n)
+        xs, ys = x[perm], y[perm]
+        for i in range(0, n - bs + 1, bs):
+            kstep, kb = jax.random.split(kstep)
+            ta_state = step(ta_state, kb, xs[i:i + bs], ys[i:i + bs], cfg)
+    return ta_state

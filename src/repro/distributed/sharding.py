@@ -1,0 +1,260 @@
+"""Logical-axis sharding: rules, activation constraints, parameter specs.
+
+Models never mention mesh axes.  They call ``constrain(x, *logical_axes)``
+with *logical* names ("batch", "seq", "heads", "embed", ...); the launcher
+activates a ``ShardingRules`` mapping logical -> mesh axes for the current
+mesh.  With no active rules every call is a no-op, so all model code runs
+unmodified on a single CPU device (smoke tests) and fully sharded under
+pjit (dry-run / production).
+
+Parameter specs are name-based: ``param_pspec(path)`` maps pytree leaf
+paths (the layer-module names of models/*.py) to PartitionSpecs —
+Megatron-style TP on the `model` axis + FSDP on the `data` axis for the
+remaining large dim.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import re
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis (or None = replicated)."""
+
+    batch: Optional[Tuple[str, ...] | str] = ("pod", "data")
+    seq: Optional[str] = None           # sequence parallelism when "model"
+    embed: Optional[str] = None         # activation d_model axis
+    heads: Optional[str] = "model"      # attention heads / q projections
+    kv_seq: Optional[str] = "model"     # KV-cache sequence axis (decode)
+    expert: Optional[str] = "model"     # MoE expert axis
+    vocab: Optional[str] = "model"      # logits vocab axis
+    mlp: Optional[str] = "model"        # ffn hidden axis
+    fsdp: Optional[str] = "data"        # parameter fsdp axis
+    tensor: Optional[str] = "model"     # parameter TP axis
+
+    def resolve(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return getattr(self, logical)
+
+
+_ACTIVE: contextvars.ContextVar[Optional["ActiveSharding"]] = \
+    contextvars.ContextVar("active_sharding", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ActiveSharding:
+    mesh: Mesh
+    rules: ShardingRules
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: ShardingRules):
+    tok = _ACTIVE.set(ActiveSharding(mesh, rules))
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+
+
+def active() -> Optional[ActiveSharding]:
+    return _ACTIVE.get()
+
+
+def constrain(x: jax.Array, *logical_axes) -> jax.Array:
+    """Apply with_sharding_constraint if rules are active, else no-op."""
+    act = _ACTIVE.get()
+    if act is None:
+        return x
+    spec = P(*(act.rules.resolve(a) for a in logical_axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(act.mesh, spec))
+
+
+# ------------------------------------------------------- parameter specs
+
+# (regex on the dot-joined path, spec builder).  `L` marks the stacked
+# scan dimension which is handled by rank offset: rules below give the
+# spec for the *unstacked* param; _with_stack prepends None for each extra
+# leading dim.
+_PARAM_RULES = [
+    # embeddings / head
+    (r"embed$",            lambda r: P(r.tensor, r.fsdp)),
+    (r"unembed$",          lambda r: P(r.fsdp, r.tensor)),
+    (r"w_vision$",         lambda r: P(None, r.fsdp)),
+    # attention (q/k/v: [D, H, dh]; o: [H, dh, D])
+    (r"w_q$",              lambda r: P(r.fsdp, r.tensor, None)),
+    (r"w_k$",              lambda r: P(r.fsdp, r.tensor, None)),
+    (r"w_v$",              lambda r: P(r.fsdp, r.tensor, None)),
+    (r"w_o$",              lambda r: P(r.tensor, None, r.fsdp)),
+    (r"b_[qkv]$",          lambda r: P(r.tensor, None)),
+    # MLA
+    (r"w_dkv$",            lambda r: P(r.fsdp, None)),
+    (r"w_kpe$",            lambda r: P(r.fsdp, None)),
+    (r"w_uk$",             lambda r: P(None, r.tensor, None)),
+    (r"w_uv$",             lambda r: P(None, r.tensor, None)),
+    (r"kv_norm$",          lambda r: P(None)),
+    # dense MLP
+    (r"w_up$",             lambda r: P(r.fsdp, r.tensor)),
+    (r"w_gate$",           lambda r: P(r.fsdp, r.tensor)),
+    (r"w_down$",           lambda r: P(r.tensor, r.fsdp)),
+    # MoE
+    (r"router$",           lambda r: P(r.fsdp, None)),
+    (r"experts_up$",       lambda r: P(r.expert, r.fsdp, None)),
+    (r"experts_gate$",     lambda r: P(r.expert, r.fsdp, None)),
+    (r"experts_down$",     lambda r: P(r.expert, None, r.fsdp)),
+    # mamba2 (split projections: z/x shard on d_inner, B/C/dt replicated)
+    (r"w_[zx]$",           lambda r: P(r.fsdp, r.tensor)),
+    (r"w_bc$",             lambda r: P(r.fsdp, None)),
+    (r"w_dt$",             lambda r: P(r.fsdp, None)),
+    (r"w_out$",            lambda r: P(r.tensor, r.fsdp)),
+    (r"conv_x_w$",         lambda r: P(None, r.tensor)),
+    (r"conv_x_b$",         lambda r: P(r.tensor)),
+    (r"conv_bc_[wb]$",     lambda r: P(None)),
+    # xlstm (mLSTM projections shard on d_inner; sLSTM R is tiny)
+    (r"w_m[qkv]$",         lambda r: P(r.fsdp, r.tensor)),
+    (r"w_gates$",          lambda r: P(r.fsdp, None)),
+    (r"r_gates$",          lambda r: P(None, None, None)),
+    (r"w_ogate$",          lambda r: P(r.fsdp, r.tensor)),
+    (r"gate_bias$",        lambda r: P(None)),
+    # norms / scalars: replicated
+    (r"(scale|bias|a_log|d_skip|dt_bias|norm_scale|f_bias)$",
+     lambda r: P(None)),
+]
+
+
+def _mesh_axis_size(mesh: Optional[Mesh], ax) -> int:
+    if ax is None or mesh is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def param_pspec(path: str, shape: tuple, rules: ShardingRules,
+                mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a parameter pytree leaf.
+
+    ``path`` is the dot-joined key path; extra leading dims (layer-stacking
+    from scan) are padded with None.  Axes that do not divide their dim on
+    ``mesh`` are dropped (e.g. 2 KV heads can't split 16-way -> that dim
+    stays replicated)."""
+    ndim = len(shape)
+    # Adafactor factored-state leaves derive from their parameter's rule:
+    # .row drops the last axis, .col drops the second-to-last, .full
+    # keeps the parameter spec.
+    suffix = None
+    for sfx in (".row", ".col", ".full"):
+        if path.endswith(sfx):
+            suffix = sfx[1:]
+            path = path[: -len(sfx)]
+            break
+    for pat, fn in _PARAM_RULES:
+        if re.search(pat, path):
+            spec = tuple(fn(rules))
+            if suffix == "row" and len(spec) >= 1:
+                spec = spec[:-1]
+            elif suffix == "col" and len(spec) >= 2:
+                spec = spec[:-2] + spec[-1:]
+            pad = ndim - len(spec)
+            if pad < 0:
+                axes = list(spec[-ndim:] if ndim else ())
+            else:
+                axes = [None] * pad + list(spec)
+            axes = [ax if dim % _mesh_axis_size(mesh, ax) == 0 else None
+                    for dim, ax in zip(shape, axes)]
+            return P(*axes)
+    return P()   # default: replicated
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def tree_pspecs(tree, rules: ShardingRules, mesh: Optional[Mesh] = None):
+    """PartitionSpec pytree matching ``tree`` (arrays or ShapeDtypeStructs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(_path_str(path), leaf.shape,
+                                       rules, mesh),
+        tree)
+
+
+def tree_shardings(tree, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_pspecs(tree, rules, mesh))
+
+
+def batch_pspec(rules: ShardingRules) -> P:
+    return P(rules.batch)
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_pspec(shape: tuple, mesh: Mesh, rules: ShardingRules,
+                batch_size: int, seq_len: int) -> P:
+    """Decode-cache leaf spec: shard the batch-sized axis on the batch
+    axes and the context-length axis on ``kv_seq`` (sequence-parallel
+    flash-decoding); everything else replicated.  Purely size-driven so
+    it covers KV caches, MLA latents, SSM states and conv windows alike."""
+    axes = [None] * len(shape)
+    used_batch = used_seq = False
+    for i, dim in enumerate(shape):
+        if (not used_batch and rules.batch and batch_size > 1
+                and dim == batch_size
+                and dim % _axis_size(mesh, rules.batch) == 0):
+            axes[i] = rules.batch
+            used_batch = True
+        elif (not used_seq and rules.kv_seq and dim == seq_len
+                and dim % _axis_size(mesh, rules.kv_seq) == 0):
+            axes[i] = rules.kv_seq
+            used_seq = True
+    return P(*axes)
+
+
+def cache_shardings(tree, mesh: Mesh, rules: ShardingRules,
+                    batch_size: int, seq_len: int):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(
+            mesh, cache_pspec(leaf.shape, mesh, rules, batch_size,
+                              seq_len)), tree)
+
+
+def validate_divisibility(tree, mesh: Mesh, rules: ShardingRules) -> list:
+    """Return a list of (path, shape, spec) where the mesh-unaware spec
+    does not divide the shape (i.e. where the mesh-aware fixup dropped an
+    axis) — used by tests and the dry-run preflight."""
+    bad = []
+
+    def check(path, leaf):
+        spec = param_pspec(_path_str(path), leaf.shape, rules)
+        fixed = param_pspec(_path_str(path), leaf.shape, rules, mesh)
+        if tuple(spec) != tuple(fixed):
+            bad.append((_path_str(path), leaf.shape, spec))
+    jax.tree_util.tree_map_with_path(check, tree)
+    return bad

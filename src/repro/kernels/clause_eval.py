@@ -1,0 +1,113 @@
+"""Pallas TPU kernels for digital TM clause evaluation + fused inference.
+
+The crossbar insight, MXU-shaped (DESIGN.md §2): clause evaluation is a
+binary matmul ``viol[b, c] = sum_i lit0[b, i] * include[c, i]`` followed by
+a threshold (``viol == 0``), and class sums are a second (tiny) matmul
+against a signed polarity one-hot.  Fusing threshold + polarity matmul into
+the violation matmul keeps clause bits in VMEM — they never touch HBM.
+
+Two kernels:
+
+``clause_eval_kernel``  grid (B/bt, C/ct, L/kt); f32 violation accumulator
+                        in VMEM scratch; emits 0/1 clause block on the last
+                        K step.
+``tm_infer_kernel``     same, plus on the last K step accumulates
+                        ``clauses @ pol`` into the [bt, M] output block
+                        (revisited across the C grid dimension).
+
+Blocks are MXU-aligned (128 multiples); all accumulation is f32.  Inputs
+arrive pre-transposed (``include_t [L, C]``) so the violation matmul is a
+plain ``[bt, kt] @ [kt, ct]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def clause_eval_kernel(lit0_ref, inc_t_ref, out_ref, acc_ref):
+    """One (b, c, k) grid step of the violation matmul + threshold."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(lit0_ref[...], inc_t_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        out_ref[...] = (acc_ref[...] == 0.0).astype(out_ref.dtype)
+
+
+def tm_infer_kernel(lit0_ref, inc_t_ref, pol_ref, out_ref, acc_ref):
+    """Fused: violation matmul -> threshold -> polarity matmul."""
+    c = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(lit0_ref[...], inc_t_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(k == nk - 1, c == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        clauses = (acc_ref[...] == 0.0).astype(jnp.float32)
+        out_ref[...] += jnp.dot(clauses, pol_ref[...],
+                                preferred_element_type=jnp.float32)
+
+
+def clause_eval_call(lit0, inc_t, *, bt, ct, kt, interpret):
+    """``[B, L] x [L, C] -> [B, C]`` clause outputs (padded shapes)."""
+    b, l = lit0.shape
+    c = inc_t.shape[1]
+    grid = (b // bt, c // ct, l // kt)
+    return pl.pallas_call(
+        clause_eval_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, kt), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, ct), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(lit0, inc_t)
+
+
+def tm_infer_call(lit0, inc_t, pol, *, bt, ct, kt, interpret):
+    """``[B, L] x [L, C] x [C, M] -> [B, M]`` fused class sums (padded)."""
+    b, l = lit0.shape
+    c = inc_t.shape[1]
+    m = pol.shape[1]
+    grid = (b // bt, c // ct, l // kt)
+    return pl.pallas_call(
+        tm_infer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, kt), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),
+            pl.BlockSpec((ct, m), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, m), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(lit0, inc_t, pol)

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel for the IMBUE *analog* inference pipeline.
+
+Faithful current-domain semantics (DESIGN.md §2): per 32-cell column KCL
+current -> CSA threshold -> AND across a clause's columns -> polarity
+matmul.  Unlike the digital kernel, the threshold is applied per column
+(the analog architecture cannot see the total violation count, only each
+CSA's local comparison), so the K dimension is processed in whole columns.
+
+Per (b, c, k) grid step the block covers ``kt`` literals = ``kt/width``
+columns; each column contributes two narrow dots (on-path voltage x
+conductance, leak mask x leak current).  A running AND (product of 0/1
+partials) lives in VMEM scratch; the last K step folds the finished clause
+block into the [bt, M] class-sum output.
+
+The narrow (width=32) contraction underutilizes the 128-wide MXU by design
+— it emulates the paper's partial-clause sensing exactly.  The digital
+kernel in ``clause_eval.py`` is the full-width variant; the §Perf log
+quantifies the gap.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def imbue_infer_kernel(i_ref_ref, v_drive_ref, lit1_ref, g_t_ref, leak_t_ref,
+                       pol_ref, out_ref, and_ref, *, width, cols_per_block):
+    c = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        and_ref[...] = jnp.ones_like(and_ref)
+
+    i_ref = i_ref_ref[0]      # reference current = v_ref / r_divider
+    for w in range(cols_per_block):
+        sl = pl.dslice(w * width, width)
+        i_on = jnp.dot(v_drive_ref[:, sl], g_t_ref[sl, :],
+                       preferred_element_type=jnp.float32)
+        i_leak = jnp.dot(lit1_ref[:, sl], leak_t_ref[sl, :],
+                         preferred_element_type=jnp.float32)
+        partial_cl = (i_on + i_leak) < i_ref
+        and_ref[...] *= partial_cl.astype(jnp.float32)
+
+    @pl.when(jnp.logical_and(k == nk - 1, c == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        out_ref[...] += jnp.dot(and_ref[...], pol_ref[...],
+                                preferred_element_type=jnp.float32)
+
+
+def imbue_infer_call(v_drive, lit1, g_t, leak_t, pol, v_ref, *,
+                     width, r_div, bt, ct, kt, interpret):
+    """``[B, L] -> [B, M]`` analog class sums (padded shapes).
+
+    ``g_t``/``leak_t`` are ``[L, C]`` (pre-transposed); ``kt`` must be a
+    multiple of ``width``.
+    """
+    if kt % width:
+        raise ValueError(f"kt={kt} must be a multiple of width={width}")
+    b, l = v_drive.shape
+    c = g_t.shape[1]
+    m = pol.shape[1]
+    grid = (b // bt, c // ct, l // kt)
+    kern = partial(imbue_infer_kernel, width=width,
+                   cols_per_block=kt // width)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # v_ref scalar
+            pl.BlockSpec((bt, kt), lambda i, j, k: (i, k)),   # v_drive
+            pl.BlockSpec((bt, kt), lambda i, j, k: (i, k)),   # lit1
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),   # g_t
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),   # leak_t
+            pl.BlockSpec((ct, m), lambda i, j, k: (j, 0)),    # pol
+        ],
+        out_specs=pl.BlockSpec((bt, m), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray([v_ref / r_div], dtype=jnp.float32), v_drive, lit1, g_t,
+      leak_t, pol)

@@ -1,0 +1,136 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to MXU-aligned tiles, dtype conversion, polarity-matrix
+construction, and falling back to ``interpret=True`` off-TPU (this
+container is CPU-only; interpret mode executes the kernel bodies exactly).
+
+Public API:
+  ``clause_eval(lits, include)``                    -> [B, C] clause bits
+  ``tm_class_sums(lits, include, cfg)``             -> [B, M] digital, fused
+  ``imbue_class_sums(lits, xbar, cfg)``             -> [B, M] analog, fused
+  ``polarity_matrix(cfg, include)``                 -> [C, M] signed one-hot
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tm import TMConfig
+from repro.kernels import clause_eval as _ce
+from repro.kernels import imbue_infer as _ai
+
+# Default MXU-aligned tile sizes (see §Perf for the sweep).
+BT, CT, KT = 128, 128, 512
+KT_ANALOG = 256          # multiple of the 32-cell column width
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+def polarity_matrix(cfg: TMConfig, include: jax.Array | None = None,
+                    n_class_pad: int = 128) -> jax.Array:
+    """Signed one-hot ``[C, M_pad]``: P[c, m] = polarity(c) * [class(c)==m].
+
+    Rows of empty clauses (no includes) are zeroed — the digital tail's
+    inference-time empty-clause mask, folded into the matmul.
+    """
+    from repro.core.tm import polarity
+    c = cfg.n_clauses
+    cls_of = jnp.arange(c) // cfg.clauses_per_class
+    onehot = jax.nn.one_hot(cls_of, max(n_class_pad, cfg.n_classes),
+                            dtype=jnp.float32)
+    p = onehot * polarity(cfg)[:, None].astype(jnp.float32)
+    if include is not None:
+        p = p * include.any(axis=-1)[:, None].astype(jnp.float32)
+    return p
+
+
+@partial(jax.jit, static_argnames=("bt", "ct", "kt", "interpret"))
+def clause_eval(lits: jax.Array, include: jax.Array, *,
+                bt: int = BT, ct: int = CT, kt: int = KT,
+                interpret: bool | None = None) -> jax.Array:
+    """Digital clause outputs ``[B, C]`` (training semantics: empty
+    clauses fire).  ``lits`` [B, L] and ``include`` [C, L] are 0/1."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, c = lits.shape[0], include.shape[0]
+    lit0 = _pad_to(_pad_to((1 - lits).astype(jnp.float32), 0, bt), 1, kt)
+    inc_t = _pad_to(_pad_to(include.astype(jnp.float32), 0, ct),
+                    1, kt).T
+    out = _ce.clause_eval_call(lit0, inc_t, bt=bt, ct=ct, kt=kt,
+                               interpret=interp)
+    return out[:b, :c]
+
+
+@partial(jax.jit, static_argnames=("cfg", "bt", "ct", "kt", "interpret"))
+def tm_class_sums(lits: jax.Array, include: jax.Array, cfg: TMConfig, *,
+                  bt: int = BT, ct: int = CT, kt: int = KT,
+                  interpret: bool | None = None) -> jax.Array:
+    """Fused digital inference: literals -> class sums ``[B, M]``."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b = lits.shape[0]
+    lit0 = _pad_to(_pad_to((1 - lits).astype(jnp.float32), 0, bt), 1, kt)
+    inc_t = _pad_to(_pad_to(include.astype(jnp.float32), 0, ct), 1, kt).T
+    pol = _pad_to(polarity_matrix(cfg, include), 0, ct)
+    out = _ai_out = _ce.tm_infer_call(lit0, inc_t, pol, bt=bt, ct=ct, kt=kt,
+                                      interpret=interp)
+    del _ai_out
+    return out[:b, :cfg.n_classes]
+
+
+@partial(jax.jit, static_argnames=("cfg", "width", "bt", "ct", "kt",
+                                   "interpret"))
+def imbue_class_sums_raw(
+    lits: jax.Array,          # [B, L] uint8
+    g_on: jax.Array,          # [C, L] on-path conductance (S)
+    i_leak: jax.Array,        # [C, L] leak currents (A)
+    include: jax.Array,       # [C, L] bool (for the empty-clause mask)
+    v_read: float,
+    r_div: float,
+    v_ref: float,
+    cfg: TMConfig,
+    *,
+    width: int = 32,
+    bt: int = BT, ct: int = CT, kt: int = KT_ANALOG,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused analog inference on explicit conductances -> ``[B, M]``."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b = lits.shape[0]
+    lits_f = lits.astype(jnp.float32)
+    v_drive = _pad_to(_pad_to((1.0 - lits_f) * v_read, 0, bt), 1, kt)
+    lit1 = _pad_to(_pad_to(lits_f, 0, bt), 1, kt)
+    g_t = _pad_to(_pad_to(g_on.astype(jnp.float32), 0, ct), 1, kt).T
+    leak_t = _pad_to(_pad_to(i_leak.astype(jnp.float32), 0, ct), 1, kt).T
+    pol = _pad_to(polarity_matrix(cfg, include), 0, ct)
+    out = _ai.imbue_infer_call(v_drive, lit1, g_t, leak_t, pol, v_ref,
+                               width=width, r_div=r_div, bt=bt, ct=ct,
+                               kt=kt, interpret=interp)
+    return out[:b, :cfg.n_classes]
+
+
+def imbue_class_sums(lits: jax.Array, xbar, cfg: TMConfig, *,
+                     key: jax.Array | None = None, vcfg=None,
+                     **tiles) -> jax.Array:
+    """Fused analog inference from a ``ProgrammedCrossbar``."""
+    from repro.core.imbue import cell_conductances
+    from repro.core.variations import VariationConfig
+    vcfg = vcfg or VariationConfig.nominal()
+    g_on, i_leak = cell_conductances(xbar, key, vcfg)
+    return imbue_class_sums_raw(
+        lits, g_on, i_leak, xbar.include,
+        xbar.cfg.v_read, xbar.cfg.r_divider, xbar.cfg.reference_voltage(),
+        cfg, width=xbar.cfg.width, **tiles)

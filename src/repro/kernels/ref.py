@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Each function is the mathematical specification the kernels are tested
+against (tests/test_kernels.py sweeps shapes and dtypes and asserts
+allclose).  No tiling, no padding tricks — just the definition.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def clause_eval_ref(lit0: jnp.ndarray, include: jnp.ndarray) -> jnp.ndarray:
+    """Digital clause evaluation.
+
+    lit0    [B, L] in {0,1}: complemented literals (1 = literal is 0).
+    include [C, L] in {0,1}: TA include actions.
+    Returns [B, C] float32 in {0,1}: 1 iff no included literal is 0.
+    """
+    viol = lit0.astype(jnp.float32) @ include.astype(jnp.float32).T
+    return (viol == 0).astype(jnp.float32)
+
+
+def imbue_column_currents_ref(
+    v_drive: jnp.ndarray,     # [B, L] literal drive voltages (V; lit0*0.2)
+    lit1: jnp.ndarray,        # [B, L] in {0,1}: literal-is-1 mask
+    g_on: jnp.ndarray,        # [C, L] on-path conductance (S)
+    i_leak: jnp.ndarray,      # [C, L] leak current at literal '1' (A)
+    width: int,
+) -> jnp.ndarray:
+    """Per-column KCL currents [B, C, K] with K = L/width columns."""
+    b, l = v_drive.shape
+    c = g_on.shape[0]
+    k = l // width
+    vf = v_drive.reshape(b, k, width)
+    l1 = lit1.astype(jnp.float32).reshape(b, k, width)
+    gf = g_on.reshape(c, k, width)
+    lf = i_leak.reshape(c, k, width)
+    on = jnp.einsum("bkw,ckw->bck", vf, gf)
+    leak = jnp.einsum("bkw,ckw->bck", l1, lf)
+    return on + leak
+
+
+def imbue_clauses_ref(v_drive, lit1, g_on, i_leak, width, r_div, v_ref):
+    """Analog clause outputs [B, C]: CSA per column, AND across columns."""
+    i_col = imbue_column_currents_ref(v_drive, lit1, g_on, i_leak, width)
+    partial = (i_col * r_div < v_ref)
+    return partial.all(axis=-1).astype(jnp.float32)
+
+
+def class_sums_ref(clauses: jnp.ndarray, pol_matrix: jnp.ndarray):
+    """Polarity-weighted class sums: [B, C] x [C, M] -> [B, M]."""
+    return clauses.astype(jnp.float32) @ pol_matrix.astype(jnp.float32)
+
+
+def imbue_infer_ref(v_drive, lit1, g_on, i_leak, pol_matrix,
+                    width, r_div, v_ref):
+    """Fused analog inference: literals -> class sums [B, M]."""
+    cls = imbue_clauses_ref(v_drive, lit1, g_on, i_leak, width, r_div, v_ref)
+    return class_sums_ref(cls, pol_matrix)
+
+
+def tm_infer_ref(lit0: jnp.ndarray, include: jnp.ndarray,
+                 pol_matrix: jnp.ndarray) -> jnp.ndarray:
+    """Fused digital inference: literals -> class sums [B, M]."""
+    return class_sums_ref(clause_eval_ref(lit0, include), pol_matrix)

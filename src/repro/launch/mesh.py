@@ -1,0 +1,83 @@
+"""Production meshes + per-(arch, mesh, workload) sharding rules.
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state (the dry-run must set XLA_FLAGS first).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingRules
+from repro.models.config import ModelConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Single pod: 16x16 = 256 chips (data, model).  Multi-pod: 2 pods of
+    256 = 512 chips (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2) -> Mesh:
+    """Small mesh for multi-device CPU tests (8 forced host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_pipeline_mesh(stages: int = 4) -> Mesh:
+    """Pipeline-parallel demo mesh (see distributed/pipeline.py)."""
+    return jax.make_mesh((stages,), ("pipe",))
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, *,
+              global_batch: Optional[int] = None,
+              pure_dp: bool = False) -> ShardingRules:
+    """Sharding rules adapted to arch + mesh + workload.
+
+    - batch shards over (pod, data) — dropped entirely if the global batch
+      doesn't divide (long_500k has batch 1: sequence sharding only);
+    - tensor/expert axes stay on "model";
+    - sequence parallelism is always declared; constraint sites apply it
+      to boundary activations when cfg.seq_parallel;
+    - ``pure_dp``: sub-1B archs waste the model axis on tensor
+      parallelism (2 activation all-reduces per layer for matmuls that
+      fit one chip) — instead fold "model" into the batch axes and keep
+      parameters FSDP over (pod, data) (§Perf iter X1).
+    """
+    if pure_dp and "model" in mesh.shape:
+        b_axes = tuple(a for a in ("data", "model") if a in mesh.shape)
+        n = 1
+        for a in b_axes:
+            n *= mesh.shape[a]
+        if global_batch is None or global_batch % n == 0:
+            return ShardingRules(
+                batch=b_axes, seq=None, embed=None, heads=None,
+                kv_seq=None, expert=None, vocab=None, mlp=None,
+                fsdp="data", tensor=None)
+    b_axes = batch_axes(mesh)
+    if global_batch is not None:
+        n = 1
+        for a in b_axes:
+            n *= mesh.shape[a]
+        if global_batch % n:
+            b_axes = ()
+    return ShardingRules(
+        batch=b_axes if b_axes else None,
+        seq="model" if cfg.seq_parallel else None,
+        embed=None,
+        heads="model",
+        kv_seq="model",
+        expert="model",
+        vocab="model",
+        mlp="model",
+        fsdp="data" if "data" in mesh.shape else None,
+        tensor="model" if "model" in mesh.shape else None,
+    )

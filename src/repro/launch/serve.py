@@ -1,0 +1,106 @@
+"""IMBUE inference serving driver: batched requests through the fused
+analog pipeline.
+
+The paper's deployment model is inference serving: a trained TM is
+programmed once into the crossbar, then datapoints stream through the
+Boolean-to-Current path.  This driver simulates that service:
+
+  * trains (or restores) a TM, programs a crossbar with D2D draws;
+  * a request generator produces Poisson-ish batches;
+  * each batch runs through the fused IMBUE kernel (Pallas, interpret
+    on CPU) under fresh C2C + CSA noise per cycle;
+  * reports latency percentiles, throughput, and the paper's energy
+    metrics per request.
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import energy, imbue, tm, tm_train
+from repro.core.mapping import csa_count_packed
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.data.tm_datasets import synthetic_image_dataset
+from repro.kernels import ops
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--analog", action="store_true", default=True)
+    args = ap.parse_args(argv)
+
+    cfg = TMConfig(n_classes=10, clauses_per_class=20, n_features=784,
+                   n_states=127, threshold=15, specificity=5.0)
+    xtr, ytr, xte, yte = synthetic_image_dataset(
+        jax.random.PRNGKey(0), n_train=2000, n_test=2048)
+    print(f"[serve] training TM ({cfg.n_ta} TA cells)...")
+    ta = tm.init_ta_state(jax.random.PRNGKey(1), cfg)
+    ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                      epochs=args.epochs, batch_size=200, parallel=True)
+    stats = tm.include_stats(ta, cfg)
+    print(f"[serve] accuracy {float(tm.accuracy(ta, xte, yte, cfg)):.3f},"
+          f" includes {stats['include_pct']:.2f}%")
+
+    vcfg = VariationConfig()
+    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
+                                  jax.random.PRNGKey(3), vcfg)
+    print(f"[serve] crossbar programmed (one-time "
+          f"{energy.programming_energy(stats['includes'], cfg.n_ta)*1e9:.1f}"
+          f" nJ)")
+
+    # energy model per datapoint (the analog service's figure of merit)
+    csas = csa_count_packed(cfg.n_ta)
+    e_dp = energy.imbue_energy_per_datapoint(stats["includes"], cfg.n_ta,
+                                             csas).total_j
+    lat_hw = energy.inference_latency_s(csas)
+
+    @jax.jit
+    def serve_batch(lits, key):
+        from repro.core.imbue import cell_conductances
+        g_on, i_leak = cell_conductances(xbar, key, vcfg)
+        return ops.imbue_class_sums_raw(
+            lits, g_on, i_leak, xbar.include, xbar.cfg.v_read,
+            xbar.cfg.r_divider, xbar.cfg.reference_voltage(), cfg)
+
+    key = jax.random.PRNGKey(4)
+    lats, correct, total = [], 0, 0
+    rng = np.random.default_rng(0)
+    warm = tm.literals(xte[:args.batch])
+    serve_batch(warm, key).block_until_ready()       # compile once
+    t_start = time.time()
+    for r in range(args.requests):
+        idx = rng.integers(0, xte.shape[0], size=args.batch)
+        lits = tm.literals(xte[idx])
+        key, kc = jax.random.split(key)
+        t0 = time.time()
+        sums = serve_batch(lits, kc)
+        sums.block_until_ready()
+        lats.append(time.time() - t0)
+        pred = np.asarray(sums).argmax(-1)
+        correct += int((pred == np.asarray(yte)[idx].astype(int)).sum())
+        total += args.batch
+    wall = time.time() - t_start
+    lats_ms = np.sort(np.array(lats)) * 1e3
+    print(f"[serve] {args.requests} requests x {args.batch}: "
+          f"acc {correct / total:.3f}")
+    print(f"[serve] sim latency p50/p95/p99: {lats_ms[len(lats_ms)//2]:.1f}"
+          f"/{lats_ms[int(len(lats_ms)*0.95)]:.1f}"
+          f"/{lats_ms[-1]:.1f} ms; {total / wall:.0f} inf/s (CPU interp)")
+    print(f"[serve] crossbar figures: {lat_hw*1e9:.0f} ns/datapoint, "
+          f"{e_dp*1e9:.3f} nJ/datapoint, "
+          f"{energy.top_j_inv(cfg.n_ta, e_dp):.0f} TopJ^-1")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Assigned input shapes, per-cell configs and abstract input specs.
+
+Each LM arch pairs with the four assigned shapes.  ``long_500k`` requires
+sub-quadratic attention; pure full-attention archs are skipped per the
+brief (DESIGN.md §5) — ``applicable()`` encodes that rule.  The paper's
+own TM workload is exposed as extra ``imbue-tm`` cells (tm_train /
+tm_infer) so it runs through the same dry-run machinery.
+
+``input_specs`` returns ShapeDtypeStructs only — nothing allocates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    s.name: s for s in [
+        ShapeSpec("train_4k", "train", 4096, 256),
+        ShapeSpec("prefill_32k", "prefill", 32768, 32),
+        ShapeSpec("decode_32k", "decode", 32768, 128),
+        ShapeSpec("long_500k", "decode", 524288, 1),
+    ]
+}
+
+LM_ARCHS = ["xlstm-125m", "qwen2-0.5b", "gemma2-2b", "starcoder2-15b",
+            "stablelm-1.6b", "arctic-480b", "deepseek-v2-lite-16b",
+            "internvl2-76b", "whisper-large-v3", "zamba2-1.2b"]
+
+
+def applicable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the brief's shape rules."""
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k context needs "
+                       "sub-quadratic attention (skip per brief)")
+    return True, ""
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells."""
+    out = []
+    for a in LM_ARCHS:
+        for s in SHAPES:
+            ok, why = applicable(a, s)
+            if ok or include_skipped:
+                out.append((a, s, ok, why))
+    return out
+
+
+# Per-arch execution overrides for the big shapes (memory fitting /
+# §Perf optimizations — these do not change the architecture, only the
+# execution strategy).  blocked_attn_threshold=4096 switches train_4k to
+# the online-softmax blocked attention: the unfused-softmax f32 score
+# round-trips dominated the baseline memory term (§Perf iter M1).
+# blocked attention at 4k is kept ONLY where the unchunked f32 score
+# temps threaten the 16 GB HBM fit (3+ local heads x [B,4096,4096]);
+# for the small archs the fusion-boundary analysis showed the chunked
+# scan costs MORE HBM round-trips than plain sdpa unless the whole
+# online-softmax pipeline lives in one kernel (§Perf iter M1 — the
+# flash Pallas kernel is the real fix, see kernels/flash_attention.py).
+_BLOCKED = dict(blocked_attn_threshold=4096)
+_EXEC_OVERRIDES = {
+    "gemma2-2b": dict(loss_chunk=1024),
+    "starcoder2-15b": dict(seq_parallel=True, **_BLOCKED),
+    "internvl2-76b": dict(seq_parallel=True, **_BLOCKED),
+    "arctic-480b": dict(seq_parallel=True, **_BLOCKED),
+}
+
+# gradient-accumulation microbatches for train_4k (bounds live activation
+# temps: the MoE dispatch buffers at 480B scale are ~10 GB per microstep)
+TRAIN_MICROBATCHES = {
+    "arctic-480b": 4,
+    "internvl2-76b": 2,
+}
+
+
+def cell_config(arch: str, shape: str) -> ModelConfig:
+    cfg = get_config(arch)
+    over = dict(_EXEC_OVERRIDES.get(arch, {}))
+    spec = SHAPES[shape]
+    if spec.kind == "prefill":
+        # blocked attention kicks in via blocked_attn_threshold (8192)
+        pass
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    """Abstract (ShapeDtypeStruct) inputs for the cell's step function."""
+    spec = SHAPES[shape]
+    b, s = spec.global_batch, spec.seq
+    if spec.kind in ("train", "prefill"):
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.vision_tokens:
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.vision_dim), jnp.float32)
+        if cfg.is_encoder_decoder:
+            out["audio_frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: tf.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_decode_state(cfg: ModelConfig, shape: str,
+                          dtype=jnp.bfloat16):
+    spec = SHAPES[shape]
+    return jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, spec.global_batch, spec.seq,
+                                     dtype))
+
+
+# sub-1B archs whose train cells use pure data parallelism (the model
+# axis folds into the batch): TP buys nothing at this scale and costs
+# 2 activation all-reduces per layer (§Perf iter X1).
+PURE_DP_ARCHS: set = set()   # see §Perf iter X1 (refuted for xlstm)

@@ -1,0 +1,398 @@
+"""Attention mixers: GQA (+RoPE, softcap, local windows, blocked long-seq
+form), DeepSeek-V2 MLA (with absorbed decode), and KV-cache decode steps.
+
+Layouts:  q ``[B, S, Hp, Dh]`` where ``Hp`` is the *padded* head count
+(``cfg.n_heads_padded`` — heads are padded with zero-weight dummies so the
+head axis divides the tensor-parallel mesh axis; dummy outputs are masked,
+so semantics match the unpadded model exactly).  K/V are projected at the
+true ``Hkv`` and gather-expanded to ``Hp`` (GQA grouping for any
+``Hp/Hkv`` ratio).  All matmuls run in the config compute dtype with f32
+softmax.  Caches are dicts (pytree-friendly) storing *unexpanded* KV.
+
+Decode is sequence-parallel by construction: the KV cache shards on its
+length axis; softmax/attention contractions over the sharded axis become
+small cross-shard reductions (flash-decoding).  Train/prefill are
+head-parallel.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of, fan_in_init, softcap
+
+NEG_INF = -1e30
+
+
+def padded_heads(cfg: ModelConfig) -> int:
+    return cfg.head_pad_to or cfg.n_heads
+
+
+def _head_mask(cfg: ModelConfig, dtype):
+    hp = padded_heads(cfg)
+    if hp == cfg.n_heads:
+        return None
+    return (jnp.arange(hp) < cfg.n_heads).astype(dtype)
+
+
+def _kv_map(cfg: ModelConfig) -> jax.Array:
+    """For each (padded) q head, the kv head it attends with."""
+    hp, h, kv = padded_heads(cfg), cfg.n_heads, cfg.n_kv_heads
+    g = max(h // kv, 1)
+    return jnp.clip(jnp.arange(hp) // g, 0, kv - 1)
+
+
+# ------------------------------------------------------------------ RoPE
+
+def rope(x: jax.Array, positions: jax.Array, theta: float,
+         fraction: float = 1.0) -> jax.Array:
+    """Rotary embedding on the leading ``fraction`` of the head dim.
+
+    x [B, S, H, D]; positions [B, S] (absolute token positions).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # [B, S, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1 = xr[..., :half].astype(jnp.float32)
+    x2 = xr[..., half:].astype(jnp.float32)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin,
+                               x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+# ------------------------------------------------------- core attention
+
+def _sdpa(q, k, v, *, scale, causal, q_pos, k_pos, window=0, cap=0.0,
+          k_valid: Optional[jax.Array] = None):
+    """Per-head scaled-dot-product attention with f32 softmax.
+
+    q [B,S,H,D], k/v [B,T,H,D] (already head-expanded); q_pos [B,S],
+    k_pos [B,T] absolute positions for causal/window masks; k_valid [B,T]
+    optional cache-slot validity (decode).
+    """
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = softcap(scores * scale, cap)
+    mask = jnp.ones((q.shape[0], q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask = q_pos[:, :, None] >= k_pos[:, None, :]
+    if window:
+        mask = jnp.logical_and(
+            mask, q_pos[:, :, None] - k_pos[:, None, :] < window)
+    if k_valid is not None:
+        mask = jnp.logical_and(mask, k_valid[:, None, :])
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, v)
+
+
+def _blocked_causal(q, k, v, *, scale, q_pos, k_pos, window, cap,
+                    chunk_q, chunk_k):
+    """Memory-bounded causal attention: scan over q chunks, inner scan over
+    k chunks with online softmax.  Rectangle+mask baseline (the §Perf log
+    covers block-skipping); peak score memory [B, H, chunk_q, chunk_k]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    nq, nk = s // chunk_q, t // chunk_k
+
+    qf = q.reshape(b, nq, chunk_q, h, d).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(b, nq, chunk_q).transpose(1, 0, 2)
+    kf = k.reshape(b, nk, chunk_k, h, d).transpose(1, 0, 2, 3, 4)
+    vf = v.reshape(b, nk, chunk_k, h, d).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(b, nk, chunk_k).transpose(1, 0, 2)
+
+    def q_step(_, qc):
+        qi, qpi = qc
+
+        def k_step(carry, kc):
+            m, l, acc = carry
+            ki, vi, kpi = kc
+            sc = jnp.einsum("bshd,bthd->bhst", qi, ki)
+            sc = softcap(sc.astype(jnp.float32) * scale, cap)
+            msk = qpi[:, :, None] >= kpi[:, None, :]
+            if window:
+                msk = jnp.logical_and(
+                    msk, qpi[:, :, None] - kpi[:, None, :] < window)
+            sc = jnp.where(msk[:, None, :, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhst,bthd->bhsd", p.astype(vi.dtype), vi).astype(
+                    jnp.float32)
+            return (m_new, l_new, acc_new), ()
+
+        init = (jnp.full((b, h, chunk_q), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, chunk_q), jnp.float32),
+                jnp.zeros((b, h, chunk_q, d), jnp.float32))
+        # checkpoint per k-chunk: the scan backward otherwise stacks the
+        # [B,H,cq,ck] probability residuals for every chunk pair —
+        # regenerating exactly the score traffic this path exists to
+        # avoid (flash-attention's custom backward, the lax.scan way;
+        # §Perf iter M1b).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(k_step), init,
+                                      (kf, vf, kp))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 2, 1, 3)          # [B,cq,H,D]
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
+                           (qf, qp))                    # [nq,B,cq,H,D]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+# --------------------------------------------------------------- GQA attn
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    d, kv, dh = cfg.d_model, cfg.n_kv_heads, cfg.resolved_head_dim
+    hp = padded_heads(cfg)
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {"w_q": fan_in_init(ks[0], (d, hp, dh), d, pd),
+         "w_k": fan_in_init(ks[1], (d, kv, dh), d, pd),
+         "w_v": fan_in_init(ks[2], (d, kv, dh), d, pd),
+         "w_o": fan_in_init(ks[3], (hp, dh, d), cfg.n_heads * dh, pd)}
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((hp, dh), pd)
+        p["b_k"] = jnp.zeros((kv, dh), pd)
+        p["b_v"] = jnp.zeros((kv, dh), pd)
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig, positions, use_rope=True):
+    cd = dtype_of(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhe->bshe", x.astype(cd), p["w_q"].astype(cd))
+    if "b_q" in p:
+        q = q + p["b_q"].astype(cd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    return constrain(q, "batch", None, "heads", None)
+
+
+def _project_kv(p, x, cfg: ModelConfig, positions, use_rope=True):
+    cd = dtype_of(cfg.compute_dtype)
+    k = jnp.einsum("bsd,dhe->bshe", x.astype(cd), p["w_k"].astype(cd))
+    v = jnp.einsum("bsd,dhe->bshe", x.astype(cd), p["w_v"].astype(cd))
+    if "b_k" in p:
+        k, v = k + p["b_k"].astype(cd), v + p["b_v"].astype(cd)
+    if use_rope:
+        k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return k, v
+
+
+def _expand_kv(k, v, cfg: ModelConfig):
+    """Gather kv heads up to the padded q-head count (GQA for any ratio)."""
+    idx = _kv_map(cfg)
+    return k[:, :, idx, :], v[:, :, idx, :]
+
+
+def _finish(p, out, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask[None, None, :, None]
+    return jnp.einsum("bshe,hed->bsd", out.astype(cd),
+                      p["w_o"].astype(cd))
+
+
+def attention(p, x, cfg: ModelConfig, *, positions, causal=True,
+              window=0, cross_kv=None) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    dh = cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(dh)
+    if cross_kv is not None:
+        q = _project_q(p, x, cfg, positions, use_rope=False)
+        k, v = cross_kv
+        k, v = _expand_kv(k, v, cfg)
+        b, t = k.shape[0], k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        out = _sdpa(q, k, v, scale=scale, causal=False, q_pos=positions,
+                    k_pos=k_pos, cap=cfg.attn_softcap)
+        return _finish(p, out, cfg)
+    q = _project_q(p, x, cfg, positions)
+    k, v = _project_kv(p, x, cfg, positions)
+    k, v = _expand_kv(k, v, cfg)
+    s = x.shape[1]
+    long_seq = (s >= cfg.blocked_attn_threshold and causal
+                and s % cfg.attn_chunk_q == 0
+                and k.shape[1] % cfg.attn_chunk_k == 0)
+    if long_seq:
+        out = _blocked_causal(q, k, v, scale=scale, q_pos=positions,
+                              k_pos=positions, window=window,
+                              cap=cfg.attn_softcap,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_k=cfg.attn_chunk_k)
+    else:
+        out = _sdpa(q, k, v, scale=scale, causal=causal, q_pos=positions,
+                    k_pos=positions, window=window, cap=cfg.attn_softcap)
+    return _finish(p, out, cfg)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype) -> dict:
+    kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, max_len, kv, dh), dtype),
+            "v": jnp.zeros((batch, max_len, kv, dh), dtype)}
+
+
+def attention_decode(p, x, cache: Optional[dict], pos: jax.Array,
+                     cfg: ModelConfig, *, window=0, cross_kv=None):
+    """One-token decode step.  ``x [B, 1, D]``, ``pos`` scalar int32
+    (current length).  Returns (out, updated cache).
+
+    The cache length axis is sequence-sharded (rules.kv_seq); the softmax
+    and value contractions over it reduce across shards (flash-decoding
+    via the SPMD partitioner)."""
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(dh)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cross_kv is not None:
+        q = _project_q(p, x, cfg, positions, use_rope=False)
+        k, v = _expand_kv(*cross_kv, cfg)
+        t = k.shape[1]
+        k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+        out = _sdpa(q, k, v, scale=scale, causal=False, q_pos=positions,
+                    k_pos=k_pos, cap=cfg.attn_softcap)
+        return _finish(p, out, cfg), cache
+    q = _project_q(p, x, cfg, positions)
+    k_new, v_new = _project_kv(p, x, cfg, positions)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    t = cache["k"].shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    k_valid = k_pos <= pos
+    hp, kv = padded_heads(cfg), cfg.n_kv_heads
+    if hp % kv == 0:
+        # grouped decode: contract q groups against the UNEXPANDED cache
+        # — the [B, T, Hp, Dh] head-expanded KV never materializes (the
+        # expansion cost the starcoder2 decode_32k baseline 12x its KV
+        # bytes; EXPERIMENTS.md §Perf iter D1).
+        g = hp // kv
+        kc = cache["k"].astype(q.dtype)
+        vc = cache["v"].astype(q.dtype)
+        qg = q.reshape(b, 1, kv, g, dh)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32)
+        sc = softcap(sc * scale, cap=cfg.attn_softcap)
+        mask = k_valid[:, None, :]
+        if window:
+            mask = jnp.logical_and(
+                mask, positions[:, :, None] - k_pos[:, None, :] < window)
+        sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+        probs = jax.nn.softmax(sc, axis=-1).astype(vc.dtype)
+        out = jnp.einsum("bkgst,btkd->bskgd", probs, vc)
+        out = out.reshape(b, 1, hp, dh)
+    else:
+        k, v = _expand_kv(cache["k"], cache["v"], cfg)
+        out = _sdpa(q, k.astype(q.dtype), v.astype(q.dtype), scale=scale,
+                    causal=True, q_pos=positions, k_pos=k_pos,
+                    window=window, cap=cfg.attn_softcap, k_valid=k_valid)
+    return _finish(p, out, cfg), cache
+
+
+# ------------------------------------------------------------------- MLA
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    return {
+        "w_q": fan_in_init(ks[0], (d, h, qd), d, pd),
+        "w_dkv": fan_in_init(ks[1], (d, m.kv_lora_rank), d, pd),
+        "w_kpe": fan_in_init(ks[2], (d, m.qk_rope_dim), d, pd),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_uk": fan_in_init(ks[3], (m.kv_lora_rank, h, m.qk_nope_dim),
+                            m.kv_lora_rank, pd),
+        "w_uv": fan_in_init(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                            m.kv_lora_rank, pd),
+        "w_o": fan_in_init(ks[5], (h, m.v_head_dim, d),
+                           h * m.v_head_dim, pd),
+    }
+
+
+def _mla_latents(p, x, cfg: ModelConfig, positions):
+    """Shared path: compressed KV latent + roped positional key."""
+    cd = dtype_of(cfg.compute_dtype)
+    ckv = x.astype(cd) @ p["w_dkv"].astype(cd)              # [B,S,r]
+    var = jnp.mean(jnp.square(ckv.astype(jnp.float32)), -1, keepdims=True)
+    ckv = (ckv.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+           * p["kv_norm"]).astype(cd)
+    kpe = (x.astype(cd) @ p["w_kpe"].astype(cd))[:, :, None, :]
+    kpe = rope(kpe, positions, cfg.rope_theta)[:, :, 0, :]  # [B,S,r']
+    return ckv, kpe
+
+
+def _mla_queries(p, x, cfg: ModelConfig, positions):
+    m, cd = cfg.mla, dtype_of(cfg.compute_dtype)
+    q = jnp.einsum("bsd,dhe->bshe", x.astype(cd), p["w_q"].astype(cd))
+    q = constrain(q, "batch", None, "heads", None)
+    q_nope, q_pe = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_attention(p, x, cfg: ModelConfig, *, positions) -> jax.Array:
+    """Training / prefill MLA (explicit k/v materialization)."""
+    m, cd = cfg.mla, dtype_of(cfg.compute_dtype)
+    ckv, kpe = _mla_latents(p, x, cfg, positions)
+    q_nope, q_pe = _mla_queries(p, x, cfg, positions)
+    k_nope = jnp.einsum("btr,rhe->bthe", ckv, p["w_uk"].astype(cd))
+    v = jnp.einsum("btr,rhe->bthe", ckv, p["w_uv"].astype(cd))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    sc = (jnp.einsum("bshe,bthe->bhst", q_nope, k_nope)
+          + jnp.einsum("bshe,bte->bhst", q_pe, kpe)).astype(jnp.float32)
+    mask = positions[:, :, None] >= positions[:, None, :]
+    sc = jnp.where(mask[:, None, :, :], sc * scale, NEG_INF)
+    probs = jax.nn.softmax(sc, -1).astype(cd)
+    out = jnp.einsum("bhst,bthe->bshe", probs, v)
+    return jnp.einsum("bshe,hed->bsd", out, p["w_o"].astype(cd))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_len, m.qk_rope_dim), dtype)}
+
+
+def mla_decode(p, x, cache: dict, pos: jax.Array, cfg: ModelConfig):
+    """Absorbed one-token MLA decode: attend in the r-dim latent space —
+    the cache stays compressed (DeepSeek-V2 §2.1)."""
+    m, cd = cfg.mla, dtype_of(cfg.compute_dtype)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    ckv_new, kpe_new = _mla_latents(p, x, cfg, positions)
+    cache = dict(cache)
+    cache["ckv"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    cache["kpe"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpe"], kpe_new.astype(cache["kpe"].dtype), pos, axis=1)
+    q_nope, q_pe = _mla_queries(p, x, cfg, positions)
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"].astype(cd))
+    t = cache["ckv"].shape[1]
+    ckv, kpe = cache["ckv"].astype(cd), cache["kpe"].astype(cd)
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    sc = (jnp.einsum("bshr,btr->bhst", q_abs, ckv)
+          + jnp.einsum("bshe,bte->bhst", q_pe, kpe)).astype(jnp.float32)
+    valid = (jnp.arange(t)[None, :] <= pos)
+    sc = jnp.where(valid[:, None, None, :], sc * scale, NEG_INF)
+    probs = jax.nn.softmax(sc, -1).astype(cd)
+    ctx = jnp.einsum("bhst,btr->bshr", probs, ckv)
+    out = jnp.einsum("bshr,rhe->bshe", ctx, p["w_uv"].astype(cd))
+    return jnp.einsum("bshe,hed->bsd", out, p["w_o"].astype(cd)), cache

@@ -1,0 +1,127 @@
+"""Shared building blocks: norms, MLPs, embeddings, initializers.
+
+Params are plain nested dicts of jnp arrays; every creator is a pure
+``init(key, cfg) -> params`` / ``apply(params, x, cfg) -> y`` pair so the
+whole model works under ``jax.eval_shape`` (the dry-run never allocates).
+Leaf names are the contract with ``distributed/sharding.py`` — the
+partition rules key on them (w_up / w_down / w_q / experts_* / embed ...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+def fan_in_init(key, shape, fan_in, dtype):
+    return normal_init(key, shape, fan_in ** -0.5, dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+def init_norm(cfg: ModelConfig, with_bias: bool | None = None) -> dict:
+    d = cfg.d_model
+    with_bias = (cfg.norm_type == "layernorm") if with_bias is None else \
+        with_bias
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+        if "bias" in p:
+            out = out + p["bias"]
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLPs
+
+def _act(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"w_up": fan_in_init(ks[0], (d, f), d, pd),
+         "w_down": fan_in_init(ks[1], (f, d), f, pd)}
+    if cfg.mlp_gated:
+        p["w_gate"] = fan_in_init(ks[2], (d, f), d, pd)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = dtype_of(cfg.compute_dtype)
+    act = _act(cfg.mlp_act)
+    h = x.astype(cd) @ p["w_up"].astype(cd)
+    if "w_gate" in p:
+        h = act(x.astype(cd) @ p["w_gate"].astype(cd)) * h
+    else:
+        h = act(h)
+    return h @ p["w_down"].astype(cd)
+
+
+# ------------------------------------------------------- embeddings / head
+
+def init_embeddings(key, cfg: ModelConfig) -> dict:
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    p = {"embed": normal_init(ks[0], (cfg.vocab_size, cfg.d_model), 0.02, pd)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = normal_init(ks[1], (cfg.d_model, cfg.vocab_size),
+                                   cfg.d_model ** -0.5, pd)
+    if cfg.vision_tokens:
+        p["w_vision"] = fan_in_init(ks[2], (cfg.vision_dim, cfg.d_model),
+                                    cfg.vision_dim, pd)
+    return p
+
+
+def embed_tokens(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = dtype_of(cfg.compute_dtype)
+    x = p["embed"].astype(cd)[tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cd)
+    return x
+
+
+def unembed(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    cd = dtype_of(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        logits = x.astype(cd) @ p["embed"].astype(cd).T
+    else:
+        logits = x.astype(cd) @ p["unembed"].astype(cd)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits.astype(jnp.float32)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts layer: top-k router, capacity-based dispatch.
+
+Design for pjit + expert parallelism:
+
+* tokens keep their ``[B, S, D]`` layout (no global flatten) — the router,
+  cumsum and dispatch are per batch row, so the batch axis shards cleanly
+  on (pod, data) and the expert axis on model (EP) with no global
+  reordering;
+* dispatch is gather/scatter based (static ``[B, E, C, D]`` shapes, real
+  active-FLOP cost ``B*S*K*cf*D*F`` — NOT the one-hot einsum formulation
+  whose FLOPs blow up quadratically in S);
+* per-row capacity ``C = ceil(K * S * capacity_factor / E)``; overflow
+  tokens are dropped (standard Switch/GShard semantics), combine weights
+  renormalize over the surviving experts;
+* supports DeepSeek shared experts (always-on dense path of
+  ``n_shared * d_ff_expert``) and Arctic's dense residual MLP in parallel.
+
+Returns the load-balance auxiliary loss and router z-loss as metrics.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of, fan_in_init, init_mlp, apply_mlp
+from repro.distributed.sharding import constrain
+
+
+def expert_capacity(cfg: ModelConfig, seq_len: int) -> int:
+    m = cfg.moe
+    cap = math.ceil(m.top_k * seq_len * m.capacity_factor / m.n_experts)
+    return max(cap, 1)
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    d, fe = cfg.d_model, m.d_ff_expert
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": fan_in_init(ks[0], (d, m.n_experts), d, pd).astype(
+            jnp.float32),
+        "experts_up": fan_in_init(ks[1], (m.n_experts, d, fe), d, pd),
+        "experts_gate": fan_in_init(ks[2], (m.n_experts, d, fe), d, pd),
+        "experts_down": fan_in_init(ks[3], (m.n_experts, fe, d), fe, pd),
+    }
+    if m.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=m.n_shared_experts * fe)
+    if m.dense_residual:
+        p["dense"] = init_mlp(ks[5], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, dict]:
+    """x [B, S, D] -> (y [B, S, D], aux metrics)."""
+    m = cfg.moe
+    cd = dtype_of(cfg.compute_dtype)
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    cap = expert_capacity(cfg, s)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                   # [B,S,E]
+    gate_vals, idx = jax.lax.top_k(probs, k)                  # [B,S,K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each token in its expert's queue (per batch row)
+    assign = jax.nn.one_hot(idx, e, dtype=jnp.int32).sum(2)   # [B,S,E]
+    pos_e = jnp.cumsum(assign, axis=1) - assign               # pos before s
+    pos_k = jnp.take_along_axis(pos_e, idx, axis=2)           # [B,S,K]
+    valid = pos_k < cap
+
+    # scatter token indices into [B, E, C] dispatch slots
+    b_idx = jnp.broadcast_to(jnp.arange(b)[:, None, None], (b, s, k))
+    s_idx = jnp.broadcast_to(jnp.arange(s)[None, :, None], (b, s, k))
+    slot = jnp.where(valid, pos_k, cap)                       # cap -> drop
+    d_idx = jnp.zeros((b, e, cap + 1), jnp.int32)
+    d_idx = d_idx.at[b_idx, idx, slot].set(s_idx, mode="drop")
+    d_idx = d_idx[:, :, :cap]                                 # [B,E,C]
+    # a slot is live iff some token claimed it
+    live = jnp.zeros((b, e, cap + 1), jnp.bool_)
+    live = live.at[b_idx, idx, slot].set(True, mode="drop")[:, :, :cap]
+
+    # Dispatch/combine are *shard-local* gathers: tokens, indices and the
+    # dispatch buffer stay batch-sharded & expert-replicated, so the SPMD
+    # partitioner never hits its replicate-and-mask gather fallback (the
+    # baseline paid ~11 TB/device/step of all-reduce for exactly that —
+    # EXPERIMENTS.md §Perf iter 1).  The only cross-shard movement is one
+    # explicit boundary on each side of the expert compute:
+    #   expert_in:  (batch, E-replicated) -> (batch, E-sharded)   [slice]
+    #   y_exp:      (batch, E-sharded)    -> (batch, E-replicated) [AG]
+    xc = constrain(x.astype(cd), "batch", None, None)
+    d_idx = constrain(d_idx, "batch", None, None)
+    live = constrain(live, "batch", None, None)
+    expert_in = jnp.take_along_axis(
+        xc[:, None, :, :], d_idx[..., None], axis=2)          # [B,E,C,D]
+    expert_in = expert_in * live[..., None].astype(cd)
+    expert_in = constrain(expert_in, "batch", "expert", None, None)
+
+    up = jnp.einsum("becd,edf->becf", expert_in,
+                    p["experts_up"].astype(cd))
+    gt = jnp.einsum("becd,edf->becf", expert_in,
+                    p["experts_gate"].astype(cd))
+    h = jax.nn.silu(gt) * up
+    y_exp = jnp.einsum("becf,efd->becd", h,
+                       p["experts_down"].astype(cd))          # [B,E,C,D]
+
+    # combine: flatten the (E, C) slot axes and pay ONE explicit
+    # all-gather to replicate the slot table across the expert shards;
+    # the per-token gather is then shard-local.  (A batched scatter-add
+    # variant was tried and REFUTED: XLA replicates the global batch —
+    # EXPERIMENTS.md §Perf iters 3-4.)
+    y_flat = y_exp.reshape(b, e * cap, d)
+    y_flat = constrain(y_flat, "batch", None, None)           # AG boundary
+    e_flat = idx.reshape(b, s * k)                            # [B,S*K]
+    p_flat = jnp.where(valid, pos_k, 0).reshape(b, s * k)
+    slot_flat = e_flat * cap + p_flat
+    gathered = jnp.take_along_axis(y_flat, slot_flat[..., None],
+                                   axis=1)                    # [B,S*K,D]
+    gathered = gathered.reshape(b, s, k, d)
+    w = (gate_vals * valid.astype(jnp.float32)).astype(cd)
+    y = jnp.einsum("bskd,bsk->bsd", gathered, w)
+    y = constrain(y, "batch", None, None)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg)
+    if "dense" in p:
+        y = y + apply_mlp(p["dense"], x, cfg)
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = probs.mean(axis=(0, 1))                              # [E]
+    ce = (assign.astype(jnp.float32) / k).mean(axis=(0, 1))   # [E]
+    aux = {
+        "moe_aux_loss": e * jnp.sum(me * ce) * m.aux_loss_weight,
+        "moe_z_loss": jnp.mean(
+            jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+        * m.router_z_weight,
+        "moe_drop_frac": 1.0 - valid.mean(),
+    }
+    return y, aux

@@ -1,0 +1,449 @@
+"""Recurrent sequence mixers: Mamba2 (SSD), mLSTM and sLSTM (xLSTM).
+
+All three expose ``init_* / apply_* / *_decode`` with chunked (sub-quadratic)
+training forms where the math allows:
+
+* **Mamba2** — chunked state-space duality: quadratic *within* a chunk,
+  linear state carry *across* chunks (lax.scan), exactly the SSD algorithm
+  of Dao & Gu 2024 with the cross-chunk combination done as a scan instead
+  of the quadratic `segsum` so 500k contexts lower cleanly.
+* **mLSTM** — matrix-memory LSTM with exponential gating, in a stabilized
+  chunked-parallel form: per-chunk log-space weights with a running
+  max-stabilizer carried across chunks (Beck et al. 2024, §A).
+* **sLSTM** — scalar-memory LSTM with hidden-state recurrence (block-
+  diagonal per-head R), inherently sequential -> lax.scan over time.
+
+Decode steps are O(1)-state recurrences; caches are dicts of arrays.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dtype_of, fan_in_init
+
+
+def _split_sizes(x, sizes, axis=-1):
+    out, start = [], 0
+    for s in sizes:
+        out.append(jax.lax.slice_in_dim(x, start, start + s, axis=axis))
+        start += s
+    return out
+
+
+def _gated_rmsnorm(y, z, scale, eps):
+    """Mamba2-style output norm: RMSNorm(y * silu(z)) * scale."""
+    g = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), -1, keepdims=True)
+    return (g.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * scale).astype(y.dtype)
+
+
+# ===================================================================== SSD
+
+def _mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.n_groups * s.state_dim
+    return d_inner, n_heads, conv_ch
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    """Projections are split per segment (z / x / B / C / dt) instead of
+    one fused ``w_in`` so tensor-parallel sharding never crosses segment
+    boundaries (x shards on heads, B/C/dt stay replicated — they're
+    small)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nh, _ = _mamba_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": fan_in_init(ks[0], (d, d_inner), d, pd),
+        "w_x": fan_in_init(ks[1], (d, d_inner), d, pd),
+        "w_bc": fan_in_init(ks[2], (d, 2 * gn), d, pd),
+        "w_dt": fan_in_init(ks[3], (d, nh), d, pd),
+        "conv_x_w": fan_in_init(ks[4], (s.conv_width, d_inner),
+                                s.conv_width, pd),
+        "conv_x_b": jnp.zeros((d_inner,), pd),
+        "conv_bc_w": fan_in_init(ks[5], (s.conv_width, 2 * gn),
+                                 s.conv_width, pd),
+        "conv_bc_b": jnp.zeros((2 * gn,), pd),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_out": fan_in_init(ks[6], (d_inner, d), d_inner, pd),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B,S,C], w [W,C] -> [B,S,C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _mamba_project(p, u, cfg: ModelConfig):
+    """Returns z [B,S,d_inner], x_pre [B,S,d_inner], bc_pre [B,S,2GN],
+    dt_pre [B,S,H] (pre-conv, pre-activation)."""
+    cd = dtype_of(cfg.compute_dtype)
+    uc = u.astype(cd)
+    z = uc @ p["w_z"].astype(cd)
+    x_pre = uc @ p["w_x"].astype(cd)
+    bc_pre = uc @ p["w_bc"].astype(cd)
+    dt_pre = uc @ p["w_dt"].astype(cd)
+    return z, x_pre, bc_pre, dt_pre
+
+
+def _mamba_split_bc(bc, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nh, _ = _mamba_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    bb, cc = _split_sizes(bc, [gn, gn])
+    b, sl = bb.shape[0], bb.shape[1]
+    rep = nh // s.n_groups
+    bb = jnp.repeat(bb.reshape(b, sl, s.n_groups, s.state_dim), rep, axis=2)
+    cc = jnp.repeat(cc.reshape(b, sl, s.n_groups, s.state_dim), rep, axis=2)
+    return bb, cc
+
+
+def apply_mamba2(p, u, cfg: ModelConfig) -> jax.Array:
+    """Chunked SSD forward.  u [B,S,D] -> [B,S,D].  S % chunk == 0."""
+    s = cfg.ssm
+    cd = dtype_of(cfg.compute_dtype)
+    bsz, slen, _ = u.shape
+    d_inner, nh, _ = _mamba_dims(cfg)
+    q = min(s.chunk, slen)
+    if slen % q:
+        raise ValueError(f"seq {slen} not divisible by ssm chunk {q}")
+    nc = slen // q
+
+    z, x_pre, bc_pre, dt_pre = _mamba_project(p, u, cfg)
+    x = jax.nn.silu(_causal_conv(x_pre, p["conv_x_w"].astype(cd),
+                                 p["conv_x_b"].astype(cd)))
+    x = x.reshape(bsz, slen, nh, s.head_dim)
+    bc = jax.nn.silu(_causal_conv(bc_pre, p["conv_bc_w"].astype(cd),
+                                  p["conv_bc_b"].astype(cd)))
+    bb, cc = _mamba_split_bc(bc, cfg)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])
+    da = -jnp.exp(p["a_log"]) * dt                                # <= 0
+    xdt = x.astype(jnp.float32) * dt[..., None]
+
+    # chunk fold: [B, S, ...] -> [nc, B, q, ...] for scan
+    def fold(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xdt_c, b_c, c_c, da_c = map(fold, (xdt, bb.astype(jnp.float32),
+                                       cc.astype(jnp.float32), da))
+
+    def chunk_step(state, inp):
+        xdt_i, b_i, c_i, da_i = inp            # [B,q,...]
+        cum = jnp.cumsum(da_i, axis=1)         # [B,q,H]
+        # intra-chunk (masked quadratic); mask BEFORE exp so the masked
+        # upper triangle (positive args -> inf) can't poison gradients
+        rel = cum[:, :, None, :] - cum[:, None, :, :]      # [B,q,q,H] i-j
+        mask = jnp.tril(jnp.ones((q, q), bool))
+        rel = jnp.where(mask[None, :, :, None], rel, -1e30)
+        l_w = jnp.exp(rel)
+        sc = jnp.einsum("bihn,bjhn->bijh", c_i, b_i) * l_w
+        y = jnp.einsum("bijh,bjhp->bihp", sc, xdt_i)
+        # inter-chunk (state from previous chunks)
+        y = y + jnp.einsum("bihn,bhpn,bih->bihp", c_i, state,
+                           jnp.exp(cum))
+        # state update for next chunk
+        decay_out = jnp.exp(cum[:, -1:, :] - cum)          # [B,q,H]
+        new_state = state * jnp.exp(cum[:, -1])[..., None, None] + \
+            jnp.einsum("bjhn,bjhp,bjh->bhpn", b_i, xdt_i, decay_out)
+        return new_state, y
+
+    init = jnp.zeros((bsz, nh, s.head_dim, s.state_dim), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, init, (xdt_c, b_c, c_c, da_c))
+    y = ys.swapaxes(0, 1).reshape(bsz, slen, nh, s.head_dim)
+    y = y + p["d_skip"][:, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, slen, d_inner).astype(cd)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["w_out"].astype(cd)
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, nh, _ = _mamba_dims(cfg)
+    gn = s.n_groups * s.state_dim
+    return {
+        "conv_x": jnp.zeros((batch, s.conv_width - 1, d_inner), dtype),
+        "conv_bc": jnp.zeros((batch, s.conv_width - 1, 2 * gn), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.state_dim),
+                           jnp.float32),
+    }
+
+
+def mamba2_decode(p, u, cache: dict, cfg: ModelConfig):
+    """One-token recurrent step.  u [B,1,D]."""
+    s = cfg.ssm
+    cd = dtype_of(cfg.compute_dtype)
+    bsz = u.shape[0]
+    d_inner, nh, _ = _mamba_dims(cfg)
+    z, x_pre, bc_pre, dt_pre = _mamba_project(p, u, cfg)
+    win_x = jnp.concatenate([cache["conv_x"].astype(cd), x_pre], axis=1)
+    win_bc = jnp.concatenate([cache["conv_bc"].astype(cd), bc_pre], axis=1)
+    x_t = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", win_x, p["conv_x_w"].astype(cd))
+        + p["conv_x_b"].astype(cd))
+    bc_t = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", win_bc, p["conv_bc_w"].astype(cd))
+        + p["conv_bc_b"].astype(cd))
+    x = x_t.reshape(bsz, nh, s.head_dim)
+    bb, cc = _mamba_split_bc(bc_t[:, None, :], cfg)
+    bb, cc = bb[:, 0], cc[:, 0]                        # [B,H,N]
+    dt_t = jax.nn.softplus(dt_pre[:, 0].astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(-jnp.exp(p["a_log"]) * dt_t)      # [B,H]
+    state = cache["state"] * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x.astype(jnp.float32) * dt_t[..., None],
+        bb.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, cc.astype(jnp.float32))
+    y = y + p["d_skip"][:, None] * x.astype(jnp.float32)
+    y = y.reshape(bsz, 1, d_inner).astype(cd)
+    y = _gated_rmsnorm(y, z, p["norm_scale"], cfg.norm_eps)
+    new_cache = {"conv_x": win_x[:, 1:, :].astype(cache["conv_x"].dtype),
+                 "conv_bc": win_bc[:, 1:, :].astype(cache["conv_bc"].dtype),
+                 "state": state}
+    return y @ p["w_out"].astype(cd), new_cache
+
+
+# =================================================================== mLSTM
+
+def _mlstm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    return d_inner, nh
+
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_inner, nh = _mlstm_dims(cfg)
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_mq": fan_in_init(ks[0], (d, d_inner), d, pd),
+        "w_mk": fan_in_init(ks[1], (d, d_inner), d, pd),
+        "w_mv": fan_in_init(ks[2], (d, d_inner), d, pd),
+        "w_gates": fan_in_init(ks[3], (d, 2 * nh), d, pd),  # i, f pre-acts
+        "w_ogate": fan_in_init(ks[4], (d, d_inner), d, pd),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_out": fan_in_init(ks[5], (d_inner, d), d_inner, pd),
+        "f_bias": 3.0 * jnp.ones((nh,), jnp.float32),   # open forget gates
+    }
+
+
+def _mlstm_qkv(p, u, cfg: ModelConfig):
+    s = cfg.ssm
+    cd = dtype_of(cfg.compute_dtype)
+    b, sl, _ = u.shape
+    d_inner, nh = _mlstm_dims(cfg)
+    uc = u.astype(cd)
+    q = (uc @ p["w_mq"].astype(cd)).reshape(b, sl, nh, s.head_dim)
+    k = (uc @ p["w_mk"].astype(cd)).reshape(b, sl, nh, s.head_dim)
+    v = (uc @ p["w_mv"].astype(cd)).reshape(b, sl, nh, s.head_dim)
+    gates = (uc @ p["w_gates"].astype(cd)).astype(jnp.float32)
+    i_pre, f_pre = gates[..., :nh], gates[..., nh:]
+    logf = jax.nn.log_sigmoid(f_pre + p["f_bias"])
+    k = k / jnp.sqrt(jnp.asarray(s.head_dim, cd))
+    return q, k, v, i_pre, logf
+
+
+def apply_mlstm(p, u, cfg: ModelConfig) -> jax.Array:
+    """Stabilized chunked-parallel mLSTM.  u [B,S,D] -> [B,S,D]."""
+    s = cfg.ssm
+    cd = dtype_of(cfg.compute_dtype)
+    bsz, slen, _ = u.shape
+    d_inner, nh = _mlstm_dims(cfg)
+    qq = min(s.chunk, slen)
+    if slen % qq:
+        raise ValueError(f"seq {slen} not divisible by ssm chunk {qq}")
+    nc = slen // qq
+    q, k, v, i_pre, logf = _mlstm_qkv(p, u, cfg)
+
+    def fold(t):
+        return t.reshape(bsz, nc, qq, *t.shape[2:]).swapaxes(0, 1)
+
+    q_c, k_c, v_c, i_c, f_c = map(fold, (
+        q.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), i_pre, logf))
+
+    p_dim = s.head_dim
+
+    def chunk_step(carry, inp):
+        c_mat, n_vec, m_run = carry        # [B,H,P,P], [B,H,P], [B,H]
+        qi, ki, vi, ii, fi = inp           # [B,q,...]
+        f_cum = jnp.cumsum(fi, axis=1)                  # F_t  [B,q,H]
+        b_log = ii - f_cum                              # b_j = i_j - F_j
+        g = jnp.maximum(jax.lax.cummax(b_log, axis=1),
+                        m_run[:, None, :])              # [B,q,H]
+        m_i = f_cum + g                                 # stabilizer per pos
+        # intra-chunk weights w_ij = exp(F_i + b_j - m_i), j <= i; mask
+        # the argument before exp (inf * 0 = NaN in the cotangent)
+        w_arg = b_log[:, None, :, :] - g[:, :, None, :]        # [B,i,j,H]
+        mask = jnp.tril(jnp.ones((qq, qq), bool))
+        w = jnp.exp(jnp.where(mask[None, :, :, None], w_arg, -1e30))
+        qk = jnp.einsum("bihp,bjhp->bijh", qi, ki)
+        num = jnp.einsum("bijh,bijh,bjhp->bihp", qk, w, vi)
+        # inter-chunk contribution with factor exp(m_prev - g_i)
+        inter_w = jnp.exp(m_run[:, None, :] - g)        # [B,q,H]
+        num = num + jnp.einsum("bihr,bhpr,bih->bihp", qi, c_mat, inter_w)
+        # denominator: n_i = sum_j w_ij k_j + inter_w * n_prev
+        n_i = jnp.einsum("bijh,bjhp->bihp", w, ki) + \
+            inter_w[..., None] * n_vec[:, None, :, :]
+        dot = jnp.einsum("bihp,bihp->bih", qi, n_i)
+        den = jnp.maximum(jnp.abs(dot), jnp.exp(-m_i))
+        y = num / den[..., None]
+        # carry update at chunk end
+        g_end = g[:, -1, :]
+        m_new = f_cum[:, -1, :] + g_end
+        w_end = jnp.exp(b_log - g_end[:, None, :])      # [B,j,H]
+        c_new = jnp.exp(m_run - g_end)[..., None, None] * c_mat + \
+            jnp.einsum("bjh,bjhp,bjhr->bhpr", w_end, vi, ki)
+        n_new = jnp.exp(m_run - g_end)[..., None] * n_vec + \
+            jnp.einsum("bjh,bjhp->bhp", w_end, ki)
+        return (c_new, n_new, m_new), y
+
+    init = (jnp.zeros((bsz, nh, p_dim, p_dim), jnp.float32),
+            jnp.zeros((bsz, nh, p_dim), jnp.float32),
+            jnp.full((bsz, nh), -1e30, jnp.float32))
+    _, ys = jax.lax.scan(chunk_step, init, (q_c, k_c, v_c, i_c, f_c))
+    y = ys.swapaxes(0, 1).reshape(bsz, slen, d_inner).astype(cd)
+    o = jax.nn.sigmoid(u.astype(cd) @ p["w_ogate"].astype(cd))
+    y = _gated_rmsnorm(y, jnp.zeros_like(y) + 1.7159, p["norm_scale"],
+                       cfg.norm_eps) * o
+    return y @ p["w_out"].astype(cd)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, nh = _mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, nh, s.head_dim, s.head_dim),
+                           jnp.float32),
+            "n": jnp.zeros((batch, nh, s.head_dim), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_decode(p, u, cache: dict, cfg: ModelConfig):
+    """One-token mLSTM recurrence (Beck et al. eqs. 19-27)."""
+    cd = dtype_of(cfg.compute_dtype)
+    bsz = u.shape[0]
+    d_inner, nh = _mlstm_dims(cfg)
+    q, k, v, i_pre, logf = _mlstm_qkv(p, u, cfg)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))
+    i_t, f_t = i_pre[:, 0], logf[:, 0]                   # [B,H]
+    m_new = jnp.maximum(f_t + cache["m"], i_t)
+    f_fac = jnp.exp(f_t + cache["m"] - m_new)
+    i_fac = jnp.exp(i_t - m_new)
+    c_new = f_fac[..., None, None] * cache["C"] + \
+        i_fac[..., None, None] * jnp.einsum("bhp,bhr->bhpr", v, k)
+    n_new = f_fac[..., None] * cache["n"] + i_fac[..., None] * k
+    num = jnp.einsum("bhpr,bhr->bhp", c_new, q)
+    dot = jnp.einsum("bhp,bhp->bh", q, n_new)
+    den = jnp.maximum(jnp.abs(dot), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(bsz, 1, d_inner).astype(cd)
+    o = jax.nn.sigmoid(u.astype(cd) @ p["w_ogate"].astype(cd))
+    y = _gated_rmsnorm(y, jnp.zeros_like(y) + 1.7159, p["norm_scale"],
+                       cfg.norm_eps) * o
+    return y @ p["w_out"].astype(cd), \
+        {"C": c_new, "n": n_new, "m": m_new}
+
+
+# =================================================================== sLSTM
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    pd = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gates": fan_in_init(ks[0], (d, 4 * d), d, pd),   # z, i, f, o
+        "r_gates": fan_in_init(ks[1], (nh, dh, 4 * dh), dh, pd),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((2 * d,), jnp.float32),
+             3.0 * jnp.ones((d,), jnp.float32),
+             jnp.zeros((d,), jnp.float32)]),
+        "norm_scale": jnp.ones((d,), jnp.float32),
+        "w_out": fan_in_init(ks[2], (d, d), d, pd),
+    }
+
+
+def _slstm_step(p, x_t, state, cfg: ModelConfig):
+    """x_t [B,D]; state = (h, c, n, m) each [B,D] (heads folded)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    h, c, n, m = state
+    bsz = x_t.shape[0]
+    wx = x_t @ p["w_gates"].astype(x_t.dtype)               # [B,4D]
+    hh = h.reshape(bsz, nh, dh)
+    rh = jnp.einsum("bhd,hde->bhe", hh,
+                    p["r_gates"].astype(x_t.dtype))         # [B,H,4dh]
+    rh = rh.reshape(bsz, nh, 4, dh).swapaxes(1, 2).reshape(bsz, 4 * d)
+    pre = (wx + rh).astype(jnp.float32) + p["gate_bias"]
+    z_p, i_p, f_p, o_p = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_p)
+    o = jax.nn.sigmoid(o_p)
+    logf = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(logf + m, i_p)
+    i_g = jnp.exp(i_p - m_new)
+    f_g = jnp.exp(logf + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = f_g * n + i_g
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return (h_new.astype(x_t.dtype), c_new, n_new, m_new)
+
+
+def apply_slstm(p, u, cfg: ModelConfig) -> jax.Array:
+    """Sequential sLSTM over time (lax.scan).  u [B,S,D] -> [B,S,D]."""
+    cd = dtype_of(cfg.compute_dtype)
+    bsz, slen, d = u.shape
+    uc = u.astype(cd)
+
+    def step(state, x_t):
+        new = _slstm_step(p, x_t, state, cfg)
+        return new, new[0]
+
+    init = (jnp.zeros((bsz, d), cd), jnp.zeros((bsz, d), jnp.float32),
+            jnp.zeros((bsz, d), jnp.float32),
+            jnp.full((bsz, d), -1e30, jnp.float32))
+    _, hs = jax.lax.scan(step, init, uc.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1)                                   # [B,S,D]
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm_scale"]).astype(cd)
+    return y @ p["w_out"].astype(cd)
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), dtype),
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p, u, cache: dict, cfg: ModelConfig):
+    cd = dtype_of(cfg.compute_dtype)
+    state = (cache["h"].astype(cd), cache["c"], cache["n"], cache["m"])
+    new = _slstm_step(p, u[:, 0].astype(cd), state, cfg)
+    y = new[0][:, None, :]
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * p["norm_scale"]).astype(cd)
+    out = y @ p["w_out"].astype(cd)
+    return out, {"h": new[0], "c": new[1], "n": new[2], "m": new[3]}

@@ -1,0 +1,443 @@
+"""Model assembly: layer stacks, scan-over-layers + remat, loss, decode.
+
+The stack is ``prologue`` (unrolled, e.g. DeepSeek's dense layer 0) followed
+by ``n_super`` repeats of the config's super-block pattern, executed with
+``lax.scan`` over stacked params (compact HLO even at 80 layers) and
+optional ``jax.checkpoint`` per super-block (full remat).
+
+Top-level API (all pure functions over param pytrees):
+
+  init_params(key, cfg)                  -> params (works under eval_shape)
+  forward(params, batch, cfg)            -> logits [B, S, V]
+  loss_fn(params, batch, cfg)            -> (loss, metrics)
+  init_decode_state(cfg, batch, max_len) -> caches pytree
+  decode_step(params, state, token, cfg) -> (logits [B,1,V], state)
+
+``batch`` is a dict: tokens [B, S] (+ optional ``vision_embeds`` for the
+VLM stub, ``audio_frames`` for the audio stub; see models/frontends.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (apply_mlp, apply_norm, dtype_of,
+                                 embed_tokens, init_embeddings, init_mlp,
+                                 init_norm, unembed)
+
+# ------------------------------------------------------------- one layer
+
+
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    p: dict = {"norm1": init_norm(cfg)}
+    if spec.mixer == "attn" or spec.mixer == "attn_local":
+        p["mix"] = attn.init_attention(ks[0], cfg)
+    elif spec.mixer == "mla":
+        p["mix"] = attn.init_mla(ks[0], cfg)
+    elif spec.mixer == "mamba2":
+        p["mix"] = ssm.init_mamba2(ks[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mix"] = ssm.init_mlstm(ks[0], cfg)
+    elif spec.mixer == "slstm":
+        p["mix"] = ssm.init_slstm(ks[0], cfg)
+    elif spec.mixer == "shared_attn":
+        pass                                    # weights live in shared
+    else:
+        raise ValueError(f"unknown mixer {spec.mixer}")
+    if cfg.is_encoder_decoder:
+        p["cross_norm"] = init_norm(cfg)
+        p["cross"] = attn.init_attention(ks[1], cfg, cross=True)
+    if spec.mlp != "none":
+        p["norm2"] = init_norm(cfg)
+        if spec.mlp == "dense":
+            p["mlp"] = init_mlp(ks[2], cfg)
+        else:                                   # moe | moe_dense
+            p["moe"] = moe_mod.init_moe(ks[2], cfg)
+    if cfg.post_norms:
+        p["post1"] = init_norm(cfg)
+        if spec.mlp != "none":
+            p["post2"] = init_norm(cfg)
+    return p
+
+
+def _mix(p, spec, x, cfg, positions, shared):
+    if spec.mixer == "attn":
+        return attn.attention(p["mix"], x, cfg, positions=positions)
+    if spec.mixer == "attn_local":
+        return attn.attention(p["mix"], x, cfg, positions=positions,
+                              window=cfg.local_window)
+    if spec.mixer == "mla":
+        return attn.mla_attention(p["mix"], x, cfg, positions=positions)
+    if spec.mixer == "mamba2":
+        return ssm.apply_mamba2(p["mix"], x, cfg)
+    if spec.mixer == "mlstm":
+        return ssm.apply_mlstm(p["mix"], x, cfg)
+    if spec.mixer == "slstm":
+        return ssm.apply_slstm(p["mix"], x, cfg)
+    if spec.mixer == "shared_attn":
+        return attn.attention(shared["attn"], x, cfg, positions=positions)
+    raise ValueError(spec.mixer)
+
+
+def apply_layer(p, spec: LayerSpec, x, cfg: ModelConfig, positions,
+                shared=None, enc_out=None, encoder_mode=False):
+    """Returns (x, aux_dict)."""
+    aux = _aux_zero(cfg)
+    h = apply_norm(p["norm1"], x, cfg)
+    if encoder_mode:
+        m = attn.attention(p["mix"], h, cfg, positions=positions,
+                           causal=False)
+    else:
+        m = _mix(p, spec, h, cfg, positions, shared)
+    if cfg.post_norms:
+        m = apply_norm(p["post1"], m, cfg)
+    x = x + m
+    if enc_out is not None and not encoder_mode:
+        h = apply_norm(p["cross_norm"], x, cfg)
+        ck, cv = attn._project_kv(p["cross"], enc_out, cfg,
+                                  positions=None, use_rope=False)
+        c = attn.attention(p["cross"], h, cfg, positions=positions,
+                           cross_kv=(ck, cv))
+        x = x + c
+    if spec.mlp != "none":
+        h = apply_norm(p["norm2"], x, cfg)
+        if spec.mlp == "dense":
+            f = apply_mlp(p["mlp"], h, cfg)
+        else:
+            f, aux = moe_mod.apply_moe(p["moe"], h, cfg)
+        if cfg.post_norms:
+            f = apply_norm(p["post2"], f, cfg)
+        x = x + f
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux
+
+
+def _aux_zero(cfg: ModelConfig) -> dict:
+    if cfg.moe is None:
+        return {}
+    return {"moe_aux_loss": jnp.zeros((), jnp.float32),
+            "moe_z_loss": jnp.zeros((), jnp.float32),
+            "moe_drop_frac": jnp.zeros((), jnp.float32)}
+
+
+def _aux_add(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in a}
+
+
+# ----------------------------------------------------------------- stacks
+
+def _init_superblock(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {str(i): init_layer(ks[i], spec, cfg)
+            for i, spec in enumerate(cfg.block_pattern)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    cfg.validate()
+    k_emb, k_blocks, k_pro, k_shared, k_enc = jax.random.split(key, 5)
+    params: dict = {"embeddings": init_embeddings(k_emb, cfg),
+                    "final_norm": init_norm(cfg)}
+    blk_keys = jax.random.split(k_blocks, cfg.n_super)
+    params["blocks"] = jax.vmap(
+        lambda k: _init_superblock(k, cfg))(blk_keys)
+    if cfg.prologue:
+        pk = jax.random.split(k_pro, len(cfg.prologue))
+        params["prologue"] = [init_layer(pk[i], spec, cfg)
+                              for i, spec in enumerate(cfg.prologue)]
+    if any(s.mixer == "shared_attn" for s in cfg.block_pattern):
+        params["shared"] = {"attn": attn.init_attention(k_shared, cfg)}
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(k_enc, cfg.encoder_layers + 1)
+        enc_spec = LayerSpec("attn", "dense")
+        enc_blocks = jax.vmap(
+            lambda k: {"0": _init_encoder_layer(k, cfg)})(
+                ek[:cfg.encoder_layers])
+        params["encoder"] = {"blocks": enc_blocks,
+                             "norm": init_norm(cfg)}
+        del enc_spec
+    return params
+
+
+def _init_encoder_layer(key, cfg: ModelConfig) -> dict:
+    """Encoder layers: bidirectional attn + dense MLP, no cross."""
+    ks = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg),
+            "mix": attn.init_attention(ks[0], cfg),
+            "norm2": init_norm(cfg),
+            "mlp": init_mlp(ks[1], cfg)}
+
+
+def _stack_scan(params_blocks, x, cfg: ModelConfig, positions, shared,
+                enc_out, encoder_mode=False):
+    """Scan the super-block stack; returns (x, aux)."""
+    pattern = (LayerSpec("attn", "dense"),) if encoder_mode else \
+        cfg.block_pattern
+
+    def super_fn(carry, blk):
+        h, aux = carry
+        for i, spec in enumerate(pattern):
+            if encoder_mode:
+                h2 = apply_norm(blk[str(i)]["norm1"], h, cfg)
+                m = attn.attention(blk[str(i)]["mix"], h2, cfg,
+                                   positions=positions, causal=False)
+                h = h + m
+                h2 = apply_norm(blk[str(i)]["norm2"], h, cfg)
+                h = h + apply_mlp(blk[str(i)]["mlp"], h2, cfg)
+                a = _aux_zero(cfg)
+            else:
+                h, a = apply_layer(blk[str(i)], spec, h, cfg, positions,
+                                   shared=shared, enc_out=enc_out)
+            aux = _aux_add(aux, a)
+        return (h, aux), None
+
+    fn = jax.checkpoint(super_fn,
+                        policy=jax.checkpoint_policies.nothing_saveable) \
+        if cfg.remat else super_fn
+    (x, aux), _ = jax.lax.scan(fn, (x, _aux_zero(cfg)), params_blocks)
+    return x, aux
+
+
+def _encode(params, batch, cfg: ModelConfig):
+    """Whisper encoder over stub audio frames [B, T_enc, D]."""
+    frames = batch["audio_frames"].astype(dtype_of(cfg.compute_dtype))
+    b, t, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    x, _ = _stack_scan(params["encoder"]["blocks"], frames, cfg, positions,
+                       None, None, encoder_mode=True)
+    return apply_norm(params["encoder"]["norm"], x, cfg)
+
+
+def _embed_input(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embeddings"], tokens, cfg)
+    if cfg.vision_tokens:
+        cd = dtype_of(cfg.compute_dtype)
+        v = batch["vision_embeds"].astype(cd) @ \
+            params["embeddings"]["w_vision"].astype(cd)
+        x = jax.lax.dynamic_update_slice(x, v, (0, 0, 0))
+    return x
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Stack output after final norm (pre-unembed): ([B,S,D], aux)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _embed_input(params, batch, cfg)
+    x = constrain(x, "batch", "seq", "embed")
+    enc_out = _encode(params, batch, cfg) if cfg.is_encoder_decoder else None
+    aux = _aux_zero(cfg)
+    for i, spec in enumerate(cfg.prologue):
+        x, a = apply_layer(params["prologue"][i], spec, x, cfg, positions,
+                           shared=params.get("shared"), enc_out=enc_out)
+        aux = _aux_add(aux, a)
+    x, a = _stack_scan(params["blocks"], x, cfg, positions,
+                       params.get("shared"), enc_out)
+    aux = _aux_add(aux, a)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def forward(params, batch, cfg: ModelConfig, *, return_aux=False,
+            last_only=False):
+    """Full forward: logits [B, S, vocab] (or [B, 1, vocab] if
+    ``last_only`` — the prefill cells use this to avoid materializing a
+    [B, 32k, 256k] logit tensor)."""
+    x, aux = forward_hidden(params, batch, cfg)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(params["embeddings"], x, cfg)
+    logits = constrain(logits, "batch", None, "vocab")
+    if return_aux:
+        return logits, aux
+    return logits
+
+
+def _ce_chunk(params, x_chunk, tgt_chunk, mask_chunk, cfg: ModelConfig):
+    # flatten (batch, seq) before the unembed matmul: the weight-gradient
+    # contraction then reduces over the merged (sharded) token axis
+    # locally instead of materializing a [B, D, V] batched grad
+    # (EXPERIMENTS.md §Perf iter 2).
+    b, s, d = x_chunk.shape
+    x2 = x_chunk.reshape(b * s, d)
+    lg = unembed(params["embeddings"], x2, cfg).astype(jnp.float32)
+    lg = constrain(lg, "batch", "vocab")
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(
+        lg, tgt_chunk.reshape(b * s)[:, None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask_chunk.reshape(b * s)
+    return nll.sum()
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    """Next-token CE (+ MoE aux losses).  Vision slots are masked.
+
+    The CE is computed over sequence chunks (``cfg.loss_chunk``) so the
+    [B, S, vocab] logits are never materialized at once — at gemma2's
+    256k vocab the full-seq logit tensor would dominate HBM."""
+    x, aux = forward_hidden(params, batch, cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    # predict t+1 from position t; last position is masked out
+    tgt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+    mask = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+    if cfg.vision_tokens:
+        pos = jnp.arange(s)[None]
+        mask = mask * (pos >= cfg.vision_tokens).astype(jnp.float32)
+
+    cs = cfg.loss_chunk
+    if cs and s % cs == 0 and s > cs:
+        nc = s // cs
+
+        def fold(t):
+            return t.reshape(b, nc, cs, *t.shape[2:]).swapaxes(0, 1)
+
+        def chunk_fn(tot, inp):
+            xc, tc, mc = inp
+            return tot + _ce_chunk(params, xc, tc, mc, cfg), None
+
+        chunk = jax.checkpoint(chunk_fn) if cfg.remat else chunk_fn
+        nll_sum, _ = jax.lax.scan(chunk, jnp.zeros((), jnp.float32),
+                                  (fold(x), fold(tgt), fold(mask)))
+    else:
+        nll_sum = _ce_chunk(params, x, tgt, mask, cfg)
+    loss = nll_sum / jnp.maximum(mask.sum(), 1.0)
+    metrics = {"ce_loss": loss}
+    total = loss
+    if cfg.moe is not None:
+        n_moe = cfg.n_super * sum(1 for sp in cfg.block_pattern
+                                  if sp.mlp in ("moe", "moe_dense")) + \
+            sum(1 for sp in cfg.prologue if sp.mlp in ("moe", "moe_dense"))
+        total = total + aux["moe_aux_loss"] + aux["moe_z_loss"]
+        metrics.update(
+            moe_aux_loss=aux["moe_aux_loss"], moe_z_loss=aux["moe_z_loss"],
+            moe_drop_frac=aux["moe_drop_frac"] / max(n_moe, 1))
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ------------------------------------------------------------------ decode
+
+def _init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                      max_len: int, dtype) -> dict:
+    if spec.mixer in ("attn", "attn_local", "shared_attn"):
+        c = attn.init_kv_cache(cfg, batch, max_len, dtype)
+    elif spec.mixer == "mla":
+        c = attn.init_mla_cache(cfg, batch, max_len, dtype)
+    elif spec.mixer == "mamba2":
+        c = ssm.init_mamba2_cache(cfg, batch, dtype)
+    elif spec.mixer == "mlstm":
+        c = ssm.init_mlstm_cache(cfg, batch, dtype)
+    elif spec.mixer == "slstm":
+        c = ssm.init_slstm_cache(cfg, batch, dtype)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.is_encoder_decoder:
+        kv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        c = {"self": c,
+             "cross_k": jnp.zeros((batch, cfg.encoder_seq, kv, dh), dtype),
+             "cross_v": jnp.zeros((batch, cfg.encoder_seq, kv, dh), dtype)}
+    return c
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    def superblock_cache(_):
+        return {str(i): _init_layer_cache(spec, cfg, batch, max_len, dtype)
+                for i, spec in enumerate(cfg.block_pattern)}
+
+    state = {"blocks": jax.vmap(superblock_cache)(jnp.arange(cfg.n_super))}
+    if cfg.prologue:
+        state["prologue"] = [
+            _init_layer_cache(spec, cfg, batch, max_len, dtype)
+            for spec in cfg.prologue]
+    return state
+
+
+def _decode_layer(p, spec: LayerSpec, x, cache, pos, cfg: ModelConfig,
+                  shared):
+    full = cache
+    cross_kv = None
+    if cfg.is_encoder_decoder:
+        cache = full["self"]
+        cross_kv = (full["cross_k"], full["cross_v"])
+    h = apply_norm(p["norm1"], x, cfg)
+    if spec.mixer in ("attn", "attn_local", "shared_attn"):
+        prm = shared["attn"] if spec.mixer == "shared_attn" else p["mix"]
+        w = cfg.local_window if spec.mixer == "attn_local" else 0
+        m, cache = attn.attention_decode(prm, h, cache, pos, cfg, window=w)
+    elif spec.mixer == "mla":
+        m, cache = attn.mla_decode(p["mix"], h, cache, pos, cfg)
+    elif spec.mixer == "mamba2":
+        m, cache = ssm.mamba2_decode(p["mix"], h, cache, cfg)
+    elif spec.mixer == "mlstm":
+        m, cache = ssm.mlstm_decode(p["mix"], h, cache, cfg)
+    elif spec.mixer == "slstm":
+        m, cache = ssm.slstm_decode(p["mix"], h, cache, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    if cfg.post_norms:
+        m = apply_norm(p["post1"], m, cfg)
+    x = x + m
+    if cross_kv is not None:
+        h = apply_norm(p["cross_norm"], x, cfg)
+        c, _ = attn.attention_decode(p["cross"], h, None, pos, cfg,
+                                     cross_kv=cross_kv)
+        x = x + c
+    if spec.mlp != "none":
+        h = apply_norm(p["norm2"], x, cfg)
+        if spec.mlp == "dense":
+            f = apply_mlp(p["mlp"], h, cfg)
+        else:
+            f, _ = moe_mod.apply_moe(p["moe"], h, cfg)
+        if cfg.post_norms:
+            f = apply_norm(p["post2"], f, cfg)
+        x = x + f
+    if cfg.is_encoder_decoder:
+        cache = {"self": cache, "cross_k": full["cross_k"],
+                 "cross_v": full["cross_v"]}
+    return x, cache
+
+
+def decode_step(params, state: dict, token: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    """One autoregressive step.  token [B, 1], pos scalar int32 = current
+    sequence length (the new token's position).  Returns (logits, state)."""
+    x = embed_tokens(params["embeddings"], token, cfg)
+    x = constrain(x, "batch", None, "embed")
+    shared = params.get("shared")
+    new_state = dict(state)
+    if cfg.prologue:
+        pro = []
+        for i, spec in enumerate(cfg.prologue):
+            x, c = _decode_layer(params["prologue"][i], spec, x,
+                                 state["prologue"][i], pos, cfg, shared)
+            pro.append(c)
+        new_state["prologue"] = pro
+
+    def super_fn(carry, blk):
+        h = carry
+        prm, caches = blk
+        new_caches = {}
+        for i, spec in enumerate(cfg.block_pattern):
+            h, new_caches[str(i)] = _decode_layer(
+                prm[str(i)], spec, h, caches[str(i)], pos, cfg, shared)
+        return h, new_caches
+
+    x, new_blocks = jax.lax.scan(super_fn, x,
+                                 (params["blocks"], state["blocks"]))
+    new_state["blocks"] = new_blocks
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = unembed(params["embeddings"], x, cfg)
+    return logits, new_state

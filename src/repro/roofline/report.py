@@ -1,0 +1,62 @@
+"""Render dryrun_results.json into the EXPERIMENTS.md roofline tables."""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}us"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(results: List[dict], mesh_filter: str) -> str:
+    rows = [r for r in results
+            if ("pod" in r["mesh"]) == (mesh_filter == "multi")]
+    out = ["| arch | shape | compute | memory | collective | dominant |"
+           " MODEL/HLO flops | step bound (s) |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} "
+            f"| {fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} "
+            f"| {r['dominant']} | {r['useful_ratio']:.3f} "
+            f"| {fmt_s(bound)} |")
+    return "\n".join(out)
+
+
+def dryrun_table(results: List[dict]) -> str:
+    out = ["| arch | shape | mesh | global HLO FLOPs | global bytes |"
+           " collective bytes | compile (s) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in results:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['hlo_flops']:.2e} | {r['hlo_bytes']:.2e} "
+            f"| {r['collective_bytes']:.2e} | {r.get('compile_s', 0)} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    with open(path) as f:
+        d = json.load(f)
+    print("## Single-pod (16x16 = 256 chips)\n")
+    print(table(d["results"], "single"))
+    print("\n## Multi-pod (2x16x16 = 512 chips)\n")
+    print(table(d["results"], "multi"))
+    print("\n## Skipped cells\n")
+    for s in d.get("skipped", []):
+        print(f"- {s['arch']} x {s['shape']}: {s['reason']}")
+
+
+if __name__ == "__main__":
+    main()

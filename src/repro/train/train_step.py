@@ -1,0 +1,83 @@
+"""Train step: value_and_grad + optimizer, with optional microbatch
+gradient accumulation (scan) and int8 gradient compression.
+
+``make_train_step(cfg, opt, ...)`` returns a pure
+``step(params, opt_state, step_idx, batch, rng) -> (params, opt_state,
+metrics)`` suitable for ``jax.jit`` with in/out shardings from
+``distributed/sharding.py``.
+
+Gradient accumulation scans over microbatch slices of the (sharded)
+global batch; grads accumulate in f32.  With compression enabled, the
+accumulated grads are int8-quantized with per-leaf scales + error
+feedback before the (implicit) data-axis reduction — see
+``optim/compression.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.optim.optimizers import Optimizer
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: Optimizer,
+    *,
+    microbatches: int = 1,
+    accum_dtype=jnp.float32,
+    compressor=None,
+) -> Callable:
+    """Build the jittable train step for ``cfg``.
+
+    ``accum_dtype=bfloat16`` halves the gradient-accumulator footprint
+    (the 480B-class configs need it to fit 16 GB HBM; the ~3 decimal-digit
+    accumulation error over <=8 microbatches is below optimizer noise)."""
+
+    def loss_of(params, batch):
+        return tf.loss_fn(params, batch, cfg)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def step(params, opt_state, step_idx, batch, compress_state=None):
+        if microbatches > 1:
+            def fold(t):
+                b = t.shape[0]
+                return t.reshape(microbatches, b // microbatches,
+                                 *t.shape[1:])
+            micro = {k: fold(v) for k, v in batch.items()}
+
+            def acc_fn(carry, mb):
+                g_acc, l_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), g_acc, grads)
+                return (g_acc, l_acc + loss), metrics
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (grads, loss_sum), metrics_stack = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
+            metrics["loss"] = loss_sum / microbatches
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if compressor is not None:
+            grads, compress_state = compressor.compress_decompress(
+                grads, compress_state)
+
+        new_params, new_opt_state = opt.update(grads, opt_state, params,
+                                               step_idx)
+        out = (new_params, new_opt_state, metrics)
+        if compressor is not None:
+            return out + (compress_state,)
+        return out
+
+    return step

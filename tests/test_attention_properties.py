@@ -1,0 +1,115 @@
+"""Attention-layer invariants (head padding, GQA grouping, RoPE)."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke
+from repro.models import attention as attn
+from repro.models.config import ModelConfig, LayerSpec
+
+
+def _cfg(h=4, kv=2, d=32, pad=0, **kw):
+    return ModelConfig(
+        name="t", family="dense", n_layers=1, d_model=d, n_heads=h,
+        n_kv_heads=kv, d_ff=4 * d, vocab_size=64, head_dim=d // h,
+        head_pad_to=pad, block_pattern=(LayerSpec("attn"),),
+        param_dtype="float32", compute_dtype="float32", **kw)
+
+
+def test_head_padding_is_exact():
+    """Padded dummy heads must not change the output at all."""
+    cfg = _cfg(h=3, kv=3, d=48)
+    cfg_pad = _cfg(h=3, kv=3, d=48, pad=8)
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attention(key, cfg)
+    p_pad = attn.init_attention(key, cfg_pad)
+    # copy the real heads into the padded params; dummies stay random —
+    # the mask must null them
+    p_pad = dict(p_pad)
+    p_pad["w_q"] = p_pad["w_q"].at[:, :3, :].set(p["w_q"])
+    p_pad["w_o"] = p_pad["w_o"].at[:3, :, :].set(p["w_o"])
+    p_pad["w_k"], p_pad["w_v"] = p["w_k"], p["w_v"]
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 48))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    a = attn.attention(p, x, cfg, positions=pos)
+    b = attn.attention(p_pad, x, cfg_pad, positions=pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_gqa_equals_mha_with_repeated_kv():
+    """GQA(kv=2) == MHA whose kv heads are explicit repeats."""
+    cfg_gqa = _cfg(h=4, kv=2)
+    cfg_mha = _cfg(h=4, kv=4)
+    key = jax.random.PRNGKey(0)
+    p = attn.init_attention(key, cfg_gqa)
+    p_mha = dict(p)
+    idx = np.asarray(attn._kv_map(cfg_gqa))       # [0, 0, 1, 1]
+    p_mha["w_k"] = p["w_k"][:, idx, :]
+    p_mha["w_v"] = p["w_v"][:, idx, :]
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 12, 32))
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (1, 12))
+    a = attn.attention(p, x, cfg_gqa, positions=pos)
+    b = attn.attention(p_mha, x, cfg_mha, positions=pos)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_causality():
+    """Changing future tokens cannot change past outputs."""
+    cfg = _cfg()
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    a = attn.attention(p, x, cfg, positions=pos)
+    x2 = x.at[:, 10:, :].set(jax.random.normal(jax.random.PRNGKey(2),
+                                               (1, 6, 32)))
+    b = attn.attention(p, x2, cfg, positions=pos)
+    np.testing.assert_allclose(np.asarray(a[:, :10]),
+                               np.asarray(b[:, :10]), atol=1e-5)
+
+
+def test_local_window_blocks_distant_keys():
+    cfg = _cfg()
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32))
+    pos = jnp.broadcast_to(jnp.arange(32)[None], (1, 32))
+    a = attn.attention(p, x, cfg, positions=pos, window=4)
+    # tokens beyond the window cannot influence position 31
+    x2 = x.at[:, :8, :].set(0.0)
+    b = attn.attention(p, x2, cfg, positions=pos, window=4)
+    np.testing.assert_allclose(np.asarray(a[:, 31]), np.asarray(b[:, 31]),
+                               atol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """RoPE attention scores depend only on relative offsets: shifting
+    all positions by a constant leaves outputs unchanged."""
+    cfg = _cfg()
+    p = attn.init_attention(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (1, 16))
+    a = attn.attention(p, x, cfg, positions=pos)
+    b = attn.attention(p, x, cfg, positions=pos + 37)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_rope_partial_fraction_leaves_tail_unrotated():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+    out = attn.rope(x, pos, theta=1e4, fraction=0.25)
+    np.testing.assert_array_equal(np.asarray(out[..., 4:]),
+                                  np.asarray(x[..., 4:]))
+    assert not np.allclose(np.asarray(out[..., :4]),
+                           np.asarray(x[..., :4]))
+
+
+def test_softcap_bounds_scores():
+    from repro.models.layers import softcap
+    x = jnp.array([-1e4, -10.0, 0.0, 10.0, 1e4])
+    y = np.asarray(softcap(x, 50.0))
+    assert (np.abs(y) <= 50.0 + 1e-5).all()
+    np.testing.assert_allclose(y[2], 0.0)
+    assert y[3] > 9.0   # near-linear in the small regime

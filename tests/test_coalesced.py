@@ -1,0 +1,73 @@
+"""Coalesced TM tests (paper §V future work, arXiv:2108.07594)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import coalesced as co
+from repro.data.tm_datasets import noisy_xor
+
+
+@pytest.fixture(scope="module")
+def xor_clean():
+    return noisy_xor(jax.random.PRNGKey(0), 3000, 500, label_noise=0.0)
+
+
+def test_learns_clean_xor_with_half_the_clauses(xor_clean):
+    xtr, ytr, xte, yte = xor_clean
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=12, n_features=12,
+                             n_states=100, threshold=15, specificity=3.9)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    ta, w = co.fit(ta, w, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                   epochs=20, batch_size=16)
+    assert float(co.accuracy(ta, w, xte, yte, cfg)) >= 0.98
+    # the shared pool is HALF the vanilla TA-cell budget (24 clauses)
+    assert cfg.n_ta == 12 * 24
+
+
+def test_weights_specialize_by_class(xor_clean):
+    xtr, ytr, *_ = xor_clean
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=8, n_features=12,
+                             n_states=100, threshold=15, specificity=3.9)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    ta, w = co.fit(ta, w, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                   epochs=20, batch_size=16)
+    w = np.asarray(w)
+    # at least one clause with opposite-sign weights (true sharing)
+    assert ((w[:, 0] > 3) & (w[:, 1] < -3)).any() or \
+        ((w[:, 0] < -3) & (w[:, 1] > 3)).any()
+
+
+def test_state_and_weight_bounds(xor_clean):
+    xtr, ytr, *_ = xor_clean
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=12,
+                             n_states=50, threshold=10, specificity=3.9,
+                             max_weight=20)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    for i in range(5):
+        ta, w = co.train_step_batch(ta, w, jax.random.PRNGKey(3 + i),
+                                    xtr[:256], ytr[:256], cfg)
+    assert int(ta.min()) >= 1 and int(ta.max()) <= 2 * cfg.n_states
+    assert int(jnp.abs(w).max()) <= cfg.max_weight
+
+
+def test_forward_is_weighted_clause_sum(xor_clean):
+    xtr, *_ = xor_clean
+    cfg = co.CoalescedConfig(n_classes=3, n_clauses=6, n_features=12)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    w = w.at[:, 1].set(-2)
+    from repro.core.tm import literals
+    cls = co.clause_outputs(ta, literals(xtr[:16]), cfg)
+    want = cls.astype(jnp.int32) @ w
+    got = co.forward(ta, w, xtr[:16], cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_empty_clauses_masked_at_inference():
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4)
+    ta = jnp.full((4, 8), cfg.n_states, jnp.int16)   # all exclude
+    w = jnp.ones((4, 2), jnp.int32)
+    x = jnp.ones((3, 4), jnp.uint8)
+    sums = co.forward(ta, w, x, cfg)
+    np.testing.assert_array_equal(np.asarray(sums), 0)

@@ -1,0 +1,171 @@
+"""Tests for the IMBUE analog crossbar simulation + energy model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy, imbue, tm, tm_train
+from repro.core.mapping import CrossbarMapping, csa_count_packed
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.data.tm_datasets import PAPER_TABLE_IV, noisy_xor
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
+                   n_states=100)
+    xtr, ytr, xte, yte = noisy_xor(jax.random.PRNGKey(0), 3000, 500)
+    ta = tm.init_ta_state(jax.random.PRNGKey(1), cfg)
+    ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                      epochs=50, batch_size=1500)
+    return cfg, ta, xte, yte
+
+
+def test_table_i_cell_currents():
+    """Table I operating points: ~76 uA include / ~1.89 uA exclude at 0.2V."""
+    assert imbue.I_INCLUDE_ON == pytest.approx(76.07e-6, rel=0.01)
+    assert imbue.I_EXCLUDE_ON == pytest.approx(1.89e-6, rel=0.01)
+
+
+def test_sensing_margin_positive_at_w32():
+    cfg = imbue.IMBUEConfig(width=32)
+    assert cfg.sensing_margin() > 0
+    # At ~40 cells/column the leak band crosses one include: margin gone.
+    assert imbue.IMBUEConfig(width=41).sensing_margin() < 0
+
+
+def test_analog_matches_digital_nominal(trained):
+    cfg, ta, xte, _ = trained
+    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
+                                  jax.random.PRNGKey(0),
+                                  VariationConfig.nominal())
+    analog = imbue.analog_predict(xbar, xte, cfg)
+    digital = tm.predict(ta, xte, cfg)
+    np.testing.assert_array_equal(np.asarray(analog), np.asarray(digital))
+
+
+def test_analog_forward_matches_class_sums(trained):
+    cfg, ta, xte, _ = trained
+    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
+                                  jax.random.PRNGKey(0),
+                                  VariationConfig.nominal())
+    np.testing.assert_array_equal(
+        np.asarray(imbue.analog_forward(xbar, xte, cfg)),
+        np.asarray(tm.forward(ta, xte, cfg)))
+
+
+def test_variation_tolerance(trained):
+    """Paper claim: D2D/C2C/CSA variations stay within sensing margins."""
+    cfg, ta, xte, yte = trained
+    accs = imbue.monte_carlo_accuracy(ta, xte, yte, jax.random.PRNGKey(7),
+                                      cfg, VariationConfig(), draws=8)
+    base = float(tm.accuracy(ta, xte, yte, cfg))
+    assert float(np.mean(np.asarray(accs))) >= base - 0.02
+
+
+def test_clause_error_rate_small_under_variation(trained):
+    cfg, ta, xte, _ = trained
+    err = imbue.clause_error_rate(ta, xte[:128], jax.random.PRNGKey(8),
+                                  cfg, VariationConfig(), draws=4)
+    assert float(np.max(np.asarray(err))) <= 0.01
+
+
+def test_mapping_counts_match_paper():
+    # Table IV CSA column == ceil(ta_cells / 32) for every row.
+    for row in PAPER_TABLE_IV.values():
+        assert csa_count_packed(row.ta_cells) == row.csas
+    m = CrossbarMapping(n_clauses=24, n_literals=24)
+    assert m.columns_per_clause == 1 and m.n_columns == 24
+    assert m.n_columns_packed == 18           # noisy-xor row
+
+
+def test_energy_calibration_reproduces_table_iv():
+    fit = energy.calibrate_to_paper(PAPER_TABLE_IV.values())
+    # Published rows are reproduced to well under 1%.
+    for k, v in fit.items():
+        if k.startswith("rel_err_"):
+            assert v < 0.01, (k, v)
+    # Recovered constants sit at their physical interpretations.
+    assert fit["a_per_include_j"] == pytest.approx(energy.E_INCLUDE_LIT0,
+                                                   rel=0.05)
+    assert 10e-15 < fit["b_per_csa_j"] < 100e-15
+
+
+def test_cmos_tm_baseline_recovers_table_iv():
+    for row in PAPER_TABLE_IV.values():
+        pred_nj = energy.cmos_tm_energy(row.ta_cells) * 1e9
+        assert pred_nj == pytest.approx(row.cmos_tm_nj, rel=0.01), row.name
+
+
+def test_top_j_inv_headline():
+    """Fig. 9 headline: F-MNIST at 331 TopJ^-1."""
+    row = PAPER_TABLE_IV["f-mnist"]
+    val = energy.top_j_inv(row.ta_cells, row.imbue_nj * 1e-9)
+    assert val == pytest.approx(331, rel=0.01)
+
+
+def test_programming_energy_positive_monotone():
+    e1 = energy.programming_energy(10, 1000)
+    e2 = energy.programming_energy(500, 1000)
+    assert 0 < e1 < e2
+
+
+def test_latency_model():
+    assert energy.inference_latency_s(100) == pytest.approx(60e-9)
+    assert energy.inference_latency_s(100, parallel_columns=2) == \
+        pytest.approx(50 * 60e-9)
+
+
+# ---------------------------------------------------- energy properties
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 64))
+def test_property_energy_monotone_in_includes(includes, extra_cells):
+    """More includes never costs less energy (cells fixed)."""
+    cells = includes + extra_cells * 32
+    csas = csa_count_packed(cells)
+    e1 = energy.imbue_energy_per_datapoint(includes, cells, csas).total_j
+    if includes + 1 <= cells:
+        e2 = energy.imbue_energy_per_datapoint(includes + 1, cells,
+                                               csas).total_j
+        assert e2 >= e1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+def test_property_energy_monotone_in_activity(p_inc, p_exc):
+    row = PAPER_TABLE_IV["mnist"]
+    e = energy.imbue_energy_per_datapoint(
+        row.includes, row.ta_cells, row.csas,
+        p_lit0_include=p_inc, p_lit0_exclude=p_exc).total_j
+    e_max = energy.imbue_energy_per_datapoint(
+        row.includes, row.ta_cells, row.csas,
+        p_lit0_include=1.0, p_lit0_exclude=1.0).total_j
+    assert 0 < e <= e_max + 1e-18
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 60))
+def test_property_margin_decreases_with_width(w):
+    """The CSA sensing margin shrinks monotonically with column width."""
+    m1 = imbue.IMBUEConfig(width=w).sensing_margin()
+    m2 = imbue.IMBUEConfig(width=w + 1).sensing_margin()
+    assert m2 < m1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_c2c_bounded(seed):
+    import jax
+    from repro.core import variations as var
+    key = jax.random.PRNGKey(seed)
+    r0 = jnp.full((256,), var.HRS_MEAN_OHM)
+    inc = jnp.zeros((256,), bool)
+    r = var.apply_c2c(key, r0, inc, VariationConfig())
+    dev = np.abs(np.asarray(r) / var.HRS_MEAN_OHM - 1.0)
+    assert dev.max() <= 0.05 + 1e-9

@@ -1,0 +1,281 @@
+"""Pallas kernel tests: shape/dtype sweeps + allclose against ref.py
+oracles, plus hypothesis property tests on the kernel invariants.
+
+All kernels run in interpret mode on CPU (the kernel bodies execute
+exactly; only the TPU lowering is skipped).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import imbue
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.kernels import ops, ref
+
+
+def _rand_problem(key, b, c, l, include_density=0.1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    lits = jax.random.bernoulli(k1, 0.5, (b, l)).astype(jnp.uint8)
+    inc = jax.random.bernoulli(k2, include_density, (c, l)).astype(jnp.uint8)
+    return lits, inc
+
+
+# ---------------------------------------------------------------- digital
+
+@pytest.mark.parametrize("b,c,l", [
+    (1, 1, 1),            # degenerate, all padding
+    (7, 5, 33),           # ragged, smaller than one tile
+    (128, 128, 512),      # exactly one tile
+    (130, 257, 1030),     # ragged, multiple tiles
+    (64, 24, 1568),       # MNIST-shaped clauses
+])
+def test_clause_eval_matches_ref_shapes(b, c, l):
+    lits, inc = _rand_problem(b * c + l, b, c, l)
+    got = ops.clause_eval(lits, inc)
+    want = ref.clause_eval_ref((1 - lits).astype(jnp.float32),
+                               inc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bt,ct,kt", [(128, 128, 512), (256, 128, 128),
+                                      (128, 256, 1024)])
+def test_clause_eval_block_shape_invariance(bt, ct, kt):
+    lits, inc = _rand_problem(3, 100, 200, 700)
+    got = ops.clause_eval(lits, inc, bt=bt, ct=ct, kt=kt)
+    want = ref.clause_eval_ref((1 - lits).astype(jnp.float32),
+                               inc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("in_dtype", [jnp.uint8, jnp.int8, jnp.int32,
+                                      jnp.float32])
+def test_clause_eval_dtypes(in_dtype):
+    lits, inc = _rand_problem(11, 32, 48, 96)
+    got = ops.clause_eval(lits.astype(in_dtype), inc.astype(in_dtype))
+    want = ref.clause_eval_ref((1 - lits).astype(jnp.float32),
+                               inc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,j", [(2, 4), (10, 20), (3, 2)])
+def test_tm_class_sums_matches_ref(m, j):
+    cfg = TMConfig(n_classes=m, clauses_per_class=j, n_features=50)
+    lits, inc = _rand_problem(m * j, 33, cfg.n_clauses, cfg.n_literals)
+    got = ops.tm_class_sums(lits, inc, cfg)
+    pol = ops.polarity_matrix(cfg, inc)[:, :m]
+    want = ref.tm_infer_ref((1 - lits).astype(jnp.float32),
+                            inc.astype(jnp.float32), pol)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+# ----------------------------------------------------------------- analog
+
+def _analog_problem(seed, b, cfg, vcfg=VariationConfig.nominal()):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.bernoulli(k1, 0.5, (b, cfg.n_features)).astype(jnp.uint8)
+    inc = jax.random.bernoulli(k2, 0.08,
+                               (cfg.n_clauses, cfg.n_literals))
+    xbar = imbue.program_crossbar(inc, k3, vcfg)
+    return x, xbar
+
+
+@pytest.mark.parametrize("b,m,j,f", [
+    (5, 2, 2, 16),
+    (33, 4, 6, 100),
+    (64, 10, 8, 784),      # MNIST-ish literal count (1568)
+])
+def test_imbue_kernel_matches_simulator(b, m, j, f):
+    cfg = TMConfig(n_classes=m, clauses_per_class=j, n_features=f)
+    x, xbar = _analog_problem(b + m + f, b, cfg)
+    from repro.core.tm import literals
+    got = ops.imbue_class_sums(literals(x), xbar, cfg)
+    want = imbue.analog_forward(xbar, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("kt", [32, 64, 256, 512])
+def test_imbue_kernel_column_blocking_invariance(kt):
+    cfg = TMConfig(n_classes=2, clauses_per_class=4, n_features=80)
+    x, xbar = _analog_problem(3, 17, cfg)
+    from repro.core.tm import literals
+    got = ops.imbue_class_sums(literals(x), xbar, cfg, kt=kt)
+    want = imbue.analog_forward(xbar, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_imbue_kernel_under_d2d_variation():
+    cfg = TMConfig(n_classes=3, clauses_per_class=4, n_features=64)
+    vcfg = VariationConfig(c2c=False, csa_offset=False)
+    x, xbar = _analog_problem(7, 21, cfg, vcfg)
+    from repro.core.tm import literals
+    got = ops.imbue_class_sums(literals(x), xbar, cfg)
+    want = imbue.analog_forward(xbar, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+def test_imbue_kernel_rejects_bad_block():
+    cfg = TMConfig(n_classes=2, clauses_per_class=2, n_features=8)
+    x, xbar = _analog_problem(1, 4, cfg)
+    from repro.core.tm import literals
+    with pytest.raises(ValueError):
+        ops.imbue_class_sums(literals(x), xbar, cfg, kt=48)  # not /32
+
+
+# ------------------------------------------------------------- properties
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 30), st.integers(1, 70),
+       st.integers(0, 2**31 - 1))
+def test_property_clause_eval_matches_ref(b, c, l, seed):
+    lits, inc = _rand_problem(seed, b, c, l, include_density=0.3)
+    got = ops.clause_eval(lits, inc)
+    want = ref.clause_eval_ref((1 - lits).astype(jnp.float32),
+                               inc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_clause_monotone_in_includes(seed):
+    """Removing includes can only turn clauses ON (fewer constraints)."""
+    lits, inc = _rand_problem(seed, 16, 8, 64, include_density=0.4)
+    k = jax.random.PRNGKey(seed ^ 0xABCDEF)
+    drop = jax.random.bernoulli(k, 0.5, inc.shape).astype(jnp.uint8)
+    fewer = inc * (1 - drop)
+    before = np.asarray(ops.clause_eval(lits, inc))
+    after = np.asarray(ops.clause_eval(lits, fewer))
+    assert (after >= before).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_all_ones_input_fires_everything(seed):
+    """Literals all 1 -> no violations -> every clause fires."""
+    _, inc = _rand_problem(seed, 4, 12, 33, include_density=0.5)
+    lits = jnp.ones((9, 33), jnp.uint8)
+    got = np.asarray(ops.clause_eval(lits, inc))
+    assert (got == 1).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_property_class_sums_bounded(m, jh, seed):
+    """|class sum| <= clauses_per_class / 2 (half each polarity)."""
+    cfg = TMConfig(n_classes=m, clauses_per_class=2 * jh, n_features=24)
+    lits, inc = _rand_problem(seed, 10, cfg.n_clauses, cfg.n_literals)
+    sums = np.asarray(ops.tm_class_sums(lits, inc, cfg))
+    assert (np.abs(sums) <= jh).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_property_analog_digital_agree_nominal(seed):
+    """At nominal conditions the crossbar IS the digital TM (paper §II)."""
+    cfg = TMConfig(n_classes=2, clauses_per_class=6, n_features=48)
+    x, xbar = _analog_problem(seed % 1000, 12, cfg)
+    from repro.core.tm import literals
+    analog = np.asarray(ops.imbue_class_sums(literals(x), xbar, cfg))
+    pol = ops.polarity_matrix(cfg, xbar.include)[:, :cfg.n_classes]
+    digital = np.asarray(ref.tm_infer_ref(
+        (1 - literals(x)).astype(jnp.float32),
+        xbar.include.astype(jnp.float32), pol))
+    np.testing.assert_allclose(analog, digital)
+
+
+# ------------------------------------------------------- flash attention
+
+def _sdpa_oracle(q, k, v, causal=True, window=0, cap=0.0):
+    import math
+    b, s, h, d = q.shape
+    sc = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) \
+        / math.sqrt(d)
+    if cap:
+        sc = cap * jnp.tanh(sc / cap)
+    qp = jnp.arange(s)[:, None]
+    kp = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask = qp >= kp
+    if window:
+        mask = mask & (qp - kp < window)
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, -1).astype(v.dtype)
+    return jnp.einsum("bhst,bthd->bshd", p, v)
+
+
+@pytest.mark.parametrize("s,h,d,causal,window,cap,bq,bk", [
+    (256, 3, 64, True, 0, 0.0, 128, 128),
+    (300, 2, 32, True, 0, 0.0, 128, 128),      # ragged seq
+    (256, 2, 64, True, 100, 0.0, 64, 64),      # local window
+    (256, 2, 128, True, 0, 50.0, 128, 128),    # gemma2 softcap
+    (256, 2, 64, False, 0, 0.0, 128, 128),     # bidirectional
+])
+def test_flash_attention_matches_oracle(s, h, d, causal, window, cap,
+                                        bq, bk):
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(s + h + d), 3)
+    q = jax.random.normal(ks[0], (2, s, h, d), jnp.float32)
+    k = jax.random.normal(ks[1], (2, s, h, d), jnp.float32)
+    v = jax.random.normal(ks[2], (2, s, h, d), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=cap, bq=bq, bk=bk)
+    want = _sdpa_oracle(q, k, v, causal, window, cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attention import flash_attention
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    got = flash_attention(q, k, v)
+    want = _sdpa_oracle(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 100, 0.0), (True, 0, 50.0), (False, 0, 0.0),
+])
+def test_flash_attention_backward_matches_oracle(causal, window, cap):
+    """The custom-VJP flash backward == jax.grad of the unfused oracle."""
+    from repro.kernels.flash_attention import flash_attention_trainable
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(ks[0], (2, 256, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.float32)
+    tgt = jax.random.normal(ks[3], (2, 256, 2, 64), jnp.float32)
+
+    def loss_flash(q, k, v):
+        return jnp.sum((flash_attention_trainable(
+            q, k, v, causal, window, cap) - tgt) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum((_sdpa_oracle(q, k, v, causal, window, cap)
+                        - tgt) ** 2)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=5e-4, rtol=5e-4)
+
+
+def test_flash_forward_fwd_and_trainable_agree():
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_trainable)
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 128, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 2, 32), jnp.float32)
+    a = flash_attention(q, k, v)
+    b = flash_attention_trainable(q, k, v)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)

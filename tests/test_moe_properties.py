@@ -1,0 +1,105 @@
+"""MoE dispatch/combine property tests (the §Perf iter-1..4 target)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, smoke
+from repro.models import moe as moe_mod
+from repro.models.config import MoEConfig, ModelConfig, LayerSpec
+
+
+def _cfg(e=4, k=2, cf=8.0, d=32, shared=0, dense=False):
+    return ModelConfig(
+        name="t", family="moe", n_layers=1, d_model=d, n_heads=2,
+        n_kv_heads=2, d_ff=4 * d, vocab_size=64,
+        block_pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(n_experts=e, top_k=k, d_ff_expert=2 * d,
+                      capacity_factor=cf, n_shared_experts=shared,
+                      dense_residual=dense),
+        param_dtype="float32", compute_dtype="float32")
+
+
+def test_moe_no_drops_at_high_capacity_matches_dense_gather():
+    """With capacity >> need, MoE == explicit per-token expert mix."""
+    cfg = _cfg(cf=16.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, aux = moe_mod.apply_moe(p, x, cfg)
+    assert float(aux["moe_drop_frac"]) == 0.0
+
+    # explicit reference: route every token through its top-k experts
+    logits = x @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, idx = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+
+    def expert(e_id, tok):
+        up = tok @ p["experts_up"][e_id]
+        gt = jax.nn.silu(tok @ p["experts_gate"][e_id])
+        return (gt * up) @ p["experts_down"][e_id]
+
+    want = np.zeros_like(np.asarray(y))
+    for b in range(2):
+        for s in range(16):
+            acc = 0
+            for kk in range(cfg.moe.top_k):
+                e_id = int(idx[b, s, kk])
+                acc = acc + float(gates[b, s, kk]) * np.asarray(
+                    expert(e_id, x[b, s]))
+            want[b, s] = acc
+    np.testing.assert_allclose(np.asarray(y), want, atol=1e-4)
+
+
+def test_moe_capacity_drops_reported():
+    cfg = _cfg(e=2, k=2, cf=0.5)     # starved capacity
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+    _, aux = moe_mod.apply_moe(p, x, cfg)
+    assert float(aux["moe_drop_frac"]) > 0.2
+
+
+def test_moe_shared_and_dense_paths_add():
+    cfg = _cfg(shared=1, dense=True, cf=8.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    assert "shared" in p and "dense" in p
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    y, _ = moe_mod.apply_moe(p, x, cfg)
+    # zeroing the shared+dense weights changes the output
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    p2["dense"] = jax.tree.map(jnp.zeros_like, p["dense"])
+    y2, _ = moe_mod.apply_moe(p2, x, cfg)
+    assert float(jnp.abs(y - y2).max()) > 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 3))
+def test_moe_gates_convex_and_capacity_respected(seed, e, k):
+    k = min(k, e)
+    cfg = _cfg(e=e, k=k, cf=1.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(seed % 1000), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 16, cfg.d_model))
+    y, aux = moe_mod.apply_moe(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert 0.0 <= float(aux["moe_drop_frac"]) <= 1.0
+    cap = moe_mod.expert_capacity(cfg, 16)
+    assert cap == int(np.ceil(k * 16 * 1.0 / e))
+
+
+def test_moe_aux_losses_positive_and_balanced_router():
+    cfg = _cfg(cf=8.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), cfg)
+    # uniform router -> aux loss at its theoretical minimum E * (1/E)^2 * E
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    _, aux = moe_mod.apply_moe(p, x, cfg)
+    e = cfg.moe.n_experts
+    want = e * (1.0 / e) * 1.0 * cfg.moe.aux_loss_weight
+    np.testing.assert_allclose(float(aux["moe_aux_loss"]), want,
+                               rtol=0.05)

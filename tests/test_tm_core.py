@@ -1,0 +1,110 @@
+"""Unit tests for the digital TM core (tm.py / tm_train.py / booleanize)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tm, tm_train
+from repro.core.booleanize import binarize, fit_quantile, fit_uniform
+from repro.core.tm import TMConfig
+from repro.data.tm_datasets import noisy_xor
+
+
+CFG = TMConfig(n_classes=2, clauses_per_class=4, n_features=6, n_states=50)
+
+
+def test_literals_layout():
+    x = jnp.array([[1, 0, 1]], dtype=jnp.uint8)
+    lits = tm.literals(x)
+    np.testing.assert_array_equal(np.asarray(lits), [[1, 0, 1, 0, 1, 0]])
+
+
+def test_init_state_on_boundary():
+    st = tm.init_ta_state(jax.random.PRNGKey(0), CFG)
+    assert st.shape == (CFG.n_clauses, CFG.n_literals)
+    assert int(st.min()) >= CFG.n_states
+    assert int(st.max()) <= CFG.n_states + 1
+
+
+def test_polarity_interleaved():
+    pol = np.asarray(tm.polarity(CFG))
+    assert pol.shape == (CFG.n_clauses,)
+    np.testing.assert_array_equal(pol[: CFG.clauses_per_class], [1, -1, 1, -1])
+
+
+def test_clause_outputs_manual():
+    # 1 clause, 2 features (4 literals). Include literal 0 (= feature 0).
+    cfg = TMConfig(n_classes=1, clauses_per_class=2, n_features=2)
+    state = jnp.full((2, 4), cfg.n_states, dtype=jnp.int16)
+    state = state.at[0, 0].set(cfg.n_states + 1)   # clause 0 includes f0
+    lits = tm.literals(jnp.array([[1, 0], [0, 0]], dtype=jnp.uint8))
+    out = tm.clause_outputs(state, lits, cfg, training=True)
+    # clause 0 fires iff f0 == 1; clause 1 is empty -> 1 in training.
+    np.testing.assert_array_equal(np.asarray(out), [[1, 1], [0, 1]])
+    out_inf = tm.clause_outputs(state, lits, cfg, training=False)
+    np.testing.assert_array_equal(np.asarray(out_inf), [[1, 0], [0, 0]])
+
+
+def test_class_sums_polarity():
+    cfg = TMConfig(n_classes=2, clauses_per_class=2, n_features=2)
+    clauses = jnp.array([[1, 1, 1, 0]], dtype=jnp.uint8)
+    sums = tm.class_sums(clauses, cfg)
+    np.testing.assert_array_equal(np.asarray(sums), [[0, 1]])
+
+
+def test_training_learns_xor():
+    key = jax.random.PRNGKey(0)
+    xtr, ytr, xte, yte = noisy_xor(key, n_train=3000, n_test=1000)
+    cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
+                   n_states=100, threshold=15, specificity=3.9)
+    ta = tm.init_ta_state(jax.random.PRNGKey(1), cfg)
+    ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                      epochs=60, batch_size=1500)
+    acc = float(tm.accuracy(ta, xte, yte, cfg))
+    assert acc >= 0.97, acc   # paper reports 99.2 on this benchmark
+
+
+def test_batch_parallel_training_learns_xor():
+    key = jax.random.PRNGKey(0)
+    xtr, ytr, xte, yte = noisy_xor(key, n_train=3000, n_test=1000)
+    cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
+                   n_states=100, threshold=15, specificity=3.9)
+    ta = tm.init_ta_state(jax.random.PRNGKey(1), cfg)
+    ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
+                      epochs=60, batch_size=64, parallel=True)
+    acc = float(tm.accuracy(ta, xte, yte, cfg))
+    assert acc >= 0.95, acc
+
+
+def test_state_bounds_preserved():
+    key = jax.random.PRNGKey(0)
+    xtr, ytr, *_ = noisy_xor(key, n_train=512, n_test=10)
+    ta = tm.init_ta_state(jax.random.PRNGKey(1), CFG)
+    x = xtr[:, : CFG.n_features]
+    ta = tm_train.train_step(ta, jax.random.PRNGKey(3), x, ytr, CFG)
+    assert int(ta.min()) >= 1 and int(ta.max()) <= 2 * CFG.n_states
+    ta2 = tm_train.train_step_batch(ta, jax.random.PRNGKey(4), x, ytr, CFG)
+    assert int(ta2.min()) >= 1 and int(ta2.max()) <= 2 * CFG.n_states
+
+
+def test_booleanizer_thermometer_monotone():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 5)).astype(np.float32)
+    for fit in (fit_quantile, fit_uniform):
+        b = fit(x, bits=4)
+        bits = np.asarray(b.transform(jnp.asarray(x)))
+        assert bits.shape == (200, 20)
+        folded = bits.reshape(200, 5, 4).astype(np.int32)
+        # thermometer: once a bit drops to 0, all later bits are 0
+        assert (np.diff(folded, axis=-1) <= 0).all()
+
+
+def test_binarize():
+    x = jnp.array([[0.2, 0.7]])
+    np.testing.assert_array_equal(np.asarray(binarize(x, 0.5)), [[0, 1]])
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        TMConfig(n_classes=2, clauses_per_class=3, n_features=4)
