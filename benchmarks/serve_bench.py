@@ -1,0 +1,157 @@
+"""Serving-engine benchmark: dynamic batching x replica-pool sweep.
+
+Measures the simulator's serving throughput/latency across
+(max-batch, replica-count) configurations and against the seed's
+per-request serial path (one kernel dispatch per request — what
+``launch/serve.py`` did before the engine existed).  Writes
+``BENCH_serve.json`` next to the repo root.
+
+Interpret-mode Pallas on CPU means absolute numbers are simulator
+figures, not hardware ones; the hardware figures of merit are reported
+separately by ``repro.serve.metrics.hardware_figures``.  The quantity
+that transfers is the *relative* win of batching: per-dispatch overhead
+is amortized over the bucket, exactly as a real accelerator amortizes
+launch + DMA cost.
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--requests 192]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.serve import BatcherConfig, EngineConfig, ServeEngine
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def make_model(key):
+    """Small trained-free TM (sparse random includes) — the bench measures
+    serving mechanics, not accuracy."""
+    cfg = TMConfig(n_classes=4, clauses_per_class=8, n_features=64,
+                   n_states=100)
+    inc = jax.random.bernoulli(key, 0.1, (cfg.n_clauses, cfg.n_literals))
+    ta = jnp.where(inc, cfg.n_states + 1, cfg.n_states).astype(
+        cfg.state_dtype)
+    return cfg, ta
+
+
+def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin"):
+    # CSA offset off so serving stays on the fused Pallas kernel path
+    # (the offset is only modeled by the jnp path; see EngineConfig).
+    return ServeEngine.from_ta_state(
+        ta, cfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
+        vcfg=VariationConfig(csa_offset=False),
+        ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(max_batch),
+                          routing=routing))
+
+
+def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing):
+    """Submit everything, then drain: batches cut at ``max_batch``."""
+    engine = make_engine(cfg, ta, max_batch=max_batch,
+                         n_replicas=n_replicas, routing=routing)
+    engine.submit_many([xs[0]] * max_batch)   # warm the kernel cache
+    engine.drain()
+    engine.metrics = type(engine.metrics)()
+    t0 = time.monotonic()
+    engine.submit_many(list(xs))
+    engine.drain()
+    wall = time.monotonic() - t0
+    out = engine.summary()
+    out["wall_s"] = wall
+    out["wall_throughput_rps"] = len(xs) / wall
+    out["max_batch"] = max_batch
+    return out
+
+
+def run_serial(cfg, ta, xs, *, n_replicas=1):
+    """The seed's per-request path: one dispatch per request."""
+    engine = make_engine(cfg, ta, max_batch=8, n_replicas=n_replicas)
+    engine.submit(xs[0])
+    engine.drain()                             # warm the bucket-8 kernel
+    engine.metrics = type(engine.metrics)()
+    t0 = time.monotonic()
+    for x in xs:
+        engine.submit(x)
+        engine.drain()                         # force: batch of 1, now
+    wall = time.monotonic() - t0
+    out = engine.summary()
+    out["wall_s"] = wall
+    out["wall_throughput_rps"] = len(xs) / wall
+    out["max_batch"] = 1
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=192,
+                    help="requests per batched configuration")
+    ap.add_argument("--serial-requests", type=int, default=48,
+                    help="requests for the serial baseline (slow path)")
+    ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    cfg, ta = make_model(jax.random.PRNGKey(0))
+    xs = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(1), 0.4,
+        (args.requests, cfg.n_features))).astype(np.uint8)
+
+    print("[serve_bench] serial baseline (per-request dispatch)...")
+    serial = run_serial(cfg, ta, xs[:args.serial_requests])
+    print(f"[serve_bench]   serial: "
+          f"{serial['wall_throughput_rps']:.1f} req/s")
+
+    sweep = []
+    for n_replicas in (1, 2, 4):
+        for max_batch in (8, 32, 64):
+            row = run_batched(cfg, ta, xs, max_batch=max_batch,
+                              n_replicas=n_replicas,
+                              routing="round_robin")
+            row["speedup_vs_serial"] = (row["wall_throughput_rps"]
+                                        / serial["wall_throughput_rps"])
+            sweep.append(row)
+            print(f"[serve_bench]   R={n_replicas} batch={max_batch}: "
+                  f"{row['wall_throughput_rps']:.1f} req/s "
+                  f"({row['speedup_vs_serial']:.1f}x serial), "
+                  f"p99 {row['p99_ms']:.1f} ms")
+    ens = run_batched(cfg, ta, xs, max_batch=64, n_replicas=4,
+                      routing="ensemble")
+    ens["speedup_vs_serial"] = (ens["wall_throughput_rps"]
+                                / serial["wall_throughput_rps"])
+    print(f"[serve_bench]   ensemble R=4 batch=64: "
+          f"{ens['wall_throughput_rps']:.1f} req/s")
+
+    at64 = [r for r in sweep
+            if r["max_batch"] == 64 and r["n_replicas"] == 1]
+    speedup64 = at64[0]["speedup_vs_serial"]
+    report = {
+        "model": {"n_clauses": cfg.n_clauses,
+                  "n_literals": cfg.n_literals,
+                  "n_classes": cfg.n_classes},
+        "backend": jax.default_backend(),
+        "requests": args.requests,
+        "serial_baseline": serial,
+        "sweep": sweep,
+        "ensemble": ens,
+        "speedup_batch64_vs_serial": speedup64,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2, default=str)
+    print(f"[serve_bench] wrote {args.out}")
+    print(f"[serve_bench] dynamic batching at 64: "
+          f"{speedup64:.1f}x the serial path "
+          f"({'PASS' if speedup64 >= 1.5 else 'FAIL'} >= 1.5x)")
+    return report
+
+
+if __name__ == "__main__":
+    main()

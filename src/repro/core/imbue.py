@@ -89,19 +89,53 @@ def program_crossbar(
         cfg=cfg)
 
 
+def conductances(
+    r_mem: jax.Array,                 # [..., C, L] programmed resistance (Ω)
+    include: jax.Array,               # [C, L] bool TA actions
+    cfg: IMBUEConfig,
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+):
+    """Per-cell on-path conductance and leak current for one read cycle.
+
+    Array-level twin of :func:`cell_conductances` so replica stacks
+    ``[R, C, L]`` can vmap over device draws without materializing one
+    ``ProgrammedCrossbar`` per replica.
+    """
+    r = r_mem
+    if key is not None:
+        r = var.apply_c2c(key, r, include, vcfg)
+    g_on = 1.0 / (cfg.series_factor * r)                    # [..., C, L] S
+    # Leak at literal '1' scales with 1/R around the Table I operating point.
+    i_leak_nom = jnp.where(include, var.I_LEAK_INCLUDE,
+                           var.I_LEAK_EXCLUDE)
+    r_nom = jnp.where(include, var.LRS_MEAN_OHM, var.HRS_MEAN_OHM)
+    i_leak = i_leak_nom * (r_nom / r)
+    return g_on, i_leak
+
+
 def cell_conductances(xbar: ProgrammedCrossbar, key: Optional[jax.Array],
                       vcfg: var.VariationConfig):
     """Per-cell on-path conductance and leak current for this read cycle."""
-    r = xbar.r_mem
-    if key is not None:
-        r = var.apply_c2c(key, r, xbar.include, vcfg)
-    g_on = 1.0 / (xbar.cfg.series_factor * r)               # [C, L] siemens
-    # Leak at literal '1' scales with 1/R around the Table I operating point.
-    i_leak_nom = jnp.where(xbar.include, var.I_LEAK_INCLUDE,
-                           var.I_LEAK_EXCLUDE)
-    r_nom = jnp.where(xbar.include, var.LRS_MEAN_OHM, var.HRS_MEAN_OHM)
-    i_leak = i_leak_nom * (r_nom / r)
-    return g_on, i_leak
+    return conductances(xbar.r_mem, xbar.include, xbar.cfg, key, vcfg)
+
+
+def column_currents_raw(
+    g_on: jax.Array,                  # [C, L] on-path conductance (S)
+    i_leak: jax.Array,                # [C, L] leak current (A)
+    lits: jax.Array,                  # [B, L] uint8
+    mapping: CrossbarMapping,
+    cfg: IMBUEConfig,
+) -> jax.Array:
+    """KCL column currents ``[B, C, columns_per_clause]`` (amps)."""
+    lit0 = pad_to_columns((1 - lits).astype(jnp.float32) * cfg.v_read,
+                          mapping)                            # [B, K, W] volts
+    lit1 = pad_to_columns(lits.astype(jnp.float32), mapping)  # [B, K, W]
+    g_on_f = pad_to_columns(g_on, mapping)                    # [C, K, W]
+    i_leak_f = pad_to_columns(i_leak, mapping)
+    on = jnp.einsum("bkw,ckw->bck", lit0, g_on_f)
+    leak = jnp.einsum("bkw,ckw->bck", lit1, i_leak_f)
+    return on + leak
 
 
 def column_currents(
@@ -112,15 +146,7 @@ def column_currents(
 ) -> jax.Array:
     """KCL column currents ``[B, C, columns_per_clause]`` (amps)."""
     g_on, i_leak = cell_conductances(xbar, key, vcfg)
-    m = xbar.mapping
-    lit0 = pad_to_columns((1 - lits).astype(jnp.float32) * xbar.cfg.v_read,
-                          m)                                  # [B, K, W] volts
-    lit1 = pad_to_columns(lits.astype(jnp.float32), m)        # [B, K, W]
-    g_on_f = pad_to_columns(g_on, m)                          # [C, K, W]
-    i_leak_f = pad_to_columns(i_leak, m)
-    on = jnp.einsum("bkw,ckw->bck", lit0, g_on_f)
-    leak = jnp.einsum("bkw,ckw->bck", lit1, i_leak_f)
-    return on + leak
+    return column_currents_raw(g_on, i_leak, lits, xbar.mapping, xbar.cfg)
 
 
 def csa_sense(
@@ -137,6 +163,26 @@ def csa_sense(
     return (v_col < v_ref + off).astype(jnp.uint8)
 
 
+def analog_clause_outputs_raw(
+    r_mem: jax.Array,                 # [C, L] programmed resistance (Ω)
+    include: jax.Array,               # [C, L] bool
+    lits: jax.Array,                  # [B, L]
+    mapping: CrossbarMapping,
+    cfg: IMBUEConfig,
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+) -> jax.Array:
+    """Clause outputs ``[B, C]`` from raw device arrays (vmap-friendly)."""
+    if key is not None:
+        k_c2c, k_csa = jax.random.split(key)
+    else:
+        k_c2c = k_csa = None
+    g_on, i_leak = conductances(r_mem, include, cfg, k_c2c, vcfg)
+    i_col = column_currents_raw(g_on, i_leak, lits, mapping, cfg)
+    partial = csa_sense(i_col, cfg, k_csa, vcfg)              # [B, C, K]
+    return jnp.min(partial, axis=-1)                          # AND over cols
+
+
 def analog_clause_outputs(
     xbar: ProgrammedCrossbar,
     lits: jax.Array,                  # [B, L]
@@ -144,13 +190,8 @@ def analog_clause_outputs(
     vcfg: var.VariationConfig = var.VariationConfig(),
 ) -> jax.Array:
     """Full clause outputs ``[B, C]`` via partial-clause AND (Fig. 4b)."""
-    if key is not None:
-        k_c2c, k_csa = jax.random.split(key)
-    else:
-        k_c2c = k_csa = None
-    i_col = column_currents(xbar, lits, k_c2c, vcfg)
-    partial = csa_sense(i_col, xbar.cfg, k_csa, vcfg)         # [B, C, K]
-    return jnp.min(partial, axis=-1)                          # AND over cols
+    return analog_clause_outputs_raw(xbar.r_mem, xbar.include, lits,
+                                     xbar.mapping, xbar.cfg, key, vcfg)
 
 
 def analog_forward(
@@ -172,6 +213,66 @@ def analog_forward(
 def analog_predict(xbar, x, tm_cfg, key=None,
                    vcfg: var.VariationConfig = var.VariationConfig()):
     return jnp.argmax(analog_forward(xbar, x, tm_cfg, key, vcfg), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Replica stacks (multi-chip deployments / ensemble serving)
+# --------------------------------------------------------------------------
+
+def program_replica_stack(
+    ta_include: jax.Array,             # [C, L] bool include mask
+    key: jax.Array,
+    n_replicas: int,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+) -> jax.Array:
+    """Program ``R`` independent chips: stacked resistances ``[R, C, L]``.
+
+    Each replica gets its own D2D draw — the physical model of programming
+    the same trained TM into R distinct crossbars (one per serving chip).
+    """
+    keys = jax.random.split(key, n_replicas)
+    return jax.vmap(
+        lambda k: var.sample_device_resistance(k, ta_include, vcfg))(keys)
+
+
+@partial(jax.jit, static_argnames=("tm_cfg", "vcfg", "cfg"))
+def stacked_clause_outputs(
+    r_stack: jax.Array,                # [R, C, L] per-replica resistance
+    include: jax.Array,                # [C, L] bool (shared TA actions)
+    lits: jax.Array,                   # [B, L]
+    tm_cfg: TMConfig,
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+    cfg: IMBUEConfig = IMBUEConfig(),
+) -> jax.Array:
+    """Clause outputs ``[R, B, C]``, fresh C2C+CSA noise per replica."""
+    c, l = include.shape
+    mapping = CrossbarMapping(n_clauses=c, n_literals=l, width=cfg.width)
+    if key is None:
+        return jax.vmap(lambda r: analog_clause_outputs_raw(
+            r, include, lits, mapping, cfg, None, vcfg))(r_stack)
+    keys = jax.random.split(key, r_stack.shape[0])
+    return jax.vmap(lambda r, k: analog_clause_outputs_raw(
+        r, include, lits, mapping, cfg, k, vcfg))(r_stack, keys)
+
+
+@partial(jax.jit, static_argnames=("tm_cfg", "vcfg", "cfg"))
+def stacked_class_sums(
+    r_stack: jax.Array,                # [R, C, L]
+    include: jax.Array,                # [C, L] bool
+    x: jax.Array,                      # [B, F] raw Boolean features
+    tm_cfg: TMConfig,
+    key: Optional[jax.Array] = None,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+    cfg: IMBUEConfig = IMBUEConfig(),
+) -> jax.Array:
+    """Per-replica class sums ``[R, B, M]`` (the stacked analog forward)."""
+    lits = literals(x)
+    cls = stacked_clause_outputs(r_stack, include, lits, tm_cfg, key,
+                                 vcfg, cfg)                    # [R, B, C]
+    nonempty = include.any(axis=-1)                            # [C]
+    cls = cls * nonempty[None, None, :].astype(cls.dtype)
+    return class_sums(cls, tm_cfg)
 
 
 # --------------------------------------------------------------------------

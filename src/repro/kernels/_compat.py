@@ -1,0 +1,12 @@
+"""Pallas API compatibility shims shared by the kernel modules."""
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax 0.4.x names this TPUCompilerParams; 0.5+ renamed it.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; update repro.kernels._compat for this jax "
+        "version")

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def clause_eval_kernel(lit0_ref, inc_t_ref, out_ref, acc_ref):
     """One (b, c, k) grid step of the violation matmul + threshold."""
@@ -84,7 +86,7 @@ def clause_eval_call(lit0, inc_t, *, bt, ct, kt, interpret):
         out_specs=pl.BlockSpec((bt, ct), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(lit0, inc_t)
@@ -107,7 +109,7 @@ def tm_infer_call(lit0, inc_t, pol, *, bt, ct, kt, interpret):
         out_specs=pl.BlockSpec((bt, m), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(lit0, inc_t, pol)

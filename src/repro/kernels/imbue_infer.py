@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams as _CompilerParams
+
 
 def imbue_infer_kernel(i_ref_ref, v_drive_ref, lit1_ref, g_t_ref, leak_t_ref,
                        pol_ref, out_ref, and_ref, *, width, cols_per_block):
@@ -87,7 +89,7 @@ def imbue_infer_call(v_drive, lit1, g_t, leak_t, pol, v_ref, *,
         out_specs=pl.BlockSpec((bt, m), lambda i, j, k: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray([v_ref / r_div], dtype=jnp.float32), v_drive, lit1, g_t,

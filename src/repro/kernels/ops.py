@@ -134,3 +134,40 @@ def imbue_class_sums(lits: jax.Array, xbar, cfg: TMConfig, *,
         lits, g_on, i_leak, xbar.include,
         xbar.cfg.v_read, xbar.cfg.r_divider, xbar.cfg.reference_voltage(),
         cfg, width=xbar.cfg.width, **tiles)
+
+
+def imbue_class_sums_stacked(
+    lits: jax.Array,          # [B, L] uint8
+    r_stack: jax.Array,       # [R, C, L] per-replica programmed resistance
+    include: jax.Array,       # [C, L] bool (shared TA actions)
+    icfg,                     # IMBUEConfig
+    cfg: TMConfig,
+    *,
+    key: jax.Array | None = None,
+    vcfg=None,
+    **tiles,
+) -> jax.Array:
+    """Fused analog inference over a replica stack -> ``[R, B, M]``.
+
+    Each replica re-runs the kernel with its own conductances and fresh
+    C2C noise (one read cycle per chip).  The kernel thresholds against
+    a fixed scalar reference, so the per-column CSA offset is NOT
+    modeled here — use the vmapped jnp path
+    (``core.imbue.stacked_class_sums``) when ``vcfg.csa_offset`` is on.
+    The host loop reuses the single compiled kernel (identical shapes
+    across replicas).
+    """
+    from repro.core.imbue import conductances
+    from repro.core.variations import VariationConfig
+    vcfg = vcfg or VariationConfig.nominal()
+    n_replicas = r_stack.shape[0]
+    keys = (jax.random.split(key, n_replicas) if key is not None
+            else [None] * n_replicas)
+    out = [
+        imbue_class_sums_raw(
+            lits, *conductances(r_stack[i], include, icfg, keys[i], vcfg),
+            include, icfg.v_read, icfg.r_divider, icfg.reference_voltage(),
+            cfg, width=icfg.width, **tiles)
+        for i in range(n_replicas)
+    ]
+    return jnp.stack(out)

@@ -37,7 +37,7 @@ from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402
 from repro.models import transformer as tf  # noqa: E402
 from repro.optim.optimizers import OptimizerConfig, make_optimizer  # noqa: E402
 from repro.roofline.analysis import (analyze_compiled,  # noqa: E402
-                                     collective_bytes)
+                                     collective_bytes, xla_cost_dict)
 from repro.train.train_step import make_train_step  # noqa: E402
 
 
@@ -119,7 +119,7 @@ def lower_cell(arch: str, shape: str, mesh, *, verbose=True):
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = xla_cost_dict(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     rec = analyze_compiled(arch, shape, mesh, cfg, compiled, cost, mem,
                            coll)

@@ -1,44 +1,62 @@
-"""IMBUE inference serving driver: batched requests through the fused
-analog pipeline.
+"""IMBUE inference serving CLI: a thin front-end over ``repro.serve``.
 
-The paper's deployment model is inference serving: a trained TM is
-programmed once into the crossbar, then datapoints stream through the
-Boolean-to-Current path.  This driver simulates that service:
+Trains (or random-initializes) a TM, programs a replica pool of
+crossbars, then streams individual requests through the dynamic-batching
+engine — the deployment model of the paper (program once, read forever),
+scaled out to R chips.  Reports the engine's latency/throughput metrics
+alongside the crossbar's hardware figures of merit.
 
-  * trains (or restores) a TM, programs a crossbar with D2D draws;
-  * a request generator produces Poisson-ish batches;
-  * each batch runs through the fused IMBUE kernel (Pallas, interpret
-    on CPU) under fresh C2C + CSA noise per cycle;
-  * reports latency percentiles, throughput, and the paper's energy
-    metrics per request.
-
-  PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 64
+  PYTHONPATH=src python -m repro.launch.serve --requests 256 --replicas 4
+  PYTHONPATH=src python -m repro.launch.serve --routing ensemble
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, imbue, tm, tm_train
-from repro.core.mapping import csa_count_packed
+from repro.core import tm, tm_train
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
 from repro.data.tm_datasets import synthetic_image_dataset
-from repro.kernels import ops
+from repro.serve import BatcherConfig, EngineConfig, ServeEngine
+
+
+def build_engine(args, cfg: TMConfig, ta: jax.Array) -> ServeEngine:
+    vcfg = (VariationConfig.nominal() if args.nominal
+            else VariationConfig())
+    ecfg = EngineConfig(
+        batcher=BatcherConfig.for_max_batch(
+            args.batch, max_wait_s=args.max_wait_ms * 1e-3),
+        routing=args.routing)
+    return ServeEngine.from_ta_state(
+        ta, cfg, n_replicas=args.replicas, key=jax.random.PRNGKey(3),
+        vcfg=vcfg, ecfg=ecfg)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=64,
+                    help="max dynamic batch (largest kernel bucket)")
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--routing", default="round_robin",
+                    choices=("round_robin", "least_loaded", "ensemble"))
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--epochs", type=int, default=6)
-    ap.add_argument("--analog", action="store_true", default=True)
+    ap.add_argument("--nominal", action="store_true",
+                    help="disable D2D/C2C/CSA variation")
+    ap.add_argument("--json", action="store_true",
+                    help="dump the summary as JSON")
     args = ap.parse_args(argv)
+    if args.batch % 8 or args.batch > 128:
+        ap.error("--batch must be a multiple of 8, at most 128 "
+                 "(Pallas batch-tile buckets)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
 
     cfg = TMConfig(n_classes=10, clauses_per_class=20, n_features=784,
                    n_states=127, threshold=15, specificity=5.0)
@@ -49,57 +67,47 @@ def main(argv=None):
     ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
                       epochs=args.epochs, batch_size=200, parallel=True)
     stats = tm.include_stats(ta, cfg)
-    print(f"[serve] accuracy {float(tm.accuracy(ta, xte, yte, cfg)):.3f},"
-          f" includes {stats['include_pct']:.2f}%")
+    print(f"[serve] digital accuracy "
+          f"{float(tm.accuracy(ta, xte, yte, cfg)):.3f}, "
+          f"includes {stats['include_pct']:.2f}%")
 
-    vcfg = VariationConfig()
-    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
-                                  jax.random.PRNGKey(3), vcfg)
-    print(f"[serve] crossbar programmed (one-time "
-          f"{energy.programming_energy(stats['includes'], cfg.n_ta)*1e9:.1f}"
-          f" nJ)")
+    engine = build_engine(args, cfg, ta)
+    print(f"[serve] pool of {args.replicas} crossbars programmed, "
+          f"routing={args.routing}")
 
-    # energy model per datapoint (the analog service's figure of merit)
-    csas = csa_count_packed(cfg.n_ta)
-    e_dp = energy.imbue_energy_per_datapoint(stats["includes"], cfg.n_ta,
-                                             csas).total_j
-    lat_hw = energy.inference_latency_s(csas)
-
-    @jax.jit
-    def serve_batch(lits, key):
-        from repro.core.imbue import cell_conductances
-        g_on, i_leak = cell_conductances(xbar, key, vcfg)
-        return ops.imbue_class_sums_raw(
-            lits, g_on, i_leak, xbar.include, xbar.cfg.v_read,
-            xbar.cfg.r_divider, xbar.cfg.reference_voltage(), cfg)
-
-    key = jax.random.PRNGKey(4)
-    lats, correct, total = [], 0, 0
+    # Stream individual requests; pump as they queue (the engine cuts a
+    # batch when a bucket fills or the oldest request times out).
     rng = np.random.default_rng(0)
-    warm = tm.literals(xte[:args.batch])
-    serve_batch(warm, key).block_until_ready()       # compile once
-    t_start = time.time()
-    for r in range(args.requests):
-        idx = rng.integers(0, xte.shape[0], size=args.batch)
-        lits = tm.literals(xte[idx])
-        key, kc = jax.random.split(key)
-        t0 = time.time()
-        sums = serve_batch(lits, kc)
-        sums.block_until_ready()
-        lats.append(time.time() - t0)
-        pred = np.asarray(sums).argmax(-1)
-        correct += int((pred == np.asarray(yte)[idx].astype(int)).sum())
-        total += args.batch
-    wall = time.time() - t_start
-    lats_ms = np.sort(np.array(lats)) * 1e3
-    print(f"[serve] {args.requests} requests x {args.batch}: "
-          f"acc {correct / total:.3f}")
-    print(f"[serve] sim latency p50/p95/p99: {lats_ms[len(lats_ms)//2]:.1f}"
-          f"/{lats_ms[int(len(lats_ms)*0.95)]:.1f}"
-          f"/{lats_ms[-1]:.1f} ms; {total / wall:.0f} inf/s (CPU interp)")
-    print(f"[serve] crossbar figures: {lat_hw*1e9:.0f} ns/datapoint, "
-          f"{e_dp*1e9:.3f} nJ/datapoint, "
-          f"{energy.top_j_inv(cfg.n_ta, e_dp):.0f} TopJ^-1")
+    xte_np = np.asarray(xte, dtype=np.uint8)
+    yte_np = np.asarray(yte).astype(int)
+    idx = rng.integers(0, xte_np.shape[0], size=args.requests)
+    for i in idx:
+        engine.submit(xte_np[i])
+        engine.pump()
+    responses = engine.drain()
+
+    correct = sum(int(r.pred == yte_np[i])
+                  for r, i in zip(responses, idx))
+    summary = engine.summary(includes=stats["includes"])
+    summary["analog_accuracy"] = correct / len(responses)
+
+    if args.json:
+        print(json.dumps(summary, indent=2))
+        return summary
+    hw = summary["hardware"]
+    print(f"[serve] {summary['requests']} requests in "
+          f"{summary['batches']} batches (mean {summary['mean_batch']:.1f}"
+          f"/batch, {100 * summary['padding_overhead']:.1f}% padding): "
+          f"analog acc {summary['analog_accuracy']:.3f}")
+    print(f"[serve] sim latency p50/p95/p99: {summary['p50_ms']:.1f}/"
+          f"{summary['p95_ms']:.1f}/{summary['p99_ms']:.1f} ms; "
+          f"{summary['throughput_rps']:.0f} inf/s (CPU interp); "
+          f"replica rows {summary['replica_load_rows']}")
+    print(f"[serve] crossbar figures: {hw['latency_ns']:.0f} ns/datapoint, "
+          f"{hw['energy_nj_per_dp']:.3f} nJ/datapoint, "
+          f"{hw['top_j_inv']:.0f} TopJ^-1, pool "
+          f"{hw['pool_throughput_dps']:.2e} dp/s")
+    return summary
 
 
 if __name__ == "__main__":

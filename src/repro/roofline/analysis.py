@@ -46,6 +46,17 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def xla_cost_dict(cost):
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    jax <= 0.4.x returns a single-element list of dicts; newer releases
+    return the dict directly.  Returns a dict or None.
+    """
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else None
+    return cost
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     bpe = _DTYPE_BYTES.get(dtype)
     if bpe is None:

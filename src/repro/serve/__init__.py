@@ -1,0 +1,26 @@
+"""IMBUE serving subsystem: dynamic batching over a crossbar replica pool.
+
+Layers (see each module's docstring):
+
+* ``batching``  — deadline-aware request batching, padded/bucketed to the
+  Pallas kernel tile shapes;
+* ``replica``   — R independently programmed crossbars with routing and
+  ensemble voting;
+* ``engine``    — the request -> batch -> kernel -> response loop;
+* ``metrics``   — simulated latency/throughput + the paper's energy
+  figures of merit.
+"""
+
+from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
+from repro.serve.engine import ENSEMBLE, EngineConfig, Response, ServeEngine
+from repro.serve.metrics import (RequestRecord, ServeMetrics,
+                                 hardware_figures)
+from repro.serve.replica import (ReplicaPool, ensemble_vote,
+                                 program_replica_pool)
+
+__all__ = [
+    "Batch", "BatcherConfig", "DynamicBatcher", "Request",
+    "ENSEMBLE", "EngineConfig", "Response", "ServeEngine",
+    "RequestRecord", "ServeMetrics", "hardware_figures",
+    "ReplicaPool", "ensemble_vote", "program_replica_pool",
+]

@@ -1,0 +1,134 @@
+"""Deadline-aware dynamic batching for the IMBUE serving engine.
+
+Individual requests queue up; a batch is cut when either (a) enough
+requests are waiting to fill the largest bucket, or (b) the oldest
+request's batching deadline expires.  Cut batches are padded up to the
+smallest *bucket* that fits — buckets are the Pallas batch-tile sizes
+(multiples of the f32 sublane count, capped at the ``BT = 128`` MXU tile
+of ``kernels/imbue_infer.py``) so every bucket maps to a compiled kernel
+shape and the jit cache stays bounded at ``len(bucket_sizes)`` entries
+per replica-role.
+
+Padding rows replay the first request's features (any valid Boolean row
+works — pad results are discarded on unpad); request -> response pairing
+is by request id, and FIFO order is preserved within and across batches.
+"""
+
+from __future__ import annotations
+
+import bisect
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    """Knobs for the dynamic batcher."""
+
+    max_batch: int = 128                # largest bucket == Pallas BT tile
+    max_wait_s: float = 2e-3            # batching deadline for oldest request
+    bucket_sizes: Tuple[int, ...] = (8, 16, 32, 64, 128)
+
+    def __post_init__(self):
+        sizes = tuple(sorted(self.bucket_sizes))
+        object.__setattr__(self, "bucket_sizes", sizes)
+        if not sizes:
+            raise ValueError("need at least one bucket size")
+        if sizes[-1] != self.max_batch:
+            raise ValueError(
+                f"largest bucket {sizes[-1]} must equal max_batch "
+                f"{self.max_batch}")
+        if any(s % 8 for s in sizes):
+            raise ValueError("bucket sizes must be multiples of the f32 "
+                             "sublane count (8) for TPU tiling")
+
+    @classmethod
+    def for_max_batch(cls, max_batch: int, **kw) -> "BatcherConfig":
+        """Standard tile buckets up to ``max_batch`` (itself the top
+        bucket, so any multiple of 8 up to 128 is a valid max)."""
+        buckets = tuple(b for b in (8, 16, 32, 64, 128) if b < max_batch)
+        return cls(max_batch=max_batch,
+                   bucket_sizes=buckets + (max_batch,), **kw)
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket holding ``n`` requests."""
+        i = bisect.bisect_left(self.bucket_sizes, n)
+        if i == len(self.bucket_sizes):
+            raise ValueError(f"batch of {n} exceeds max_batch "
+                             f"{self.max_batch}")
+        return self.bucket_sizes[i]
+
+
+@dataclasses.dataclass
+class Request:
+    """One queued inference request."""
+
+    rid: int
+    x: np.ndarray                       # [F] uint8 Boolean features
+    t_enqueue: float
+    deadline: float                     # absolute batching deadline
+
+
+@dataclasses.dataclass
+class Batch:
+    """A cut batch, padded to a bucketed kernel shape."""
+
+    requests: List[Request]
+    x: np.ndarray                       # [bucket, F] uint8
+    bucket: int
+
+    @property
+    def n_valid(self) -> int:
+        return len(self.requests)
+
+    @property
+    def n_padding(self) -> int:
+        return self.bucket - len(self.requests)
+
+
+class DynamicBatcher:
+    """FIFO request queue with deadline/size-triggered batch cutting."""
+
+    def __init__(self, cfg: BatcherConfig = BatcherConfig()):
+        self.cfg = cfg
+        self._queue: Deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, rid: int, x: np.ndarray, now: float) -> Request:
+        req = Request(rid=rid, x=np.asarray(x, dtype=np.uint8),
+                      t_enqueue=now, deadline=now + self.cfg.max_wait_s)
+        self._queue.append(req)
+        return req
+
+    def ready(self, now: float) -> bool:
+        """A batch should be cut: the largest bucket is full, or the
+        oldest queued request has hit its batching deadline."""
+        if not self._queue:
+            return False
+        return (len(self._queue) >= self.cfg.max_batch
+                or now >= self._queue[0].deadline)
+
+    def next_deadline(self) -> Optional[float]:
+        return self._queue[0].deadline if self._queue else None
+
+    def cut(self, now: float, force: bool = False) -> Optional[Batch]:
+        """Pop up to ``max_batch`` requests (FIFO) into a padded batch."""
+        if not self._queue or not (force or self.ready(now)):
+            return None
+        take = min(len(self._queue), self.cfg.max_batch)
+        reqs = [self._queue.popleft() for _ in range(take)]
+        return self.pad(reqs)
+
+    def pad(self, reqs: Sequence[Request]) -> Batch:
+        bucket = self.cfg.bucket_for(len(reqs))
+        x = np.stack([r.x for r in reqs])
+        if bucket > len(reqs):
+            fill = np.broadcast_to(x[0], (bucket - len(reqs), x.shape[1]))
+            x = np.concatenate([x, fill], axis=0)
+        return Batch(requests=list(reqs), x=np.ascontiguousarray(x),
+                     bucket=bucket)

@@ -1,0 +1,222 @@
+"""The IMBUE serving engine: requests in, deadline-batched analog reads out.
+
+Layering (ISSUE: serving subsystem):
+
+  submit() -> DynamicBatcher (pad/bucket to Pallas tile shapes)
+           -> ReplicaPool routing (round-robin / least-loaded / ensemble)
+           -> fused Pallas kernel (``ops.imbue_class_sums_raw``; interpret
+              mode off-TPU) or the vmapped jnp path, with one fresh
+              C2C + CSA-noise key per read cycle
+           -> Response records + ServeMetrics accounting.
+
+The engine is synchronous and single-threaded by design: ``pump()`` cuts
+and dispatches every due batch, so callers drive it from their own event
+loop (the CLI in ``launch/serve.py``), a benchmark harness, or tests.
+An injectable ``clock`` makes deadline behaviour fully deterministic
+under test.  Every analog read draws its noise from one engine-owned
+PRNG key, so a fixed seed gives bit-reproducible serving traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imbue, tm
+from repro.core.imbue import IMBUEConfig
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.kernels import ops
+from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher
+from repro.serve.metrics import RequestRecord, ServeMetrics, hardware_figures
+from repro.serve.replica import ReplicaPool, ensemble_vote, \
+    program_replica_pool
+
+ENSEMBLE = -1      # Response.replica value when every chip voted
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Serving policy knobs."""
+
+    batcher: BatcherConfig = BatcherConfig()
+    routing: str = "round_robin"     # round_robin | least_loaded | ensemble
+    ensemble_mode: str = "majority"  # majority | sum (see ensemble_vote)
+    # Fused Pallas kernel vs vmapped jnp forward.  The kernel senses
+    # against a fixed reference, so it models C2C noise but not the
+    # per-column CSA offset; when the pool's VariationConfig enables
+    # csa_offset the engine falls back to the jnp path, which models it.
+    use_kernel: bool = True
+    interpret: Optional[bool] = None  # None -> interpret off-TPU
+
+
+@dataclasses.dataclass
+class Response:
+    """One served prediction."""
+
+    rid: int
+    pred: int
+    class_sums: np.ndarray           # [M] (summed over chips in ensemble)
+    replica: int                     # serving chip, or ENSEMBLE
+    latency_s: float
+
+
+class ServeEngine:
+    """Dynamic-batching inference engine over a crossbar replica pool."""
+
+    def __init__(
+        self,
+        pool: ReplicaPool,
+        tm_cfg: TMConfig,
+        ecfg: EngineConfig = EngineConfig(),
+        *,
+        key: jax.Array | None = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.pool = pool
+        self.tm_cfg = tm_cfg
+        self.ecfg = ecfg
+        self.clock = clock
+        self.batcher = DynamicBatcher(ecfg.batcher)
+        self.metrics = ServeMetrics()
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._noise_free = not (pool.vcfg.c2c or pool.vcfg.csa_offset)
+        self._next_rid = 0
+        self._submitted: List[int] = []
+        self._results: Dict[int, Response] = {}
+
+    @classmethod
+    def from_ta_state(
+        cls,
+        ta_state: jax.Array,
+        tm_cfg: TMConfig,
+        *,
+        n_replicas: int = 1,
+        key: jax.Array | None = None,
+        vcfg: VariationConfig = VariationConfig(),
+        icfg: IMBUEConfig = IMBUEConfig(),
+        ecfg: EngineConfig = EngineConfig(),
+        clock: Callable[[], float] = time.monotonic,
+    ) -> "ServeEngine":
+        """Program a fresh pool from trained TA state and wrap an engine."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        k_prog, k_serve = jax.random.split(key)
+        pool = program_replica_pool(tm.include_mask(ta_state, tm_cfg),
+                                    k_prog, n_replicas, vcfg, icfg)
+        return cls(pool, tm_cfg, ecfg, key=k_serve, clock=clock)
+
+    # --------------------------------------------------------------- intake
+
+    def submit(self, x: np.ndarray) -> int:
+        """Queue one request (``[F]`` Boolean features); returns its id."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self.batcher.submit(rid, x, self.clock())
+        self._submitted.append(rid)
+        return rid
+
+    def submit_many(self, xs: Sequence[np.ndarray]) -> List[int]:
+        return [self.submit(x) for x in xs]
+
+    # ------------------------------------------------------------- serving
+
+    def pump(self, force: bool = False) -> int:
+        """Cut and dispatch every due batch; returns #requests served."""
+        served = 0
+        while True:
+            batch = self.batcher.cut(self.clock(), force=force)
+            if batch is None:
+                return served
+            self._dispatch(batch)
+            served += batch.n_valid
+
+    def drain(self) -> List[Response]:
+        """Force-serve everything queued; responses in submission order."""
+        self.pump(force=True)
+        return [self._results[rid] for rid in self._submitted
+                if rid in self._results]
+
+    def result(self, rid: int) -> Optional[Response]:
+        return self._results.get(rid)
+
+    # ------------------------------------------------------------ dispatch
+
+    def _read_key(self) -> Optional[jax.Array]:
+        """Fresh noise key for one analog read cycle (None when the pool
+        is noise-free, keeping the nominal path key-independent)."""
+        if self._noise_free:
+            return None
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def _dispatch(self, batch: Batch) -> None:
+        t_dispatch = self.clock()
+        lits = tm.literals(jnp.asarray(batch.x))
+        key = self._read_key()
+        if self.ecfg.routing == "ensemble":
+            sums_rbm = self._forward_stacked(lits, self.pool.r_stack, key,
+                                             bt=batch.bucket)
+            preds = ensemble_vote(sums_rbm, self.ecfg.ensemble_mode)
+            sums = sums_rbm.sum(axis=0)
+            replica = ENSEMBLE
+            for i in range(self.pool.n_replicas):
+                self.pool.note_dispatch(i, batch.bucket)
+        else:
+            replica = self.pool.pick(self.ecfg.routing)
+            sums = self._forward_stacked(
+                lits, self.pool.r_stack[replica:replica + 1], key,
+                bt=batch.bucket)[0]
+            preds = jnp.argmax(sums, axis=-1)
+            self.pool.note_dispatch(replica, batch.bucket)
+        preds = np.asarray(jax.block_until_ready(preds))
+        sums = np.asarray(sums)
+        t_done = self.clock()
+
+        records = []
+        for row, req in enumerate(batch.requests):
+            self._results[req.rid] = Response(
+                rid=req.rid, pred=int(preds[row]),
+                class_sums=sums[row], replica=replica,
+                latency_s=t_done - req.t_enqueue)
+            records.append(RequestRecord(
+                rid=req.rid, t_enqueue=req.t_enqueue,
+                t_dispatch=t_dispatch, t_done=t_done,
+                bucket=batch.bucket, n_valid=batch.n_valid,
+                replica=replica))
+        self.metrics.record_batch(records, batch.bucket)
+
+    def _forward_stacked(self, lits: jax.Array, r_stack: jax.Array,
+                         key: Optional[jax.Array], bt: int) -> jax.Array:
+        """Per-replica class sums ``[R, bucket, M]`` for one read cycle."""
+        pool = self.pool
+        kernel_ok = key is None or not pool.vcfg.csa_offset
+        if self.ecfg.use_kernel and kernel_ok:
+            return ops.imbue_class_sums_stacked(
+                lits, r_stack, pool.include, pool.icfg, self.tm_cfg,
+                key=key, vcfg=pool.vcfg, bt=bt,
+                interpret=self.ecfg.interpret)
+        # lits is [features, ~features]: the first F columns are raw x.
+        return imbue.stacked_class_sums(
+            r_stack, pool.include,
+            lits[:, :self.tm_cfg.n_features], self.tm_cfg,
+            key, pool.vcfg, pool.icfg)
+
+    # ------------------------------------------------------------- metrics
+
+    def summary(self, includes: Optional[int] = None) -> Dict:
+        """Simulation metrics + the crossbar's hardware figures of merit."""
+        out = self.metrics.summary()
+        out["replica_load_rows"] = list(self.pool.rows_dispatched)
+        out["routing"] = self.ecfg.routing
+        out["n_replicas"] = self.pool.n_replicas
+        if includes is None:
+            includes = int(jnp.sum(self.pool.include))
+        out["hardware"] = hardware_figures(
+            self.tm_cfg, includes, self.pool.n_replicas,
+            ensemble=self.ecfg.routing == "ensemble")
+        return out

@@ -1,0 +1,130 @@
+"""Serving metrics: simulated latency/throughput + the paper's energy
+figures of merit folded into one report.
+
+Two timebases coexist on purpose:
+
+* **wall-clock** (simulation) — how fast this JAX/Pallas *simulator*
+  serves requests on the host: queue wait, kernel time, p50/p95/p99,
+  throughput, padding overhead, per-replica load.
+* **hardware model** (``core/energy.py``) — what the physical crossbar
+  would cost per datapoint: the 60 ns read cycle, nJ/datapoint and
+  TopJ⁻¹ from Table II/IV calibration.  These depend on the model's
+  include count and CSA count, not on host speed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import energy
+from repro.core.mapping import csa_count_packed
+from repro.core.tm import TMConfig
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Timing of one served request (simulation wall-clock seconds)."""
+
+    rid: int
+    t_enqueue: float
+    t_dispatch: float
+    t_done: float
+    bucket: int
+    n_valid: int
+    replica: int
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_enqueue
+
+    @property
+    def queue_wait_s(self) -> float:
+        return self.t_dispatch - self.t_enqueue
+
+
+def _percentile(sorted_vals: np.ndarray, q: float) -> float:
+    if len(sorted_vals) == 0:
+        return float("nan")
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return float(sorted_vals[i])
+
+
+class ServeMetrics:
+    """Accumulates per-request records and batch accounting."""
+
+    def __init__(self):
+        self.records: List[RequestRecord] = []
+        self.batches = 0
+        self.padded_rows = 0
+        self.valid_rows = 0
+        self.t_first: Optional[float] = None
+        self.t_last: Optional[float] = None
+
+    def record_batch(self, records: List[RequestRecord], bucket: int) -> None:
+        self.records.extend(records)
+        self.batches += 1
+        self.valid_rows += len(records)
+        self.padded_rows += bucket - len(records)
+        t0 = min(r.t_enqueue for r in records)
+        t1 = max(r.t_done for r in records)
+        self.t_first = t0 if self.t_first is None else min(self.t_first, t0)
+        self.t_last = t1 if self.t_last is None else max(self.t_last, t1)
+
+    # ------------------------------------------------------------ summaries
+
+    def latency_ms(self) -> Dict[str, float]:
+        lats = np.sort([r.latency_s for r in self.records]) * 1e3
+        return {"p50_ms": _percentile(lats, 0.50),
+                "p95_ms": _percentile(lats, 0.95),
+                "p99_ms": _percentile(lats, 0.99)}
+
+    def throughput(self) -> float:
+        """Served requests per second of simulation wall-clock."""
+        if not self.records or self.t_last == self.t_first:
+            return float("nan")
+        return len(self.records) / (self.t_last - self.t_first)
+
+    def padding_overhead(self) -> float:
+        """Fraction of dispatched kernel rows that were padding."""
+        total = self.valid_rows + self.padded_rows
+        return self.padded_rows / total if total else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        out = {"requests": len(self.records), "batches": self.batches,
+               "throughput_rps": self.throughput(),
+               "padding_overhead": self.padding_overhead(),
+               "mean_batch": (self.valid_rows / self.batches
+                              if self.batches else 0.0)}
+        out.update(self.latency_ms())
+        return out
+
+
+def hardware_figures(tm_cfg: TMConfig, includes: int,
+                     n_replicas: int = 1,
+                     ensemble: bool = False) -> Dict[str, float]:
+    """The crossbar's per-datapoint figures of merit (host-independent).
+
+    Routed pools send each datapoint to ONE chip: per-datapoint energy is
+    single-chip and hardware throughput scales with R.  Ensemble pools
+    read every datapoint on ALL chips: energy scales with R and the pool
+    serves at single-chip throughput.
+    """
+    csas = csa_count_packed(tm_cfg.n_ta)
+    e_dp = energy.imbue_energy_per_datapoint(includes, tm_cfg.n_ta,
+                                             csas).total_j
+    reads_per_dp = n_replicas if ensemble else 1
+    chips_serving = 1 if ensemble else n_replicas
+    return {
+        "latency_ns": energy.inference_latency_s(csas) * 1e9,
+        "energy_nj_per_dp": e_dp * 1e9 * reads_per_dp,
+        "chip_energy_nj_per_read": e_dp * 1e9,
+        "top_j_inv": energy.top_j_inv(tm_cfg.n_ta, e_dp),
+        "program_energy_nj_per_chip":
+            energy.programming_energy(includes, tm_cfg.n_ta) * 1e9,
+        "ensemble_energy_nj_per_dp": e_dp * 1e9 * n_replicas,
+        "pool_throughput_dps":
+            chips_serving / energy.inference_latency_s(csas),
+    }

@@ -1,0 +1,111 @@
+"""Replica pool: R independently programmed crossbars behind one TM.
+
+The deployment model (IMBUE §II; the Y-Flash coalesced follow-up makes
+the same argument) is one-time programming followed by unbounded reads.
+Scaling read throughput therefore means *more programmed chips*, not
+bigger ones: the pool programs the same trained TA actions into R
+crossbars with independent D2D draws (``imbue.program_replica_stack``)
+and routes read batches across them.
+
+Two routing policies plus an ensemble mode:
+
+* ``round_robin``   — cycle through replicas per batch;
+* ``least_loaded``  — pick the replica with the fewest dispatched rows
+  (greedy balancing when bucket sizes vary);
+* ensemble          — every replica evaluates the batch under its own
+  D2D + fresh C2C/CSA noise and the per-replica argmax votes are
+  majority-combined: a chip-level redundancy scheme that recovers
+  variation-induced flips (paper Fig. 7 studies exactly these flips).
+
+With ``VariationConfig.nominal()`` all replicas are electrically
+identical and every path reproduces the digital TM bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import imbue
+from repro.core import variations as var
+from repro.core.imbue import IMBUEConfig, ProgrammedCrossbar
+from repro.core.mapping import CrossbarMapping
+
+
+@dataclasses.dataclass
+class ReplicaPool:
+    """R programmed crossbars sharing one set of TA actions."""
+
+    r_stack: jax.Array              # [R, C, L] programmed resistances (Ω)
+    include: jax.Array              # [C, L] bool TA actions
+    icfg: IMBUEConfig
+    vcfg: var.VariationConfig
+
+    def __post_init__(self):
+        self.rows_dispatched = [0] * self.n_replicas
+        self.batches_dispatched = [0] * self.n_replicas
+        self._rr_next = 0
+
+    @property
+    def n_replicas(self) -> int:
+        return int(self.r_stack.shape[0])
+
+    @property
+    def mapping(self) -> CrossbarMapping:
+        c, l = self.include.shape
+        return CrossbarMapping(n_clauses=c, n_literals=l,
+                               width=self.icfg.width)
+
+    def crossbar(self, i: int) -> ProgrammedCrossbar:
+        """View replica ``i`` as a standalone ``ProgrammedCrossbar``."""
+        return ProgrammedCrossbar(r_mem=self.r_stack[i],
+                                  include=self.include,
+                                  mapping=self.mapping, cfg=self.icfg)
+
+    # ------------------------------------------------------------ routing
+
+    def pick(self, policy: str) -> int:
+        if policy == "round_robin":
+            i = self._rr_next
+            self._rr_next = (i + 1) % self.n_replicas
+            return i
+        if policy == "least_loaded":
+            return min(range(self.n_replicas),
+                       key=lambda i: self.rows_dispatched[i])
+        raise ValueError(f"unknown routing policy {policy!r}")
+
+    def note_dispatch(self, i: int, rows: int) -> None:
+        self.rows_dispatched[i] += rows
+        self.batches_dispatched[i] += 1
+
+
+def program_replica_pool(
+    ta_include: jax.Array,           # [C, L] bool include mask
+    key: jax.Array,
+    n_replicas: int,
+    vcfg: var.VariationConfig = var.VariationConfig(),
+    icfg: IMBUEConfig = IMBUEConfig(),
+) -> ReplicaPool:
+    """Program ``n_replicas`` chips (independent D2D draws per chip)."""
+    r_stack = imbue.program_replica_stack(ta_include, key, n_replicas, vcfg)
+    return ReplicaPool(r_stack=r_stack, include=jnp.asarray(ta_include),
+                       icfg=icfg, vcfg=vcfg)
+
+
+def ensemble_vote(sums: jax.Array, mode: str = "majority") -> jax.Array:
+    """Combine per-replica class sums ``[R, B, M]`` into predictions ``[B]``.
+
+    ``majority`` — one vote per chip (its argmax), ties broken toward the
+    lowest class index; deterministic given the sums.  ``sum`` — pool the
+    analog class sums before the argmax (a soft vote).
+    """
+    if mode == "sum":
+        return jnp.argmax(sums.sum(axis=0), axis=-1)
+    if mode != "majority":
+        raise ValueError(f"unknown ensemble mode {mode!r}")
+    m = sums.shape[-1]
+    per_chip = jnp.argmax(sums, axis=-1)                       # [R, B]
+    votes = jax.nn.one_hot(per_chip, m, dtype=jnp.int32).sum(axis=0)
+    return jnp.argmax(votes, axis=-1)

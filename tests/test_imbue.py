@@ -116,56 +116,3 @@ def test_latency_model():
     assert energy.inference_latency_s(100) == pytest.approx(60e-9)
     assert energy.inference_latency_s(100, parallel_columns=2) == \
         pytest.approx(50 * 60e-9)
-
-
-# ---------------------------------------------------- energy properties
-
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.integers(0, 10_000), st.integers(1, 64))
-def test_property_energy_monotone_in_includes(includes, extra_cells):
-    """More includes never costs less energy (cells fixed)."""
-    cells = includes + extra_cells * 32
-    csas = csa_count_packed(cells)
-    e1 = energy.imbue_energy_per_datapoint(includes, cells, csas).total_j
-    if includes + 1 <= cells:
-        e2 = energy.imbue_energy_per_datapoint(includes + 1, cells,
-                                               csas).total_j
-        assert e2 >= e1
-
-
-@settings(max_examples=30, deadline=None)
-@given(st.floats(0.0, 1.0), st.floats(0.0, 1.0))
-def test_property_energy_monotone_in_activity(p_inc, p_exc):
-    row = PAPER_TABLE_IV["mnist"]
-    e = energy.imbue_energy_per_datapoint(
-        row.includes, row.ta_cells, row.csas,
-        p_lit0_include=p_inc, p_lit0_exclude=p_exc).total_j
-    e_max = energy.imbue_energy_per_datapoint(
-        row.includes, row.ta_cells, row.csas,
-        p_lit0_include=1.0, p_lit0_exclude=1.0).total_j
-    assert 0 < e <= e_max + 1e-18
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(2, 60))
-def test_property_margin_decreases_with_width(w):
-    """The CSA sensing margin shrinks monotonically with column width."""
-    m1 = imbue.IMBUEConfig(width=w).sensing_margin()
-    m2 = imbue.IMBUEConfig(width=w + 1).sensing_margin()
-    assert m2 < m1
-
-
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_property_c2c_bounded(seed):
-    import jax
-    from repro.core import variations as var
-    key = jax.random.PRNGKey(seed)
-    r0 = jnp.full((256,), var.HRS_MEAN_OHM)
-    inc = jnp.zeros((256,), bool)
-    r = var.apply_c2c(key, r0, inc, VariationConfig())
-    dev = np.abs(np.asarray(r) / var.HRS_MEAN_OHM - 1.0)
-    assert dev.max() <= 0.05 + 1e-9

@@ -9,7 +9,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import imbue
 from repro.core.tm import TMConfig
@@ -123,67 +122,6 @@ def test_imbue_kernel_rejects_bad_block():
     from repro.core.tm import literals
     with pytest.raises(ValueError):
         ops.imbue_class_sums(literals(x), xbar, cfg, kt=48)  # not /32
-
-
-# ------------------------------------------------------------- properties
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(1, 40), st.integers(1, 30), st.integers(1, 70),
-       st.integers(0, 2**31 - 1))
-def test_property_clause_eval_matches_ref(b, c, l, seed):
-    lits, inc = _rand_problem(seed, b, c, l, include_density=0.3)
-    got = ops.clause_eval(lits, inc)
-    want = ref.clause_eval_ref((1 - lits).astype(jnp.float32),
-                               inc.astype(jnp.float32))
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want))
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_property_clause_monotone_in_includes(seed):
-    """Removing includes can only turn clauses ON (fewer constraints)."""
-    lits, inc = _rand_problem(seed, 16, 8, 64, include_density=0.4)
-    k = jax.random.PRNGKey(seed ^ 0xABCDEF)
-    drop = jax.random.bernoulli(k, 0.5, inc.shape).astype(jnp.uint8)
-    fewer = inc * (1 - drop)
-    before = np.asarray(ops.clause_eval(lits, inc))
-    after = np.asarray(ops.clause_eval(lits, fewer))
-    assert (after >= before).all()
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_property_all_ones_input_fires_everything(seed):
-    """Literals all 1 -> no violations -> every clause fires."""
-    _, inc = _rand_problem(seed, 4, 12, 33, include_density=0.5)
-    lits = jnp.ones((9, 33), jnp.uint8)
-    got = np.asarray(ops.clause_eval(lits, inc))
-    assert (got == 1).all()
-
-
-@settings(max_examples=15, deadline=None)
-@given(st.integers(2, 6), st.integers(1, 5), st.integers(0, 2**31 - 1))
-def test_property_class_sums_bounded(m, jh, seed):
-    """|class sum| <= clauses_per_class / 2 (half each polarity)."""
-    cfg = TMConfig(n_classes=m, clauses_per_class=2 * jh, n_features=24)
-    lits, inc = _rand_problem(seed, 10, cfg.n_clauses, cfg.n_literals)
-    sums = np.asarray(ops.tm_class_sums(lits, inc, cfg))
-    assert (np.abs(sums) <= jh).all()
-
-
-@settings(max_examples=10, deadline=None)
-@given(st.integers(0, 2**31 - 1))
-def test_property_analog_digital_agree_nominal(seed):
-    """At nominal conditions the crossbar IS the digital TM (paper §II)."""
-    cfg = TMConfig(n_classes=2, clauses_per_class=6, n_features=48)
-    x, xbar = _analog_problem(seed % 1000, 12, cfg)
-    from repro.core.tm import literals
-    analog = np.asarray(ops.imbue_class_sums(literals(x), xbar, cfg))
-    pol = ops.polarity_matrix(cfg, xbar.include)[:, :cfg.n_classes]
-    digital = np.asarray(ref.tm_infer_ref(
-        (1 - literals(x)).astype(jnp.float32),
-        xbar.include.astype(jnp.float32), pol))
-    np.testing.assert_allclose(analog, digital)
 
 
 # ------------------------------------------------------- flash attention

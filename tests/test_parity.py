@@ -1,0 +1,71 @@
+"""Analog/digital parity regression tests (no hypothesis dependency).
+
+Guards the CSA reference placement (``IMBUEConfig.reference_voltage``):
+at zero variation the analog readout must agree with the digital oracle
+on every (datapoint, clause) cell, and pushing C2C excursions up must
+never *reduce* the clause error rate.  A mis-placed ``v_ref`` breaks
+both properties immediately.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import imbue
+from repro.core.variations import VariationConfig
+
+
+def test_clause_error_rate_zero_at_zero_variation(small_cfg, random_ta,
+                                                  boolean_batch, keys):
+    err = imbue.clause_error_rate(
+        random_ta, jnp.asarray(boolean_batch), keys["read"], small_cfg,
+        VariationConfig.nominal(), draws=4)
+    np.testing.assert_array_equal(np.asarray(err), 0.0)
+
+
+def test_clause_error_rate_monotone_in_c2c_sigma(small_cfg, random_ta,
+                                                 boolean_batch, keys):
+    """Mean clause error is non-decreasing in the C2C excursion.
+
+    D2D and CSA offset are disabled to isolate C2C; the same key is used
+    for every sigma, so the underlying uniform draws are identical and
+    only their amplitude grows — deviations move monotonically along a
+    fixed direction per cell.  LRS excursion keeps the published 5:1
+    ratio to HRS.
+    """
+    fracs = (0.0, 0.05, 0.3, 0.75, 0.95)
+    means = []
+    for f in fracs:
+        vcfg = VariationConfig(d2d=False, c2c=True, csa_offset=False,
+                               c2c_hrs_frac=f, c2c_lrs_frac=f / 5.0)
+        err = imbue.clause_error_rate(
+            random_ta, jnp.asarray(boolean_batch), keys["read"],
+            small_cfg, vcfg, draws=4)
+        means.append(float(np.mean(np.asarray(err))))
+    assert means[0] == 0.0                       # frac 0 == nominal
+    for lo, hi in zip(means, means[1:]):
+        assert hi >= lo - 1e-9, means
+    assert means[-1] > 0.0, means                # the sweep has teeth
+
+
+def test_v_ref_sits_inside_the_sensing_band():
+    """Fig. 4a design rule: V_ref between the all-exclude leak band and a
+    single include violation, at the published width."""
+    cfg = imbue.IMBUEConfig()
+    v_leak_band = cfg.r_divider * cfg.width * imbue.I_EXCLUDE_ON
+    v_one_violation = cfg.r_divider * imbue.I_INCLUDE_ON
+    assert v_leak_band < cfg.reference_voltage() < v_one_violation
+    # explicit override wins
+    assert imbue.IMBUEConfig(v_ref=0.005).reference_voltage() == 0.005
+
+
+def test_monte_carlo_accuracy_nominal_equals_digital(small_cfg, random_ta,
+                                                     boolean_batch, keys):
+    """Zero-variation Monte-Carlo draws all reproduce the digital
+    accuracy exactly (the degenerate distribution of Fig. 7)."""
+    from repro.core import tm
+    y = np.asarray(tm.predict(random_ta, jnp.asarray(boolean_batch),
+                              small_cfg))
+    accs = imbue.monte_carlo_accuracy(
+        random_ta, jnp.asarray(boolean_batch), jnp.asarray(y),
+        keys["read"], small_cfg, VariationConfig.nominal(), draws=4)
+    np.testing.assert_array_equal(np.asarray(accs), 1.0)

@@ -1,0 +1,213 @@
+"""Serving subsystem tests: dynamic batcher, replica pool, engine.
+
+The digital TM (``core/tm.py``) is the oracle throughout: with
+``VariationConfig.nominal()`` every analog path must reproduce it
+bit-for-bit (the paper's zero-variation equivalence).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import imbue, tm
+from repro.core.variations import VariationConfig
+from repro.serve import (BatcherConfig, DynamicBatcher, EngineConfig,
+                         ServeEngine, ensemble_vote, program_replica_pool)
+
+
+class FakeClock:
+    """Deterministic clock for deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------------------- batcher
+
+def test_bucket_selection():
+    cfg = BatcherConfig(max_batch=128, bucket_sizes=(8, 16, 32, 64, 128))
+    assert cfg.bucket_for(1) == 8
+    assert cfg.bucket_for(8) == 8
+    assert cfg.bucket_for(9) == 16
+    assert cfg.bucket_for(128) == 128
+    with pytest.raises(ValueError):
+        cfg.bucket_for(129)
+
+
+def test_bucket_config_validation():
+    with pytest.raises(ValueError):
+        BatcherConfig(max_batch=64, bucket_sizes=(8, 32))   # max not a bucket
+    with pytest.raises(ValueError):
+        BatcherConfig(max_batch=12, bucket_sizes=(12,))     # not sublane-mult
+
+
+def test_batcher_pads_and_keeps_fifo_order():
+    clock = FakeClock()
+    b = DynamicBatcher(BatcherConfig(max_batch=16, bucket_sizes=(8, 16)))
+    for rid in range(11):
+        b.submit(rid, np.full(4, rid % 2, dtype=np.uint8), clock())
+    batch = b.cut(clock(), force=True)
+    assert batch.bucket == 16 and batch.n_valid == 11 and batch.n_padding == 5
+    assert [r.rid for r in batch.requests] == list(range(11))
+    assert batch.x.shape == (16, 4)
+    # padding rows replay a valid row (results discarded on unpad)
+    np.testing.assert_array_equal(batch.x[11:], batch.x[:1].repeat(5, 0))
+
+
+def test_batcher_deadline_trigger():
+    clock = FakeClock()
+    cfg = BatcherConfig(max_batch=16, bucket_sizes=(8, 16), max_wait_s=1e-3)
+    b = DynamicBatcher(cfg)
+    b.submit(0, np.zeros(4, np.uint8), clock())
+    assert not b.ready(clock())            # under-full, deadline not hit
+    assert b.cut(clock()) is None
+    clock.advance(2e-3)
+    assert b.ready(clock())                # oldest request timed out
+    batch = b.cut(clock())
+    assert batch is not None and batch.n_valid == 1 and batch.bucket == 8
+
+
+def test_batcher_full_bucket_triggers_immediately():
+    clock = FakeClock()
+    b = DynamicBatcher(BatcherConfig(max_batch=8, bucket_sizes=(8,)))
+    for rid in range(9):
+        b.submit(rid, np.zeros(4, np.uint8), clock())
+    assert b.ready(clock())
+    batch = b.cut(clock())
+    assert batch.n_valid == 8 and [r.rid for r in batch.requests] == \
+        list(range(8))
+    assert len(b) == 1                     # the ninth request stays queued
+
+
+# ---------------------------------------------------------- replica pool
+
+@pytest.mark.parametrize("n_replicas", [1, 4])
+def test_pool_zero_variation_matches_digital_oracle(small_cfg, random_ta,
+                                                    boolean_batch, keys,
+                                                    n_replicas):
+    """Stacked clause outputs == digital ``clause_outputs`` exactly."""
+    cfg = small_cfg
+    inc = tm.include_mask(random_ta, cfg)
+    pool = program_replica_pool(inc, keys["program"], n_replicas,
+                                VariationConfig.nominal())
+    lits = tm.literals(jnp.asarray(boolean_batch))
+    got = imbue.stacked_clause_outputs(pool.r_stack, pool.include, lits,
+                                       cfg, None, VariationConfig.nominal())
+    oracle = tm.clause_outputs(random_ta, lits, cfg, training=True)
+    for r in range(n_replicas):
+        np.testing.assert_array_equal(np.asarray(got[r]), np.asarray(oracle))
+
+
+@pytest.mark.parametrize("routing", ["round_robin", "least_loaded",
+                                     "ensemble"])
+@pytest.mark.parametrize("n_replicas", [1, 4])
+def test_engine_zero_variation_matches_digital_argmax(
+        small_cfg, random_ta, boolean_batch, keys, routing, n_replicas):
+    """End-to-end: engine predictions == digital TM argmax, R in {1, 4}."""
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=n_replicas, key=keys["route"],
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(routing=routing,
+                          batcher=BatcherConfig(max_batch=32,
+                                                bucket_sizes=(8, 16, 32))))
+    eng.submit_many(list(boolean_batch))
+    preds = np.array([r.pred for r in eng.drain()])
+    digital = np.asarray(tm.predict(random_ta, jnp.asarray(boolean_batch),
+                                    small_cfg))
+    np.testing.assert_array_equal(preds, digital)
+
+
+def test_engine_preserves_request_order(small_cfg, random_ta, boolean_batch,
+                                        keys):
+    """Responses come back in submission order, each with its own row's
+    prediction (no cross-wiring inside padded/bucketed batches)."""
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=keys["route"],
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                                bucket_sizes=(8, 16))))
+    perm = np.random.default_rng(0).permutation(len(boolean_batch))
+    rids = eng.submit_many([boolean_batch[i] for i in perm])
+    responses = eng.drain()
+    assert [r.rid for r in responses] == rids
+    digital = np.asarray(tm.predict(
+        random_ta, jnp.asarray(boolean_batch[perm]), small_cfg))
+    np.testing.assert_array_equal(np.array([r.pred for r in responses]),
+                                  digital)
+
+
+def test_ensemble_vote_deterministic_under_fixed_key(small_cfg, random_ta,
+                                                     boolean_batch, keys):
+    """Full-noise ensemble serving is bit-reproducible given one key."""
+    def run():
+        eng = ServeEngine.from_ta_state(
+            random_ta, small_cfg, n_replicas=4, key=keys["route"],
+            vcfg=VariationConfig(),
+            ecfg=EngineConfig(routing="ensemble"))
+        eng.submit_many(list(boolean_batch[:16]))
+        return [r.pred for r in eng.drain()]
+
+    assert run() == run()
+
+
+def test_ensemble_vote_majority_and_ties():
+    # 3 replicas, 2 datapoints, 3 classes: [replica, batch, class] sums
+    sums = jnp.asarray([
+        [[3.0, 1.0, 0.0], [0.0, 2.0, 1.0]],
+        [[0.0, 2.0, 1.0], [0.0, 2.0, 1.0]],
+        [[3.0, 1.0, 0.0], [1.0, 0.0, 2.0]],
+    ])
+    got = ensemble_vote(sums)
+    np.testing.assert_array_equal(np.asarray(got), [0, 1])
+    # 2-2 tie breaks toward the lowest class index
+    tie = jnp.asarray([[[1.0, 0.0]], [[0.0, 1.0]]])
+    assert int(ensemble_vote(tie)[0]) == 0
+
+
+def test_least_loaded_balances_rows(small_cfg, random_ta, keys):
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=keys["route"],
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(routing="least_loaded",
+                          batcher=BatcherConfig(max_batch=8,
+                                                bucket_sizes=(8,))))
+    x = np.zeros((32, small_cfg.n_features), np.uint8)
+    eng.submit_many(list(x))
+    eng.drain()
+    assert eng.pool.rows_dispatched == [16, 16]
+
+
+def test_kernel_and_jnp_paths_agree(small_cfg, random_ta, boolean_batch,
+                                    keys):
+    preds = []
+    for use_kernel in (True, False):
+        eng = ServeEngine.from_ta_state(
+            random_ta, small_cfg, n_replicas=2, key=keys["route"],
+            vcfg=VariationConfig.nominal(),
+            ecfg=EngineConfig(use_kernel=use_kernel))
+        eng.submit_many(list(boolean_batch))
+        preds.append([r.pred for r in eng.drain()])
+    assert preds[0] == preds[1]
+
+
+def test_metrics_accounting(small_cfg, random_ta, keys):
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=1, key=keys["route"],
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                                bucket_sizes=(8, 16))))
+    eng.submit_many([np.zeros(small_cfg.n_features, np.uint8)] * 11)
+    eng.drain()
+    s = eng.summary()
+    assert s["requests"] == 11 and s["batches"] == 1
+    assert s["padding_overhead"] == pytest.approx(5 / 16)
+    assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    hw = s["hardware"]
+    assert hw["latency_ns"] == pytest.approx(60.0)
+    assert hw["energy_nj_per_dp"] > 0 and hw["top_j_inv"] > 0
