@@ -16,14 +16,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import coalesced as co
 from repro.core import energy, imbue
 from repro.core import variations as var
 from repro.core.mapping import csa_count_packed
-from repro.core.tm import TMConfig, include_stats, init_ta_state, accuracy
+from repro.core.tm import TMConfig, include_stats, init_ta_state
 from repro.core import tm_train
 from repro.core.variations import VariationConfig
 from repro.data.tm_datasets import noisy_xor
+
+
+def _acc(state, x, y) -> float:
+    """Accuracy through the unified backend API.  Pinned to the jnp
+    reference backends: auto-selection prefers the fused kernels, which
+    run in slow interpret mode off-TPU."""
+    backend = ("digital-jnp" if isinstance(state, api.DigitalState)
+               else None)
+    return float((api.predict(state, x, backend=backend) == y).mean())
 
 
 def coalesced_vs_vanilla():
@@ -39,7 +49,7 @@ def coalesced_vs_vanilla():
         ta = init_ta_state(jax.random.PRNGKey(1), vcfg)
         ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, vcfg,
                           epochs=40, batch_size=1000)
-        acc_v = float(accuracy(ta, xte, yte, vcfg))
+        acc_v = _acc(api.DigitalState.from_ta(ta, vcfg), xte, yte)
         st = include_stats(ta, vcfg)
         e_v = energy.imbue_energy_per_datapoint(
             st["includes"], vcfg.n_ta, csa_count_packed(vcfg.n_ta)).total_j
@@ -50,7 +60,8 @@ def coalesced_vs_vanilla():
         cta, w = co.init_coalesced(jax.random.PRNGKey(1), ccfg)
         cta, w = co.fit(cta, w, jax.random.PRNGKey(2), xtr, ytr, ccfg,
                         epochs=40, batch_size=16)
-        acc_c = float(co.accuracy(cta, w, xte, yte, ccfg))
+        acc_c = _acc(api.CoalescedState(ta_state=cta, weights=w, cfg=ccfg),
+                     xte, yte)
         inc_c = int((cta > ccfg.n_states).sum())
         e_c = energy.imbue_energy_per_datapoint(
             inc_c, ccfg.n_ta, csa_count_packed(ccfg.n_ta)).total_j

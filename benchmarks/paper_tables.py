@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core import energy, imbue, tm, tm_train
 from repro.core import variations as var
 from repro.core.mapping import csa_count_packed
@@ -253,7 +254,12 @@ def tm_accuracy():
     ta = tm.init_ta_state(jax.random.PRNGKey(1), cfg)
     ta = tm_train.fit(ta, jax.random.PRNGKey(2), xtr, ytr, cfg,
                       epochs=80, batch_size=2000)
-    acc_dig = float(tm.accuracy(ta, xte, yte, cfg))
+    # digital accuracy through the unified backend API, pinned to the
+    # registered reference backend (auto-selection would prefer the
+    # fused kernel, which runs in slow interpret mode off-TPU)
+    dstate = api.DigitalState.from_ta(ta, cfg)
+    acc_dig = float((api.predict(dstate, xte,
+                                 backend="digital-jnp") == yte).mean())
     accs = imbue.monte_carlo_accuracy(ta, xte, yte, jax.random.PRNGKey(3),
                                       cfg, VariationConfig(), draws=8)
     acc_ana = float(np.mean(np.asarray(accs)))

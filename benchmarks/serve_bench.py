@@ -14,6 +14,7 @@ is amortized over the bucket, exactly as a real accelerator amortizes
 launch + DMA cost.
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--requests 192]
+  PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI, no JSON
 """
 
 from __future__ import annotations
@@ -45,20 +46,24 @@ def make_model(key):
     return cfg, ta
 
 
-def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin"):
+def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin",
+                backend=None):
     # CSA offset off so serving stays on the fused Pallas kernel path
-    # (the offset is only modeled by the jnp path; see EngineConfig).
+    # (capability selection would reject `analog-pallas` otherwise; see
+    # repro.api.select_backend).
     return ServeEngine.from_ta_state(
         ta, cfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
         vcfg=VariationConfig(csa_offset=False),
         ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(max_batch),
-                          routing=routing))
+                          routing=routing, backend=backend))
 
 
-def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing):
+def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing,
+                backend=None):
     """Submit everything, then drain: batches cut at ``max_batch``."""
     engine = make_engine(cfg, ta, max_batch=max_batch,
-                         n_replicas=n_replicas, routing=routing)
+                         n_replicas=n_replicas, routing=routing,
+                         backend=backend)
     engine.submit_many([xs[0]] * max_batch)   # warm the kernel cache
     engine.drain()
     engine.metrics = type(engine.metrics)()
@@ -73,9 +78,10 @@ def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing):
     return out
 
 
-def run_serial(cfg, ta, xs, *, n_replicas=1):
+def run_serial(cfg, ta, xs, *, n_replicas=1, backend=None):
     """The seed's per-request path: one dispatch per request."""
-    engine = make_engine(cfg, ta, max_batch=8, n_replicas=n_replicas)
+    engine = make_engine(cfg, ta, max_batch=8, n_replicas=n_replicas,
+                         backend=backend)
     engine.submit(xs[0])
     engine.drain()                             # warm the bucket-8 kernel
     engine.metrics = type(engine.metrics)()
@@ -97,8 +103,19 @@ def main(argv=None):
                     help="requests per batched configuration")
     ap.add_argument("--serial-requests", type=int, default=48,
                     help="requests for the serial baseline (slow path)")
+    ap.add_argument("--backend", default=None,
+                    choices=("analog-pallas", "analog-jnp"),
+                    help="forward-backend preference (repro.api name)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one tiny sweep cell, nothing written")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     args = ap.parse_args(argv)
+    if args.smoke:
+        # Exercise the serve hot path (batched + ensemble dispatch through
+        # the capability-selected backend) without the full sweep and
+        # WITHOUT touching the committed BENCH_serve.json baseline.
+        args.requests = min(args.requests, 64)
+        args.serial_requests = min(args.serial_requests, 8)
 
     cfg, ta = make_model(jax.random.PRNGKey(0))
     xs = np.asarray(jax.random.bernoulli(
@@ -106,29 +123,42 @@ def main(argv=None):
         (args.requests, cfg.n_features))).astype(np.uint8)
 
     print("[serve_bench] serial baseline (per-request dispatch)...")
-    serial = run_serial(cfg, ta, xs[:args.serial_requests])
+    serial = run_serial(cfg, ta, xs[:args.serial_requests],
+                        backend=args.backend)
     print(f"[serve_bench]   serial: "
           f"{serial['wall_throughput_rps']:.1f} req/s")
 
     sweep = []
-    for n_replicas in (1, 2, 4):
-        for max_batch in (8, 32, 64):
-            row = run_batched(cfg, ta, xs, max_batch=max_batch,
-                              n_replicas=n_replicas,
-                              routing="round_robin")
-            row["speedup_vs_serial"] = (row["wall_throughput_rps"]
-                                        / serial["wall_throughput_rps"])
-            sweep.append(row)
-            print(f"[serve_bench]   R={n_replicas} batch={max_batch}: "
-                  f"{row['wall_throughput_rps']:.1f} req/s "
-                  f"({row['speedup_vs_serial']:.1f}x serial), "
-                  f"p99 {row['p99_ms']:.1f} ms")
+    grid = (((4, 64),) if args.smoke
+            else tuple((r, b) for r in (1, 2, 4) for b in (8, 32, 64)))
+    for n_replicas, max_batch in grid:
+        row = run_batched(cfg, ta, xs, max_batch=max_batch,
+                          n_replicas=n_replicas,
+                          routing="round_robin", backend=args.backend)
+        row["speedup_vs_serial"] = (row["wall_throughput_rps"]
+                                    / serial["wall_throughput_rps"])
+        sweep.append(row)
+        print(f"[serve_bench]   R={n_replicas} batch={max_batch}: "
+              f"{row['wall_throughput_rps']:.1f} req/s "
+              f"({row['speedup_vs_serial']:.1f}x serial), "
+              f"p99 {row['p99_ms']:.1f} ms [{row['backend']}]")
     ens = run_batched(cfg, ta, xs, max_batch=64, n_replicas=4,
-                      routing="ensemble")
+                      routing="ensemble", backend=args.backend)
     ens["speedup_vs_serial"] = (ens["wall_throughput_rps"]
                                 / serial["wall_throughput_rps"])
     print(f"[serve_bench]   ensemble R=4 batch=64: "
           f"{ens['wall_throughput_rps']:.1f} req/s")
+
+    if args.smoke:
+        row = sweep[0]
+        ok = (row["speedup_vs_serial"] >= 1.5
+              and row["forward_fallbacks"] == [])
+        print(f"[serve_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
+              f"{row['speedup_vs_serial']:.1f}x serial on "
+              f"{row['backend']} (nothing written)")
+        if not ok:
+            raise SystemExit(1)
+        return None
 
     at64 = [r for r in sweep
             if r["max_batch"] == 64 and r["n_replicas"] == 1]

@@ -13,12 +13,12 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import energy, imbue, tm, tm_train
+from repro import api
+from repro.core import energy, tm, tm_train
 from repro.core.mapping import csa_count_packed
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
 from repro.data.tm_datasets import synthetic_image_dataset
-from repro.kernels import ops
 
 
 def main():
@@ -41,13 +41,13 @@ def main():
     print(f"digital accuracy {acc:.3f}, includes "
           f"{stats['include_pct']:.2f}%")
 
-    # fused inference kernel (Pallas, interpret mode on CPU)
-    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
-                                  jax.random.PRNGKey(3),
-                                  VariationConfig())
-    lits = tm.literals(xte[:256])
-    sums = ops.imbue_class_sums(lits, xbar, cfg)
-    pred = np.asarray(sums).argmax(-1)
+    # fused inference kernel via the unified API (Pallas, interpret mode
+    # on CPU): pin the analog-pallas backend explicitly.
+    state = api.CrossbarState.program(tm.include_mask(ta, cfg),
+                                      jax.random.PRNGKey(3), cfg,
+                                      VariationConfig())
+    pred = np.asarray(api.predict(state, xte[:256],
+                                  backend="analog-pallas"))
     acc_kernel = float((pred == np.asarray(yte[:256])).mean())
     print(f"analog fused-kernel accuracy (256 samples, D2D chip): "
           f"{acc_kernel:.3f}")

@@ -1,10 +1,12 @@
 """Quickstart: the full IMBUE pipeline on Noisy XOR in ~1 minute (CPU).
 
   1. train a Tsetlin Machine (Type I/II feedback, pure JAX)
-  2. program its TA actions into a simulated 1T1R ReRAM crossbar
-     (D2D variation draws at SET/RESET time)
-  3. run Boolean-to-Current inference (KCL column currents -> CSA)
-     under cycle-to-cycle + CSA-offset noise
+  2. program its TA actions into a simulated 1T1R ReRAM crossbar —
+     an ``api.CrossbarState`` pytree (D2D variation draws at SET/RESET
+     time, electrical config carried as aux_data)
+  3. run Boolean-to-Current inference through the unified backend API
+     (``api.class_sums`` picks a backend by capability) under
+     cycle-to-cycle + CSA-offset noise
   4. compare digital vs analog accuracy and report the paper's energy
      metrics (Table II/IV models)
 
@@ -14,6 +16,7 @@
 import jax
 import numpy as np
 
+from repro import api
 from repro.core import energy, imbue, tm, tm_train
 from repro.core.mapping import csa_count_packed
 from repro.core.tm import TMConfig
@@ -37,15 +40,25 @@ def main():
     print(f"digital accuracy: {acc_digital:.4f} "
           f"(paper: 0.992) — includes {stats['include_pct']:.1f}%")
 
-    # 2. program the crossbar (one-time; D2D drawn at programming)
+    # 2. program the crossbar (one-time; D2D drawn at programming).
+    # The state is a registered pytree: arrays are children, the
+    # electrical/noise configs ride along as static aux_data.
     vcfg = VariationConfig()
-    xbar = imbue.program_crossbar(tm.include_mask(ta, cfg),
-                                  jax.random.PRNGKey(3), vcfg)
+    state = api.CrossbarState.program(tm.include_mask(ta, cfg),
+                                      jax.random.PRNGKey(3), cfg, vcfg)
     e_prog = energy.programming_energy(stats["includes"], cfg.n_ta)
     print(f"programmed {cfg.n_ta} cells, one-time energy "
           f"{e_prog * 1e9:.2f} nJ")
 
-    # 3. analog inference under C2C + CSA noise, 8 manufactured chips
+    # 3a. one noisy read through the unified API — capability selection
+    # routes a csa_offset read to the backend that models it.
+    sel = api.select_backend(state, key=jax.random.PRNGKey(4))
+    pred = api.predict(state, xte, jax.random.PRNGKey(4))
+    acc_one = float((pred == yte).mean())
+    print(f"analog accuracy, one chip/one read cycle "
+          f"[{sel.backend.name}]: {acc_one:.4f}")
+
+    # 3b. ...and the Monte-Carlo view: 8 manufactured chips
     accs = imbue.monte_carlo_accuracy(ta, xte, yte, jax.random.PRNGKey(4),
                                       cfg, vcfg, draws=8)
     accs = np.asarray(accs)

@@ -25,12 +25,18 @@ def main():
 
     # Four independently programmed chips (distinct D2D draws); batches
     # of up to 32 requests, majority vote across all four chips per read.
+    # The forward path is capability-selected from the repro.api registry:
+    # full noise (csa_offset on) needs the jnp backend, and the engine
+    # says so instead of switching silently.
     engine = ServeEngine.from_ta_state(
         ta, cfg, n_replicas=4, key=jax.random.PRNGKey(3),
         vcfg=VariationConfig(),
         ecfg=EngineConfig(routing="ensemble",
                           batcher=BatcherConfig(max_batch=32,
                                                 bucket_sizes=(8, 16, 32))))
+    print(f"backend: {engine.backend.name}"
+          + (f" (fallback: {engine.selection.fallback_reason})"
+             if engine.selection.fell_back else ""))
 
     xs = np.asarray(xte, dtype=np.uint8)
     engine.submit_many(list(xs[:64]))

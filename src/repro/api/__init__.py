@@ -1,0 +1,56 @@
+"""``repro.api`` — the single inference surface for every IMBUE backend.
+
+Two halves:
+
+* **states** (``repro.api.states``) — registered pytree states whose
+  children are device arrays and whose aux_data is the static (hashable)
+  configuration, so they pass directly through ``jit`` / ``vmap`` /
+  ``tree_map`` / device placement:
+  ``DigitalState``, ``CrossbarState``, ``ReplicaStackState``,
+  ``CoalescedState``.
+* **backends** (``repro.api.backends`` + ``repro.api.registry``) — a
+  capability-based registry where every backend implements one
+  signature ``class_sums(state, lits, key) -> [..., M]`` and declares
+  what it models (``models_csa_offset``, ``supports_replica_vmap``,
+  ``fused_kernel``, ...).  Selection is explicit and inspectable —
+  no silent fallbacks.
+
+Quickstart::
+
+    from repro import api
+    from repro.core import tm
+
+    state = api.ReplicaStackState.program(include, key, n_replicas=4,
+                                          tm_cfg=cfg)
+    sums = api.class_sums(state, tm.literals(x), read_key)   # [R, B, M]
+    sel = api.select_backend(state, key=read_key, prefer="analog-pallas")
+    if sel.fell_back:
+        print("noise semantics changed:", sel.fallback_reason)
+
+Deprecated entry points (one-release shims): ``ops.imbue_class_sums_stacked``
+(per-chip loop, now delegates to the vmapped single dispatch) and
+``EngineConfig.use_kernel`` (boolean flag, now a backend preference).
+"""
+
+from repro.api.backends import class_sums, predict
+from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
+                                CAP_FUSED_KERNEL, CAP_MODELS_C2C,
+                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP,
+                                CAP_TPU_ONLY, KNOWN_CAPABILITIES, Backend,
+                                Selection, get_backend, list_backends,
+                                register_backend, required_capabilities,
+                                select_backend)
+from repro.api.states import (STATE_TYPES, CoalescedState, CrossbarState,
+                              DigitalState, ReplicaStackState)
+
+__all__ = [
+    "class_sums", "predict",
+    "Backend", "Selection", "get_backend", "list_backends",
+    "register_backend", "required_capabilities", "select_backend",
+    "KNOWN_CAPABILITIES",
+    "CAP_ANALOG", "CAP_COALESCED", "CAP_DIGITAL", "CAP_FUSED_KERNEL",
+    "CAP_MODELS_C2C", "CAP_MODELS_CSA_OFFSET", "CAP_REPLICA_VMAP",
+    "CAP_TPU_ONLY",
+    "STATE_TYPES", "CoalescedState", "CrossbarState", "DigitalState",
+    "ReplicaStackState",
+]

@@ -1,0 +1,165 @@
+"""The five registered forward backends + the uniform entry points.
+
+All backends share one contract:
+
+    class_sums(state, lits, key=None, **opts) -> int32 [..., M]
+
+``lits`` is the ``[B, 2F]`` literal matrix (``repro.core.tm.literals``);
+outputs are integer class sums (clause votes are ±1, so every path —
+including the float32 Pallas kernels — produces exact integers; the
+uniform API rounds them back to int32).  ``ReplicaStackState`` inputs
+produce ``[R, B, M]``.
+
+Registered backends:
+
+=================  =======================  ==============================
+name               states                   capability notes
+=================  =======================  ==============================
+``digital-jnp``    Digital                  the bit-exact reference
+``digital-pallas`` Digital                  fused clause+polarity kernel
+``analog-jnp``     Crossbar, ReplicaStack   models C2C **and** CSA offset
+``analog-pallas``  Crossbar, ReplicaStack   fused kernel, scalar v_ref
+                                            (no per-column CSA offset)
+``coalesced``      Coalesced                weighted digital tail
+=================  =======================  ==============================
+
+Use :func:`class_sums` / :func:`predict` for capability-based dispatch,
+or ``get_backend(name).fn`` to pin a backend explicitly.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
+                                CAP_FUSED_KERNEL, CAP_MODELS_C2C,
+                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP,
+                                Selection, get_backend, register_backend,
+                                select_backend)
+from repro.api.states import (CoalescedState, CrossbarState, DigitalState,
+                              ReplicaStackState)
+from repro.core import coalesced as co
+from repro.core import imbue
+from repro.core import tm
+from repro.kernels import ops
+
+
+def _to_i32(sums: jax.Array) -> jax.Array:
+    """Class sums are exact small integers on every path; unify dtype."""
+    if jnp.issubdtype(sums.dtype, jnp.floating):
+        return jnp.round(sums).astype(jnp.int32)
+    return sums.astype(jnp.int32)
+
+
+# ------------------------------------------------------------- digital
+
+@register_backend("digital-jnp", state_types=(DigitalState,),
+                  capabilities={CAP_DIGITAL}, priority=10)
+def digital_jnp(state: DigitalState, lits: jax.Array,
+                key: Optional[jax.Array] = None) -> jax.Array:
+    """Boolean-domain reference: violation matmul + polarity counters."""
+    del key                                  # digital path is noise-free
+    fired = tm.clause_outputs_from_include(state.include, lits)
+    return _to_i32(tm.class_sums(fired, state.tm_cfg))
+
+
+@register_backend("digital-pallas", state_types=(DigitalState,),
+                  capabilities={CAP_DIGITAL, CAP_FUSED_KERNEL}, priority=20)
+def digital_pallas(state: DigitalState, lits: jax.Array,
+                   key: Optional[jax.Array] = None, **tiles) -> jax.Array:
+    """Fused clause-eval + polarity-matmul Pallas kernel."""
+    del key
+    return _to_i32(ops.tm_class_sums(lits, state.include, state.tm_cfg,
+                                     **tiles))
+
+
+# -------------------------------------------------------------- analog
+
+@register_backend("analog-jnp",
+                  state_types=(CrossbarState, ReplicaStackState),
+                  capabilities={CAP_ANALOG, CAP_MODELS_C2C,
+                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP},
+                  priority=10)
+def analog_jnp(state, lits: jax.Array,
+               key: Optional[jax.Array] = None) -> jax.Array:
+    """Einsum KCL + per-column CSA compare (full noise model)."""
+    if isinstance(state, ReplicaStackState):
+        cls = imbue.stacked_clause_outputs(
+            state.r_stack, state.include, lits, state.tm_cfg, key,
+            state.vcfg, state.icfg)                        # [R, B, C]
+        nonempty = state.include.any(axis=-1)
+        cls = cls * nonempty[None, None, :].astype(cls.dtype)
+    else:
+        cls = imbue.analog_clause_outputs_raw(
+            state.r_mem, state.include, lits, state.mapping, state.icfg,
+            key, state.vcfg)                               # [B, C]
+        nonempty = state.include.any(axis=-1)
+        cls = cls * nonempty[None, :].astype(cls.dtype)
+    return _to_i32(tm.class_sums(cls, state.tm_cfg))
+
+
+@register_backend("analog-pallas",
+                  state_types=(CrossbarState, ReplicaStackState),
+                  capabilities={CAP_ANALOG, CAP_FUSED_KERNEL,
+                                CAP_MODELS_C2C, CAP_REPLICA_VMAP},
+                  priority=20)
+def analog_pallas(state, lits: jax.Array,
+                  key: Optional[jax.Array] = None, **tiles) -> jax.Array:
+    """Fused Boolean-to-Current Pallas kernel (scalar v_ref threshold).
+
+    Replica stacks go through ONE vmapped kernel invocation
+    (``ops.imbue_class_sums_stack``) — the serve-pool hot path."""
+    if isinstance(state, ReplicaStackState):
+        return _to_i32(ops.imbue_class_sums_stack(
+            lits, state.r_stack, state.include, state.icfg, state.tm_cfg,
+            key, vcfg=state.vcfg, **tiles))
+    from repro.core.imbue import conductances
+    g_on, i_leak = conductances(state.r_mem, state.include, state.icfg,
+                                key, state.vcfg)
+    return _to_i32(ops.imbue_class_sums_raw(
+        lits, g_on, i_leak, state.include, state.icfg.v_read,
+        state.icfg.r_divider, state.icfg.reference_voltage(),
+        state.tm_cfg, width=state.icfg.width, **tiles))
+
+
+# ----------------------------------------------------------- coalesced
+
+@register_backend("coalesced", state_types=(CoalescedState,),
+                  capabilities={CAP_DIGITAL, CAP_COALESCED}, priority=10)
+def coalesced_jnp(state: CoalescedState, lits: jax.Array,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    """Shared clause pool with a weighted digital tail."""
+    del key
+    cls = co.clause_outputs(state.ta_state, lits, state.cfg)
+    return _to_i32(cls.astype(jnp.int32) @ state.weights)
+
+
+# ------------------------------------------------------- uniform entry
+
+def class_sums(state, lits: jax.Array, key: Optional[jax.Array] = None, *,
+               backend: Optional[str] = None, require=(),
+               **opts) -> jax.Array:
+    """Class sums via capability-based backend selection.
+
+    ``backend`` pins a backend *preference*; if it cannot satisfy the
+    state's required capabilities the selection falls back loudly (use
+    :func:`repro.api.select_backend` directly to inspect the decision).
+    """
+    sel = select_backend(state, key=key, prefer=backend, require=require)
+    return sel.backend.fn(state, lits, key, **opts)
+
+
+def predict(state, x: jax.Array, key: Optional[jax.Array] = None, *,
+            backend: Optional[str] = None, **opts) -> jax.Array:
+    """Argmax classification from raw Boolean features ``[B, F]``.
+
+    Replica stacks are ensemble-reduced by summing per-chip class sums
+    before the argmax (use ``repro.serve.ensemble_vote`` for majority
+    voting)."""
+    sums = class_sums(state, tm.literals(x), key, backend=backend, **opts)
+    if isinstance(state, ReplicaStackState):
+        sums = sums.sum(axis=0)
+    return jnp.argmax(sums, axis=-1)

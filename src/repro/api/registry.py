@@ -1,0 +1,181 @@
+"""Capability-based backend registry: the *code* half of the unified API.
+
+Every backend implements ONE signature
+
+    class_sums(state, lits, key=None, **opts) -> [..., M] int32
+
+where ``state`` is a registered pytree state (``repro.api.states``),
+``lits`` is the ``[B, 2F]`` literal matrix, and ``key`` (when not None)
+draws one read cycle of noise.  Beyond the signature, a backend declares
+
+* which state types it accepts, and
+* a **capability set** — what physics/deployment features it models
+  (``models_csa_offset``, ``supports_replica_vmap``, ``fused_kernel``,
+  ...).
+
+Selection is then explicit: callers state what they *need* and what they
+*prefer*; :func:`select_backend` returns the chosen backend plus a
+``Selection`` record saying whether the preference had to be overridden
+and why.  This replaces the serve engine's old silent boolean fallback
+(``EngineConfig.use_kernel`` + the csa_offset special case): when
+capability selection changes noise semantics, the caller gets a loud,
+inspectable reason to surface in metrics.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, List, Optional, Tuple, Type
+
+from repro.api.states import (CoalescedState, CrossbarState, DigitalState,
+                              ReplicaStackState)
+
+# The capability vocabulary.  A backend MAY model more than it declares,
+# never less.
+CAP_DIGITAL = "digital"                     # Boolean-domain evaluation
+CAP_ANALOG = "analog"                       # current-domain crossbar model
+CAP_FUSED_KERNEL = "fused_kernel"           # single fused Pallas dispatch
+CAP_MODELS_C2C = "models_c2c"               # cycle-to-cycle R excursions
+CAP_MODELS_CSA_OFFSET = "models_csa_offset"  # per-column CSA input offset
+CAP_REPLICA_VMAP = "supports_replica_vmap"  # [R, C, L] in one dispatch
+CAP_COALESCED = "coalesced_weights"         # weighted digital tail
+CAP_TPU_ONLY = "tpu_only"                   # no interpret-mode fallback
+
+KNOWN_CAPABILITIES = frozenset({
+    CAP_DIGITAL, CAP_ANALOG, CAP_FUSED_KERNEL, CAP_MODELS_C2C,
+    CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP, CAP_COALESCED, CAP_TPU_ONLY,
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One registered forward implementation."""
+
+    name: str
+    fn: Callable                            # class_sums(state, lits, key)
+    state_types: Tuple[Type, ...]
+    capabilities: FrozenSet[str]
+    priority: int = 0                       # higher wins among candidates
+    doc: str = ""
+
+    def accepts(self, state) -> bool:
+        return isinstance(state, self.state_types)
+
+    def provides(self, caps) -> bool:
+        return frozenset(caps) <= self.capabilities
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """Outcome of one capability-based backend choice."""
+
+    backend: Backend
+    required: FrozenSet[str]
+    preferred: Optional[str] = None
+    fallback_reason: Optional[str] = None   # set iff preference overridden
+
+    @property
+    def fell_back(self) -> bool:
+        return self.fallback_reason is not None
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, *, state_types, capabilities,
+                     priority: int = 0, doc: str = ""):
+    """Decorator: register ``fn`` as backend ``name``."""
+    unknown = frozenset(capabilities) - KNOWN_CAPABILITIES
+    if unknown:
+        raise ValueError(f"unknown capabilities {sorted(unknown)}; extend "
+                         "KNOWN_CAPABILITIES to add vocabulary")
+
+    def deco(fn):
+        if name in _REGISTRY:
+            raise ValueError(f"backend {name!r} already registered")
+        _REGISTRY[name] = Backend(
+            name=name, fn=fn, state_types=tuple(state_types),
+            capabilities=frozenset(capabilities), priority=priority,
+            doc=doc or (fn.__doc__ or "").strip().splitlines()[0]
+            if (doc or fn.__doc__) else "")
+        return fn
+
+    return deco
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown backend {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_backends() -> List[Backend]:
+    return sorted(_REGISTRY.values(), key=lambda b: b.name)
+
+
+def required_capabilities(state, key=None) -> FrozenSet[str]:
+    """The capability floor implied by ``state`` (and a noise key).
+
+    * a replica stack needs single-dispatch replica support;
+    * a noisy read (``key`` given) against a ``VariationConfig`` with
+      ``csa_offset`` on needs a backend that models the per-column CSA
+      offset — the fused kernel thresholds against one scalar reference
+      and therefore does NOT.
+    """
+    need = set()
+    if isinstance(state, ReplicaStackState):
+        need.add(CAP_REPLICA_VMAP)
+    if isinstance(state, (CrossbarState, ReplicaStackState)):
+        need.add(CAP_ANALOG)
+        if key is not None and state.vcfg.csa_offset:
+            need.add(CAP_MODELS_CSA_OFFSET)
+        if key is not None and state.vcfg.c2c:
+            need.add(CAP_MODELS_C2C)
+    if isinstance(state, DigitalState):
+        need.add(CAP_DIGITAL)
+    if isinstance(state, CoalescedState):
+        need.add(CAP_COALESCED)
+    return frozenset(need)
+
+
+def _candidates(state, need) -> List[Backend]:
+    cands = [b for b in _REGISTRY.values()
+             if b.accepts(state) and b.provides(need)]
+    return sorted(cands, key=lambda b: (-b.priority, b.name))
+
+
+def select_backend(state, *, key=None, prefer: Optional[str] = None,
+                   require=()) -> Selection:
+    """Pick the backend for ``state``: explicit capability matching.
+
+    ``prefer`` names a backend to use *if it satisfies* the required
+    capability set; when it does not, the highest-priority satisfying
+    backend is chosen instead and ``Selection.fallback_reason`` records
+    exactly which capabilities forced the switch — callers must surface
+    this (the serve engine logs it into ``ServeMetrics``).
+
+    ``require`` adds caller capabilities on top of the state-implied set.
+    """
+    need = frozenset(required_capabilities(state, key)) | frozenset(require)
+    cands = _candidates(state, need)
+    if not cands:
+        raise ValueError(
+            f"no registered backend accepts {type(state).__name__} with "
+            f"capabilities {sorted(need)}; registered: "
+            f"{[(b.name, sorted(b.capabilities)) for b in list_backends()]}")
+    if prefer is not None:
+        pref = get_backend(prefer)
+        if not pref.accepts(state):
+            reason = (f"{prefer} does not accept "
+                      f"{type(state).__name__}")
+        elif not pref.provides(need):
+            missing = sorted(need - pref.capabilities)
+            reason = f"{prefer} lacks {missing}"
+        else:
+            return Selection(backend=pref, required=need, preferred=prefer)
+        return Selection(backend=cands[0], required=need, preferred=prefer,
+                         fallback_reason=f"{reason}; selected "
+                                         f"{cands[0].name}")
+    return Selection(backend=cands[0], required=need)

@@ -1,0 +1,194 @@
+"""Registered pytree states: the *data* half of the unified backend API.
+
+Every inference backend (``repro.api.backends``) consumes one of four
+state types.  Each is a frozen dataclass registered as a JAX pytree whose
+**children are the device arrays** and whose **aux_data is the static
+configuration** (``TMConfig`` / ``IMBUEConfig`` / ``VariationConfig`` /
+``CoalescedConfig`` — all frozen, hence hashable), so states pass
+directly through ``jax.jit`` (as traced arguments), ``jax.vmap``,
+``jax.tree_util.tree_map``, ``jax.device_put`` and checkpoint
+serialization without any custom plumbing:
+
+* ``DigitalState``      — the Boolean-domain reference model
+  (``include [C, L]`` bool, optionally the raw TA state);
+* ``CrossbarState``     — one programmed IMBUE chip
+  (``r_mem [C, L]`` Ω + ``include``);
+* ``ReplicaStackState`` — R independently programmed chips
+  (``r_stack [R, C, L]``) — the serve-pool hot path;
+* ``CoalescedState``    — a shared clause pool with per-class integer
+  weights (arXiv:2108.07594; the paper's §V future work).
+
+Device layout is deliberately *state*, not a function argument: the
+crossbar-constrained-mapping line of work (arXiv:1809.08195) and
+IMPACT's one-time-program/many-read model (arXiv:2412.05327) both want
+the programmed arrays to travel with their electrical config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import variations as var
+from repro.core.coalesced import CoalescedConfig
+from repro.core.imbue import IMBUEConfig, ProgrammedCrossbar
+from repro.core.mapping import CrossbarMapping
+from repro.core.tm import TMConfig, include_mask
+
+
+def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
+    """Register a frozen dataclass as a pytree: ``data_fields`` become
+    children (arrays; ``None`` children flatten away cleanly), and
+    ``meta_fields`` become hashable aux_data."""
+
+    def flatten(obj):
+        return (tuple(getattr(obj, f) for f in data_fields),
+                tuple(getattr(obj, f) for f in meta_fields))
+
+    def unflatten(meta, children):
+        return cls(**dict(zip(data_fields, children)),
+                   **dict(zip(meta_fields, meta)))
+
+    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    return cls
+
+
+@dataclasses.dataclass(frozen=True)
+class DigitalState:
+    """The Boolean-domain TM: include actions (+ optional TA states)."""
+
+    include: jax.Array                      # [C, L] bool TA actions
+    ta_state: Optional[jax.Array]           # [C, L] int, or None
+    tm_cfg: TMConfig                        # static
+
+    @classmethod
+    def from_ta(cls, ta_state: jax.Array, tm_cfg: TMConfig) -> "DigitalState":
+        return cls(include=include_mask(ta_state, tm_cfg),
+                   ta_state=ta_state, tm_cfg=tm_cfg)
+
+    @classmethod
+    def from_include(cls, include: jax.Array,
+                     tm_cfg: TMConfig) -> "DigitalState":
+        return cls(include=jnp.asarray(include, bool), ta_state=None,
+                   tm_cfg=tm_cfg)
+
+    @property
+    def n_classes(self) -> int:
+        return self.tm_cfg.n_classes
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarState:
+    """One programmed IMBUE chip: memristor resistances + TA actions."""
+
+    r_mem: jax.Array                        # [C, L] programmed Ω
+    include: jax.Array                      # [C, L] bool TA actions
+    tm_cfg: TMConfig                        # static
+    icfg: IMBUEConfig = IMBUEConfig()       # static (electrical)
+    vcfg: var.VariationConfig = var.VariationConfig()   # static (noise)
+
+    @classmethod
+    def program(cls, include: jax.Array, key: jax.Array, tm_cfg: TMConfig,
+                vcfg: var.VariationConfig = var.VariationConfig(),
+                icfg: IMBUEConfig = IMBUEConfig()) -> "CrossbarState":
+        """One-time programming: D2D resistance draws at SET/RESET time."""
+        include = jnp.asarray(include, bool)
+        r_mem = var.sample_device_resistance(key, include, vcfg)
+        return cls(r_mem=r_mem, include=include, tm_cfg=tm_cfg,
+                   icfg=icfg, vcfg=vcfg)
+
+    @classmethod
+    def from_crossbar(cls, xbar: ProgrammedCrossbar, tm_cfg: TMConfig,
+                      vcfg: var.VariationConfig = var.VariationConfig()
+                      ) -> "CrossbarState":
+        """Adopt a legacy ``ProgrammedCrossbar`` (deprecated container)."""
+        return cls(r_mem=xbar.r_mem, include=jnp.asarray(xbar.include, bool),
+                   tm_cfg=tm_cfg, icfg=xbar.cfg, vcfg=vcfg)
+
+    @property
+    def mapping(self) -> CrossbarMapping:
+        c, l = self.include.shape
+        return CrossbarMapping(n_clauses=c, n_literals=l,
+                               width=self.icfg.width)
+
+    @property
+    def n_classes(self) -> int:
+        return self.tm_cfg.n_classes
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaStackState:
+    """R independently programmed chips sharing one set of TA actions.
+
+    The serving hot path: backends dispatch the whole stack through ONE
+    vmapped kernel invocation (no per-replica Python loop)."""
+
+    r_stack: jax.Array                      # [R, C, L] programmed Ω
+    include: jax.Array                      # [C, L] bool (shared actions)
+    tm_cfg: TMConfig                        # static
+    icfg: IMBUEConfig = IMBUEConfig()       # static
+    vcfg: var.VariationConfig = var.VariationConfig()   # static
+
+    @classmethod
+    def program(cls, include: jax.Array, key: jax.Array, n_replicas: int,
+                tm_cfg: TMConfig,
+                vcfg: var.VariationConfig = var.VariationConfig(),
+                icfg: IMBUEConfig = IMBUEConfig()) -> "ReplicaStackState":
+        """Program R chips with independent D2D draws (one per chip)."""
+        include = jnp.asarray(include, bool)
+        keys = jax.random.split(key, n_replicas)
+        r_stack = jax.vmap(
+            lambda k: var.sample_device_resistance(k, include, vcfg))(keys)
+        return cls(r_stack=r_stack, include=include, tm_cfg=tm_cfg,
+                   icfg=icfg, vcfg=vcfg)
+
+    @property
+    def n_replicas(self) -> int:
+        return int(self.r_stack.shape[0])
+
+    @property
+    def mapping(self) -> CrossbarMapping:
+        c, l = self.include.shape
+        return CrossbarMapping(n_clauses=c, n_literals=l,
+                               width=self.icfg.width)
+
+    @property
+    def n_classes(self) -> int:
+        return self.tm_cfg.n_classes
+
+    def replica_slice(self, i: int) -> "ReplicaStackState":
+        """Single-chip view ``[1, C, L]`` — shape is replica-independent,
+        so routed dispatch reuses one compiled kernel for every chip."""
+        return dataclasses.replace(self, r_stack=self.r_stack[i:i + 1])
+
+    def replica(self, i: int) -> CrossbarState:
+        """Chip ``i`` as a standalone ``CrossbarState``."""
+        return CrossbarState(r_mem=self.r_stack[i], include=self.include,
+                             tm_cfg=self.tm_cfg, icfg=self.icfg,
+                             vcfg=self.vcfg)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescedState:
+    """Shared clause pool + per-class integer weights (coalesced TM)."""
+
+    ta_state: jax.Array                     # [C, L] int TA states
+    weights: jax.Array                      # [C, M] int per-class weights
+    cfg: CoalescedConfig                    # static
+
+    @property
+    def n_classes(self) -> int:
+        return self.cfg.n_classes
+
+
+_register(DigitalState, ("include", "ta_state"), ("tm_cfg",))
+_register(CrossbarState, ("r_mem", "include"), ("tm_cfg", "icfg", "vcfg"))
+_register(ReplicaStackState, ("r_stack", "include"),
+          ("tm_cfg", "icfg", "vcfg"))
+_register(CoalescedState, ("ta_state", "weights"), ("cfg",))
+
+STATE_TYPES = (DigitalState, CrossbarState, ReplicaStackState,
+               CoalescedState)

@@ -84,14 +84,13 @@ def polarity(cfg: TMConfig) -> jax.Array:
     return jnp.tile(pol, cfg.n_classes).astype(jnp.int32)
 
 
-def clause_outputs(
-    ta_state: jax.Array,
+def clause_outputs_from_include(
+    include: jax.Array,
     lits: jax.Array,
-    cfg: TMConfig,
     *,
     training: bool = False,
 ) -> jax.Array:
-    """Evaluate every clause on every datapoint.
+    """Clause outputs from a bool include mask (the reference semantics).
 
     A clause fires iff no included literal is 0.  We count *violations*
     ``v[b, c] = sum_i (1 - lit[b, i]) * include[c, i]`` — a binary matmul —
@@ -103,14 +102,26 @@ def clause_outputs(
 
     Returns ``uint8 [B, C]``.
     """
-    inc = include_mask(ta_state, cfg)
     lit0 = (1 - lits).astype(jnp.float32)              # violating inputs
-    viol = lit0 @ inc.astype(jnp.float32).T            # [B, C]
+    viol = lit0 @ include.astype(jnp.float32).T        # [B, C]
     fired = viol == 0
     if not training:
-        nonempty = inc.any(axis=-1)                    # [C]
+        nonempty = include.any(axis=-1)                # [C]
         fired = jnp.logical_and(fired, nonempty[None, :])
     return fired.astype(jnp.uint8)
+
+
+def clause_outputs(
+    ta_state: jax.Array,
+    lits: jax.Array,
+    cfg: TMConfig,
+    *,
+    training: bool = False,
+) -> jax.Array:
+    """Evaluate every clause on every datapoint (see
+    :func:`clause_outputs_from_include` for the semantics)."""
+    return clause_outputs_from_include(include_mask(ta_state, cfg), lits,
+                                       training=training)
 
 
 def class_sums(clauses: jax.Array, cfg: TMConfig) -> jax.Array:

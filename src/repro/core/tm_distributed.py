@@ -47,7 +47,9 @@ def tm_infer_step(ta_state, x, cfg: TMConfig):
     preferred_element_type, values exact)."""
     lits = literals(x)
     inc = (ta_state > cfg.n_states).astype(jnp.bfloat16)
-    pol = polarity_matrix(cfg, inc > 0)[:, :cfg.n_classes]
+    pol = polarity_matrix(cfg, inc > 0,
+                          n_class_pad=max(128, cfg.n_classes)
+                          )[:, :cfg.n_classes]
     lit0 = (1 - lits).astype(jnp.bfloat16)
     viol = jnp.dot(lit0, inc.T, preferred_element_type=jnp.float32)
     clauses = (viol == 0).astype(jnp.bfloat16)
@@ -63,7 +65,9 @@ def imbue_infer_step(g_on, i_leak, include, x, cfg: TMConfig, *,
     Currents run in bf16 (relative error ~0.4% vs the ~11% sensing
     margin; §Perf iter T2) with f32 accumulation for the KCL sums."""
     lits = literals(x)
-    pol = polarity_matrix(cfg, include)[:, :cfg.n_classes]
+    pol = polarity_matrix(cfg, include,
+                          n_class_pad=max(128, cfg.n_classes)
+                          )[:, :cfg.n_classes]
     l = lits.shape[-1]
     pad = (-l) % width
     if pad:

@@ -8,7 +8,14 @@ Public API:
   ``clause_eval(lits, include)``                    -> [B, C] clause bits
   ``tm_class_sums(lits, include, cfg)``             -> [B, M] digital, fused
   ``imbue_class_sums(lits, xbar, cfg)``             -> [B, M] analog, fused
+  ``imbue_class_sums_stack(lits, r_stack, ...)``    -> [R, B, M] one vmapped
+                                                       dispatch per stack
   ``polarity_matrix(cfg, include)``                 -> [C, M] signed one-hot
+
+Most callers should go through ``repro.api`` (capability-based backend
+selection over registered pytree states) rather than calling these
+wrappers directly; ``imbue_class_sums_stacked`` (per-chip loop) is a
+deprecated shim kept for one release.
 """
 
 from __future__ import annotations
@@ -49,10 +56,14 @@ def polarity_matrix(cfg: TMConfig, include: jax.Array | None = None,
     inference-time empty-clause mask, folded into the matmul.
     """
     from repro.core.tm import polarity
+    if cfg.n_classes > n_class_pad:
+        raise ValueError(
+            f"n_classes={cfg.n_classes} exceeds n_class_pad={n_class_pad}; "
+            "widen the class padding (kernel outputs are sliced to "
+            "n_classes, so silent overflow would drop classes)")
     c = cfg.n_clauses
     cls_of = jnp.arange(c) // cfg.clauses_per_class
-    onehot = jax.nn.one_hot(cls_of, max(n_class_pad, cfg.n_classes),
-                            dtype=jnp.float32)
+    onehot = jax.nn.one_hot(cls_of, n_class_pad, dtype=jnp.float32)
     p = onehot * polarity(cfg)[:, None].astype(jnp.float32)
     if include is not None:
         p = p * include.any(axis=-1)[:, None].astype(jnp.float32)
@@ -85,9 +96,8 @@ def tm_class_sums(lits: jax.Array, include: jax.Array, cfg: TMConfig, *,
     lit0 = _pad_to(_pad_to((1 - lits).astype(jnp.float32), 0, bt), 1, kt)
     inc_t = _pad_to(_pad_to(include.astype(jnp.float32), 0, ct), 1, kt).T
     pol = _pad_to(polarity_matrix(cfg, include), 0, ct)
-    out = _ai_out = _ce.tm_infer_call(lit0, inc_t, pol, bt=bt, ct=ct, kt=kt,
-                                      interpret=interp)
-    del _ai_out
+    out = _ce.tm_infer_call(lit0, inc_t, pol, bt=bt, ct=ct, kt=kt,
+                            interpret=interp)
     return out[:b, :cfg.n_classes]
 
 
@@ -136,6 +146,50 @@ def imbue_class_sums(lits: jax.Array, xbar, cfg: TMConfig, *,
         cfg, width=xbar.cfg.width, **tiles)
 
 
+@partial(jax.jit, static_argnames=("icfg", "cfg", "vcfg", "bt", "ct", "kt",
+                                   "interpret"))
+def imbue_class_sums_stack(
+    lits: jax.Array,          # [B, L] uint8
+    r_stack: jax.Array,       # [R, C, L] per-replica programmed resistance
+    include: jax.Array,       # [C, L] bool (shared TA actions)
+    icfg,                     # IMBUEConfig (static)
+    cfg: TMConfig,
+    key: jax.Array | None = None,
+    *,
+    vcfg=None,
+    bt: int = BT, ct: int = CT, kt: int = KT_ANALOG,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused analog inference over a replica stack -> ``[R, B, M]``.
+
+    ONE vmapped kernel invocation covers the whole stack: conductances
+    are computed batched ``[R, C, L]`` and the Pallas call is traced once
+    with the replica axis handled by vmap's batching rule (no per-chip
+    Python loop, no per-chip dispatch).  Each replica still draws fresh
+    C2C noise (one read cycle per chip) from its split of ``key``.
+
+    The kernel thresholds against a fixed scalar reference, so the
+    per-column CSA offset is NOT modeled — capability selection
+    (``repro.api.select_backend``) routes ``csa_offset`` reads to the
+    jnp path, which models it.
+    """
+    from repro.core.imbue import conductances
+    from repro.core.variations import VariationConfig
+    vcfg = vcfg or VariationConfig.nominal()
+
+    def one(r_mem, k):
+        g_on, i_leak = conductances(r_mem, include, icfg, k, vcfg)
+        return imbue_class_sums_raw(
+            lits, g_on, i_leak, include, icfg.v_read, icfg.r_divider,
+            icfg.reference_voltage(), cfg, width=icfg.width,
+            bt=bt, ct=ct, kt=kt, interpret=interpret)
+
+    if key is None:
+        return jax.vmap(lambda r: one(r, None))(r_stack)
+    keys = jax.random.split(key, r_stack.shape[0])
+    return jax.vmap(one)(r_stack, keys)
+
+
 def imbue_class_sums_stacked(
     lits: jax.Array,          # [B, L] uint8
     r_stack: jax.Array,       # [R, C, L] per-replica programmed resistance
@@ -147,27 +201,17 @@ def imbue_class_sums_stacked(
     vcfg=None,
     **tiles,
 ) -> jax.Array:
-    """Fused analog inference over a replica stack -> ``[R, B, M]``.
+    """DEPRECATED shim: use :func:`imbue_class_sums_stack` (or, better,
+    ``repro.api.class_sums`` with a ``ReplicaStackState``).
 
-    Each replica re-runs the kernel with its own conductances and fresh
-    C2C noise (one read cycle per chip).  The kernel thresholds against
-    a fixed scalar reference, so the per-column CSA offset is NOT
-    modeled here — use the vmapped jnp path
-    (``core.imbue.stacked_class_sums``) when ``vcfg.csa_offset`` is on.
-    The host loop reuses the single compiled kernel (identical shapes
-    across replicas).
+    The old per-chip host loop is gone; this delegates to the single
+    vmapped dispatch.  Noise draws are unchanged (same key split per
+    replica), so traces are bit-identical to the loop it replaces.
     """
-    from repro.core.imbue import conductances
-    from repro.core.variations import VariationConfig
-    vcfg = vcfg or VariationConfig.nominal()
-    n_replicas = r_stack.shape[0]
-    keys = (jax.random.split(key, n_replicas) if key is not None
-            else [None] * n_replicas)
-    out = [
-        imbue_class_sums_raw(
-            lits, *conductances(r_stack[i], include, icfg, keys[i], vcfg),
-            include, icfg.v_read, icfg.r_divider, icfg.reference_voltage(),
-            cfg, width=icfg.width, **tiles)
-        for i in range(n_replicas)
-    ]
-    return jnp.stack(out)
+    import warnings
+    warnings.warn(
+        "ops.imbue_class_sums_stacked is deprecated; use "
+        "repro.api.class_sums(ReplicaStackState(...), lits, key) or "
+        "ops.imbue_class_sums_stack", DeprecationWarning, stacklevel=2)
+    return imbue_class_sums_stack(lits, r_stack, include, icfg, cfg, key,
+                                  vcfg=vcfg, **tiles)

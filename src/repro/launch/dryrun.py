@@ -143,7 +143,6 @@ def lower_tm_cell(arch: str, shape: str, mesh, *, verbose=True):
     """The paper's TM workload through the same dry-run machinery."""
     from repro.configs.imbue_tm import tm_config
     from repro.core import tm_distributed as tmd
-    from repro.core import variations as var
     from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
                                          HloCost)
 
@@ -172,14 +171,18 @@ def lower_tm_cell(arch: str, shape: str, mesh, *, verbose=True):
         lowered = jitted.lower(st_abs, x_abs)
         mult, active = 2.0, 1.0
     else:   # analog
+        from repro.core.imbue import IMBUEConfig
         g_abs = jax.ShapeDtypeStruct((c, l), jnp.float32)
         inc_abs = jax.ShapeDtypeStruct((c, l), jnp.bool_)
-        icfg_vref = 6.819e-3
+        # Electrical constants come from the unified-backend config (the
+        # same IMBUEConfig that repro.api.CrossbarState carries as
+        # aux_data), not a hand-copied literal.
+        icfg = IMBUEConfig()
 
         def step(g_on, i_leak, inc, x):
             return tmd.imbue_infer_step(
-                g_on, i_leak, inc, x, cfg, v_read=var.V_READ, r_div=100.0,
-                v_ref=icfg_vref)
+                g_on, i_leak, inc, x, cfg, v_read=icfg.v_read,
+                r_div=icfg.r_divider, v_ref=icfg.reference_voltage())
 
         jitted = jax.jit(step, in_shardings=(st_sh, st_sh, st_sh, x_sh),
                          out_shardings=y_sh)

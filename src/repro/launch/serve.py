@@ -31,7 +31,8 @@ def build_engine(args, cfg: TMConfig, ta: jax.Array) -> ServeEngine:
     ecfg = EngineConfig(
         batcher=BatcherConfig.for_max_batch(
             args.batch, max_wait_s=args.max_wait_ms * 1e-3),
-        routing=args.routing)
+        routing=args.routing,
+        backend=args.backend)
     return ServeEngine.from_ta_state(
         ta, cfg, n_replicas=args.replicas, key=jax.random.PRNGKey(3),
         vcfg=vcfg, ecfg=ecfg)
@@ -45,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--routing", default="round_robin",
                     choices=("round_robin", "least_loaded", "ensemble"))
+    ap.add_argument("--backend", default=None,
+                    choices=("analog-pallas", "analog-jnp"),
+                    help="forward-backend preference (repro.api name); "
+                         "capability selection may fall back loudly")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--nominal", action="store_true",
@@ -73,7 +78,10 @@ def main(argv=None):
 
     engine = build_engine(args, cfg, ta)
     print(f"[serve] pool of {args.replicas} crossbars programmed, "
-          f"routing={args.routing}")
+          f"routing={args.routing}, backend={engine.backend.name}")
+    if engine.selection.fell_back:
+        print(f"[serve] BACKEND FALLBACK: "
+              f"{engine.selection.fallback_reason}")
 
     # Stream individual requests; pump as they queue (the engine cuts a
     # batch when a bucket fills or the oldest request times out).

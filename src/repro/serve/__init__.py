@@ -4,23 +4,28 @@ Layers (see each module's docstring):
 
 * ``batching``  — deadline-aware request batching, padded/bucketed to the
   Pallas kernel tile shapes;
-* ``replica``   — R independently programmed crossbars with routing and
-  ensemble voting;
-* ``engine``    — the request -> batch -> kernel -> response loop;
+* ``replica``   — R independently programmed crossbars (a frozen pytree
+  ``ReplicaPool``) + mutable ``RouterState`` counters and ensemble
+  voting;
+* ``engine``    — the request -> batch -> ``repro.api`` backend ->
+  response loop, with capability-selected forward and loud fallback
+  accounting;
 * ``metrics``   — simulated latency/throughput + the paper's energy
   figures of merit.
 """
 
 from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
-from repro.serve.engine import ENSEMBLE, EngineConfig, Response, ServeEngine
+from repro.serve.engine import (DEFAULT_BACKEND, ENSEMBLE, EngineConfig,
+                                Response, ServeEngine)
 from repro.serve.metrics import (RequestRecord, ServeMetrics,
                                  hardware_figures)
-from repro.serve.replica import (ReplicaPool, ensemble_vote,
+from repro.serve.replica import (ReplicaPool, RouterState, ensemble_vote,
                                  program_replica_pool)
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher", "Request",
-    "ENSEMBLE", "EngineConfig", "Response", "ServeEngine",
+    "DEFAULT_BACKEND", "ENSEMBLE", "EngineConfig", "Response",
+    "ServeEngine",
     "RequestRecord", "ServeMetrics", "hardware_figures",
-    "ReplicaPool", "ensemble_vote", "program_replica_pool",
+    "ReplicaPool", "RouterState", "ensemble_vote", "program_replica_pool",
 ]

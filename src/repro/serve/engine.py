@@ -1,13 +1,15 @@
 """The IMBUE serving engine: requests in, deadline-batched analog reads out.
 
-Layering (ISSUE: serving subsystem):
+Layering (ISSUE 2: unified backend API):
 
   submit() -> DynamicBatcher (pad/bucket to Pallas tile shapes)
-           -> ReplicaPool routing (round-robin / least-loaded / ensemble)
-           -> fused Pallas kernel (``ops.imbue_class_sums_raw``; interpret
-              mode off-TPU) or the vmapped jnp path, with one fresh
-              C2C + CSA-noise key per read cycle
-           -> Response records + ServeMetrics accounting.
+           -> RouterState routing (round-robin / least-loaded / ensemble)
+           -> ``repro.api`` backend — capability-selected once at engine
+              construction (``select_backend``): ``analog-pallas`` (one
+              vmapped kernel over the whole ``ReplicaStackState``) when
+              the pool's noise model allows it, else ``analog-jnp`` —
+              with the switch recorded LOUDLY in ``ServeMetrics``
+           -> Response records + metrics accounting.
 
 The engine is synchronous and single-threaded by design: ``pump()`` cuts
 and dispatches every due batch, so callers drive it from their own event
@@ -21,23 +23,30 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import imbue, tm
+from repro import api
+from repro.api.registry import CAP_FUSED_KERNEL
+from repro.core import tm
 from repro.core.imbue import IMBUEConfig
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
-from repro.kernels import ops
 from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher
 from repro.serve.metrics import RequestRecord, ServeMetrics, hardware_figures
-from repro.serve.replica import ReplicaPool, ensemble_vote, \
+from repro.serve.replica import ReplicaPool, RouterState, ensemble_vote, \
     program_replica_pool
 
 ENSEMBLE = -1      # Response.replica value when every chip voted
+
+# The engine's default backend preference: the fused Pallas kernel with
+# single-dispatch replica vmap.  Capability selection overrides it when
+# the pool's noise model needs physics the kernel doesn't implement.
+DEFAULT_BACKEND = "analog-pallas"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,12 +56,30 @@ class EngineConfig:
     batcher: BatcherConfig = BatcherConfig()
     routing: str = "round_robin"     # round_robin | least_loaded | ensemble
     ensemble_mode: str = "majority"  # majority | sum (see ensemble_vote)
-    # Fused Pallas kernel vs vmapped jnp forward.  The kernel senses
-    # against a fixed reference, so it models C2C noise but not the
-    # per-column CSA offset; when the pool's VariationConfig enables
-    # csa_offset the engine falls back to the jnp path, which models it.
-    use_kernel: bool = True
+    # Backend *preference* for the forward path (repro.api registry name).
+    # None -> DEFAULT_BACKEND.  Selection is capability-checked against
+    # the pool's VariationConfig: e.g. `analog-pallas` senses against a
+    # scalar reference and does not model the per-column CSA offset, so a
+    # csa_offset-enabled pool falls back to `analog-jnp` — and the engine
+    # records that switch in ServeMetrics instead of hiding it.
+    backend: Optional[str] = None
+    # DEPRECATED (one release): the old boolean kernel toggle.  True maps
+    # to backend="analog-pallas", False to "analog-jnp".
+    use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None  # None -> interpret off-TPU
+
+    def backend_preference(self) -> str:
+        if self.use_kernel is not None:
+            warnings.warn(
+                "EngineConfig.use_kernel is deprecated; set "
+                "EngineConfig.backend to a repro.api backend name "
+                "('analog-pallas' / 'analog-jnp')",
+                DeprecationWarning, stacklevel=2)
+            if self.backend is not None:
+                raise ValueError("set EngineConfig.backend or the "
+                                 "deprecated use_kernel, not both")
+            return "analog-pallas" if self.use_kernel else "analog-jnp"
+        return self.backend or DEFAULT_BACKEND
 
 
 @dataclasses.dataclass
@@ -84,8 +111,23 @@ class ServeEngine:
         self.clock = clock
         self.batcher = DynamicBatcher(ecfg.batcher)
         self.metrics = ServeMetrics()
+        self.router: RouterState = pool.router()
+        self.state: api.ReplicaStackState = pool.state(tm_cfg)
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._noise_free = not (pool.vcfg.c2c or pool.vcfg.csa_offset)
+        # Capability-based backend selection, once, up front.  The noise
+        # model is static per engine, so the choice is too; a fallback
+        # (preference rejected) is surfaced immediately and accounted per
+        # dispatch in ServeMetrics.
+        sel_key = None if self._noise_free else self._key
+        self.selection: api.Selection = api.select_backend(
+            self.state, key=sel_key, prefer=ecfg.backend_preference())
+        self.backend: api.Backend = self.selection.backend
+        if self.selection.fell_back:
+            warnings.warn(
+                f"serve backend fallback: {self.selection.fallback_reason} "
+                "(noise semantics differ from the preferred backend; see "
+                "engine.summary()['forward_fallbacks'])", stacklevel=2)
         self._next_rid = 0
         self._submitted: List[int] = []
         self._results: Dict[int, Response] = {}
@@ -154,25 +196,33 @@ class ServeEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _forward(self, state: api.ReplicaStackState, lits: jax.Array,
+                 key: Optional[jax.Array], bt: int) -> jax.Array:
+        """Per-replica class sums ``[R, bucket, M]``: one backend call."""
+        opts = ({"bt": bt, "interpret": self.ecfg.interpret}
+                if CAP_FUSED_KERNEL in self.backend.capabilities else {})
+        if self.selection.fell_back:
+            self.metrics.note_forward_fallback(
+                self.selection.fallback_reason)
+        return self.backend.fn(state, lits, key, **opts)
+
     def _dispatch(self, batch: Batch) -> None:
         t_dispatch = self.clock()
         lits = tm.literals(jnp.asarray(batch.x))
         key = self._read_key()
         if self.ecfg.routing == "ensemble":
-            sums_rbm = self._forward_stacked(lits, self.pool.r_stack, key,
-                                             bt=batch.bucket)
+            sums_rbm = self._forward(self.state, lits, key, batch.bucket)
             preds = ensemble_vote(sums_rbm, self.ecfg.ensemble_mode)
             sums = sums_rbm.sum(axis=0)
             replica = ENSEMBLE
             for i in range(self.pool.n_replicas):
-                self.pool.note_dispatch(i, batch.bucket)
+                self.router.note_dispatch(i, batch.bucket)
         else:
-            replica = self.pool.pick(self.ecfg.routing)
-            sums = self._forward_stacked(
-                lits, self.pool.r_stack[replica:replica + 1], key,
-                bt=batch.bucket)[0]
+            replica = self.router.pick(self.ecfg.routing)
+            sums = self._forward(self.state.replica_slice(replica), lits,
+                                 key, batch.bucket)[0]
             preds = jnp.argmax(sums, axis=-1)
-            self.pool.note_dispatch(replica, batch.bucket)
+            self.router.note_dispatch(replica, batch.bucket)
         preds = np.asarray(jax.block_until_ready(preds))
         sums = np.asarray(sums)
         t_done = self.clock()
@@ -190,30 +240,16 @@ class ServeEngine:
                 replica=replica))
         self.metrics.record_batch(records, batch.bucket)
 
-    def _forward_stacked(self, lits: jax.Array, r_stack: jax.Array,
-                         key: Optional[jax.Array], bt: int) -> jax.Array:
-        """Per-replica class sums ``[R, bucket, M]`` for one read cycle."""
-        pool = self.pool
-        kernel_ok = key is None or not pool.vcfg.csa_offset
-        if self.ecfg.use_kernel and kernel_ok:
-            return ops.imbue_class_sums_stacked(
-                lits, r_stack, pool.include, pool.icfg, self.tm_cfg,
-                key=key, vcfg=pool.vcfg, bt=bt,
-                interpret=self.ecfg.interpret)
-        # lits is [features, ~features]: the first F columns are raw x.
-        return imbue.stacked_class_sums(
-            r_stack, pool.include,
-            lits[:, :self.tm_cfg.n_features], self.tm_cfg,
-            key, pool.vcfg, pool.icfg)
-
     # ------------------------------------------------------------- metrics
 
     def summary(self, includes: Optional[int] = None) -> Dict:
         """Simulation metrics + the crossbar's hardware figures of merit."""
         out = self.metrics.summary()
-        out["replica_load_rows"] = list(self.pool.rows_dispatched)
+        out["replica_load_rows"] = list(self.router.rows_dispatched)
         out["routing"] = self.ecfg.routing
         out["n_replicas"] = self.pool.n_replicas
+        out["backend"] = self.backend.name
+        out["backend_preferred"] = self.selection.preferred
         if includes is None:
             includes = int(jnp.sum(self.pool.include))
         out["hardware"] = hardware_figures(

@@ -62,6 +62,18 @@ class ServeMetrics:
         self.valid_rows = 0
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
+        # Capability-selection fallbacks (distinct reasons + count of
+        # affected dispatches).  Non-empty means the serving path is NOT
+        # the preferred backend — e.g. csa_offset forced the jnp path —
+        # so noise semantics differ from the preference.  Loud on purpose.
+        self.forward_fallbacks: List[str] = []
+        self.fallback_dispatches = 0
+
+    def note_forward_fallback(self, reason: str) -> None:
+        """Record one dispatch served by a fallback backend."""
+        self.fallback_dispatches += 1
+        if reason not in self.forward_fallbacks:
+            self.forward_fallbacks.append(reason)
 
     def record_batch(self, records: List[RequestRecord], bucket: int) -> None:
         self.records.extend(records)
@@ -97,7 +109,9 @@ class ServeMetrics:
                "throughput_rps": self.throughput(),
                "padding_overhead": self.padding_overhead(),
                "mean_batch": (self.valid_rows / self.batches
-                              if self.batches else 0.0)}
+                              if self.batches else 0.0),
+               "forward_fallbacks": list(self.forward_fallbacks),
+               "fallback_dispatches": self.fallback_dispatches}
         out.update(self.latency_ms())
         return out
 

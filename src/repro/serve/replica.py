@@ -4,18 +4,28 @@ The deployment model (IMBUE §II; the Y-Flash coalesced follow-up makes
 the same argument) is one-time programming followed by unbounded reads.
 Scaling read throughput therefore means *more programmed chips*, not
 bigger ones: the pool programs the same trained TA actions into R
-crossbars with independent D2D draws (``imbue.program_replica_stack``)
-and routes read batches across them.
+crossbars with independent D2D draws and routes read batches across
+them.
 
-Two routing policies plus an ensemble mode:
+Device state vs routing state are split on purpose:
+
+* ``ReplicaPool`` is a **frozen pytree** — children are the programmed
+  arrays, aux_data the static configs — so it survives ``tree_map``,
+  ``jit`` tracing, ``device_put`` and checkpoint round-trips unchanged.
+  It wraps an ``api.ReplicaStackState`` (the unified-backend state).
+* ``RouterState`` carries the mutable host-side routing counters
+  (rows/batches dispatched, round-robin cursor).  It never enters a
+  pytree, so serializing a pool cannot drag scheduler state along.
+
+Routing policies (``RouterState.pick``) plus an ensemble mode:
 
 * ``round_robin``   — cycle through replicas per batch;
 * ``least_loaded``  — pick the replica with the fewest dispatched rows
   (greedy balancing when bucket sizes vary);
 * ensemble          — every replica evaluates the batch under its own
   D2D + fresh C2C/CSA noise and the per-replica argmax votes are
-  majority-combined: a chip-level redundancy scheme that recovers
-  variation-induced flips (paper Fig. 7 studies exactly these flips).
+  majority-combined (``ensemble_vote``), a chip-level redundancy scheme
+  that recovers variation-induced flips (paper Fig. 7).
 
 With ``VariationConfig.nominal()`` all replicas are electrically
 identical and every path reproduces the digital TM bit-for-bit.
@@ -24,52 +34,43 @@ identical and every path reproduces the digital TM bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
+from typing import List
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import imbue
+from repro.api.states import ReplicaStackState
 from repro.core import variations as var
 from repro.core.imbue import IMBUEConfig, ProgrammedCrossbar
 from repro.core.mapping import CrossbarMapping
+from repro.core.tm import TMConfig
 
 
 @dataclasses.dataclass
-class ReplicaPool:
-    """R programmed crossbars sharing one set of TA actions."""
+class RouterState:
+    """Mutable host-side routing counters (NOT device state).
 
-    r_stack: jax.Array              # [R, C, L] programmed resistances (Ω)
-    include: jax.Array              # [C, L] bool TA actions
-    icfg: IMBUEConfig
-    vcfg: var.VariationConfig
+    Split out of ``ReplicaPool`` so the pool's device arrays can travel
+    through ``tree_map`` / checkpointing without carrying scheduler
+    bookkeeping."""
 
-    def __post_init__(self):
-        self.rows_dispatched = [0] * self.n_replicas
-        self.batches_dispatched = [0] * self.n_replicas
-        self._rr_next = 0
+    rows_dispatched: List[int]
+    batches_dispatched: List[int]
+    rr_next: int = 0
+
+    @classmethod
+    def create(cls, n_replicas: int) -> "RouterState":
+        return cls(rows_dispatched=[0] * n_replicas,
+                   batches_dispatched=[0] * n_replicas)
 
     @property
     def n_replicas(self) -> int:
-        return int(self.r_stack.shape[0])
-
-    @property
-    def mapping(self) -> CrossbarMapping:
-        c, l = self.include.shape
-        return CrossbarMapping(n_clauses=c, n_literals=l,
-                               width=self.icfg.width)
-
-    def crossbar(self, i: int) -> ProgrammedCrossbar:
-        """View replica ``i`` as a standalone ``ProgrammedCrossbar``."""
-        return ProgrammedCrossbar(r_mem=self.r_stack[i],
-                                  include=self.include,
-                                  mapping=self.mapping, cfg=self.icfg)
-
-    # ------------------------------------------------------------ routing
+        return len(self.rows_dispatched)
 
     def pick(self, policy: str) -> int:
         if policy == "round_robin":
-            i = self._rr_next
-            self._rr_next = (i + 1) % self.n_replicas
+            i = self.rr_next
+            self.rr_next = (i + 1) % self.n_replicas
             return i
         if policy == "least_loaded":
             return min(range(self.n_replicas),
@@ -81,6 +82,53 @@ class ReplicaPool:
         self.batches_dispatched[i] += 1
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ReplicaPool:
+    """R programmed crossbars sharing one set of TA actions (device state
+    only — routing counters live in ``RouterState``)."""
+
+    r_stack: jax.Array              # [R, C, L] programmed resistances (Ω)
+    include: jax.Array              # [C, L] bool TA actions
+    icfg: IMBUEConfig
+    vcfg: var.VariationConfig
+
+    def tree_flatten(self):
+        return (self.r_stack, self.include), (self.icfg, self.vcfg)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        r_stack, include = children
+        icfg, vcfg = aux
+        return cls(r_stack=r_stack, include=include, icfg=icfg, vcfg=vcfg)
+
+    @property
+    def n_replicas(self) -> int:
+        return int(self.r_stack.shape[0])
+
+    @property
+    def mapping(self) -> CrossbarMapping:
+        c, l = self.include.shape
+        return CrossbarMapping(n_clauses=c, n_literals=l,
+                               width=self.icfg.width)
+
+    def state(self, tm_cfg: TMConfig) -> ReplicaStackState:
+        """The pool as a unified-backend ``ReplicaStackState``."""
+        return ReplicaStackState(r_stack=self.r_stack, include=self.include,
+                                 tm_cfg=tm_cfg, icfg=self.icfg,
+                                 vcfg=self.vcfg)
+
+    def router(self) -> RouterState:
+        """A fresh routing-counter block sized for this pool."""
+        return RouterState.create(self.n_replicas)
+
+    def crossbar(self, i: int) -> ProgrammedCrossbar:
+        """View replica ``i`` as a standalone ``ProgrammedCrossbar``."""
+        return ProgrammedCrossbar(r_mem=self.r_stack[i],
+                                  include=self.include,
+                                  mapping=self.mapping, cfg=self.icfg)
+
+
 def program_replica_pool(
     ta_include: jax.Array,           # [C, L] bool include mask
     key: jax.Array,
@@ -89,6 +137,7 @@ def program_replica_pool(
     icfg: IMBUEConfig = IMBUEConfig(),
 ) -> ReplicaPool:
     """Program ``n_replicas`` chips (independent D2D draws per chip)."""
+    from repro.core import imbue
     r_stack = imbue.program_replica_stack(ta_include, key, n_replicas, vcfg)
     return ReplicaPool(r_stack=r_stack, include=jnp.asarray(ta_include),
                        icfg=icfg, vcfg=vcfg)

@@ -180,20 +180,62 @@ def test_least_loaded_balances_rows(small_cfg, random_ta, keys):
     x = np.zeros((32, small_cfg.n_features), np.uint8)
     eng.submit_many(list(x))
     eng.drain()
-    assert eng.pool.rows_dispatched == [16, 16]
+    assert eng.router.rows_dispatched == [16, 16]
 
 
 def test_kernel_and_jnp_paths_agree(small_cfg, random_ta, boolean_batch,
                                     keys):
     preds = []
-    for use_kernel in (True, False):
+    for backend in ("analog-pallas", "analog-jnp"):
         eng = ServeEngine.from_ta_state(
             random_ta, small_cfg, n_replicas=2, key=keys["route"],
             vcfg=VariationConfig.nominal(),
-            ecfg=EngineConfig(use_kernel=use_kernel))
+            ecfg=EngineConfig(backend=backend))
+        assert eng.backend.name == backend        # preference satisfied
         eng.submit_many(list(boolean_batch))
         preds.append([r.pred for r in eng.drain()])
     assert preds[0] == preds[1]
+
+
+def test_use_kernel_flag_is_a_deprecated_alias(small_cfg, random_ta, keys):
+    with pytest.warns(DeprecationWarning):
+        eng = ServeEngine.from_ta_state(
+            random_ta, small_cfg, key=keys["route"],
+            vcfg=VariationConfig.nominal(),
+            ecfg=EngineConfig(use_kernel=False))
+    assert eng.backend.name == "analog-jnp"
+
+
+def test_csa_offset_fallback_is_loud(small_cfg, random_ta, boolean_batch,
+                                     keys):
+    """csa_offset on + analog-pallas preferred -> engine switches to the
+    jnp path AND says so: construction warns, metrics/summary record the
+    reason and count every affected dispatch (satellite: no silent
+    noise-semantics changes)."""
+    with pytest.warns(UserWarning, match="fallback"):
+        eng = ServeEngine.from_ta_state(
+            random_ta, small_cfg, n_replicas=2, key=keys["route"],
+            vcfg=VariationConfig(),          # csa_offset=True
+            ecfg=EngineConfig(backend="analog-pallas"))
+    assert eng.backend.name == "analog-jnp"
+    assert eng.selection.fell_back
+    eng.submit_many(list(boolean_batch[:16]))
+    eng.drain()
+    s = eng.summary()
+    assert s["backend"] == "analog-jnp"
+    assert s["backend_preferred"] == "analog-pallas"
+    assert s["fallback_dispatches"] == eng.metrics.batches
+    assert any("models_csa_offset" in r for r in s["forward_fallbacks"])
+    # a nominal pool keeps the preferred kernel and records nothing
+    eng2 = ServeEngine.from_ta_state(
+        random_ta, small_cfg, key=keys["route"],
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(backend="analog-pallas"))
+    eng2.submit_many(list(boolean_batch[:8]))
+    eng2.drain()
+    s2 = eng2.summary()
+    assert s2["backend"] == "analog-pallas"
+    assert s2["forward_fallbacks"] == [] and s2["fallback_dispatches"] == 0
 
 
 def test_metrics_accounting(small_cfg, random_ta, keys):
