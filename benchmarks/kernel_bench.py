@@ -1,14 +1,28 @@
-"""Kernel micro-benchmarks + analytic TPU roofline for the Pallas kernels.
+"""Kernel micro-benchmarks, analytic TPU roofline, and the measured
+per-backend autotuning sweep.
 
 On this CPU container the Pallas kernels execute in interpret mode, so
 wall-times are NOT TPU numbers; we report them for regression tracking
 and derive the *analytic* kernel roofline from the block configuration
 (VMEM footprint, MXU-aligned dims, arithmetic intensity) — the same
 numbers the §Perf log iterates on.
+
+As a CLI this module drives ``repro.kernels.autotune``: it measures
+(bt, ct, kt) tile and bucket-size latency for every registered
+fused-kernel backend and regenerates the committed tuning table
+(``src/repro/kernels/tuning_table.json``) that ``ServeEngine`` and
+``BatcherConfig.for_max_batch`` consume via the capability registry.
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench            # full sweep,
+                                                              # writes table
+  PYTHONPATH=src python -m benchmarks.kernel_bench --smoke    # CI: tiny
+                                                              # sweep, no
+                                                              # write
 """
 
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -18,7 +32,7 @@ import numpy as np
 from repro.core import imbue
 from repro.core.tm import TMConfig, include_mask, init_ta_state, literals
 from repro.core.variations import VariationConfig
-from repro.kernels import ops
+from repro.kernels import autotune, ops
 from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
 
 
@@ -91,3 +105,37 @@ def bench(reps: int = 3):
     checks.append(("kernel/mxu_aligned",
                    dig["mxu_eff"] == 1.0, f"digital {dig['mxu_eff']}"))
     return rows, checks
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny tile sweep, no table write")
+    ap.add_argument("--reps", type=int, default=15,
+                    help="timing reps per candidate (min-of-reps)")
+    ap.add_argument("--out", default=autotune.DEFAULT_TABLE_PATH,
+                    help="tuning-table JSON path (full mode only)")
+    args = ap.parse_args(argv)
+
+    mode = "smoke" if args.smoke else "full"
+    print(f"[kernel_bench] measured autotune sweep ({mode}) on "
+          f"{jax.default_backend()}...")
+    entries = autotune.autotune(smoke=args.smoke, reps=args.reps)
+    for name, e in sorted(entries.items()):
+        print(f"[kernel_bench]   {name}: tiles={e['tiles']} "
+              f"buckets={e['bucket_sizes']} "
+              f"(best tile {min(e['tile_latency_us'].values()):.0f} us)")
+    if args.smoke:
+        ok = all(e["tiles"] and e["bucket_sizes"] for e in entries.values())
+        print(f"[kernel_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
+              f"{len(entries)} backends tuned (nothing written)")
+        if not ok:
+            raise SystemExit(1)
+        return None
+    path = autotune.save_table(entries, args.out)
+    print(f"[kernel_bench] wrote {path}")
+    return entries
+
+
+if __name__ == "__main__":
+    main()

@@ -6,12 +6,24 @@ per-request serial path (one kernel dispatch per request — what
 ``launch/serve.py`` did before the engine existed).  Writes
 ``BENCH_serve.json`` next to the repo root.
 
+ISSUE 3 additions: the default datapath is the **packed** uint32
+literal wire (packed once per request at submit; see
+``serve/batching.py``) with **measured** kernel tiles and bucket
+ladders from the registry tuning table (``kernels/autotune.py``).  The
+report carries an explicit before/after pair at the headline cell
+(R=4, batch 64): ``before_unpacked_static`` re-measures the PR-2
+configuration (dense uint8 wire, static buckets, default tiles) on the
+same host, next to the packed+tuned ``sweep`` rows.  Each timed
+configuration is run ``--repeats`` times and the best run is reported —
+wall-clock on a shared CPU container is noisy and every positive
+excursion is interference, not the engine.
+
 Interpret-mode Pallas on CPU means absolute numbers are simulator
 figures, not hardware ones; the hardware figures of merit are reported
-separately by ``repro.serve.metrics.hardware_figures``.  The quantity
-that transfers is the *relative* win of batching: per-dispatch overhead
-is amortized over the bucket, exactly as a real accelerator amortizes
-launch + DMA cost.
+separately by ``repro.serve.metrics.hardware_figures``.  The quantities
+that transfer are the *relative* win of batching/tuning and the
+bytes-moved-per-dispatch column, which is exactly the HBM/interconnect
+traffic a real accelerator would carry.
 
   PYTHONPATH=src python -m benchmarks.serve_bench [--requests 192]
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI, no JSON
@@ -28,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import api
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
 from repro.serve import BatcherConfig, EngineConfig, ServeEngine
@@ -47,54 +60,93 @@ def make_model(key):
 
 
 def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin",
-                backend=None):
+                backend=None, packed=True, static_buckets=False):
     # CSA offset off so serving stays on the fused Pallas kernel path
-    # (capability selection would reject `analog-pallas` otherwise; see
-    # repro.api.select_backend).
+    # (capability selection would reject the pallas backends otherwise;
+    # see repro.api.select_backend).
+    if static_buckets:
+        from repro.serve.batching import STATIC_BUCKETS
+        sizes = tuple(b for b in STATIC_BUCKETS if b < max_batch)
+        batcher = BatcherConfig(max_batch=max_batch,
+                                bucket_sizes=sizes + (max_batch,))
+    else:
+        batcher = BatcherConfig.for_max_batch(max_batch)
     return ServeEngine.from_ta_state(
         ta, cfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
         vcfg=VariationConfig(csa_offset=False),
-        ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(max_batch),
-                          routing=routing, backend=backend))
+        ecfg=EngineConfig(batcher=batcher, routing=routing,
+                          backend=backend, packed=packed))
 
 
 def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing,
-                backend=None):
-    """Submit everything, then drain: batches cut at ``max_batch``."""
+                backend=None, packed=True, static_buckets=False,
+                repeats=3):
+    """Submit everything, then drain: batches cut at ``max_batch``.
+
+    Best of ``repeats`` timed runs (one warmed engine) — see module
+    docstring for why best-of is the right de-noising on a shared host.
+    """
     engine = make_engine(cfg, ta, max_batch=max_batch,
                          n_replicas=n_replicas, routing=routing,
-                         backend=backend)
+                         backend=backend, packed=packed,
+                         static_buckets=static_buckets)
     engine.submit_many([xs[0]] * max_batch)   # warm the kernel cache
     engine.drain()
-    engine.metrics = type(engine.metrics)()
-    t0 = time.monotonic()
-    engine.submit_many(list(xs))
-    engine.drain()
-    wall = time.monotonic() - t0
-    out = engine.summary()
-    out["wall_s"] = wall
-    out["wall_throughput_rps"] = len(xs) / wall
+    best_wall, best_summary = float("inf"), None
+    for _ in range(max(1, repeats)):
+        engine.metrics = type(engine.metrics)()
+        t0 = time.monotonic()
+        engine.submit_many(list(xs))
+        engine.drain()
+        wall = time.monotonic() - t0
+        if wall < best_wall:
+            best_wall, best_summary = wall, engine.summary()
+    out = best_summary
+    out["wall_s"] = best_wall
+    out["wall_throughput_rps"] = len(xs) / best_wall
     out["max_batch"] = max_batch
     return out
 
 
-def run_serial(cfg, ta, xs, *, n_replicas=1, backend=None):
+def run_serial(cfg, ta, xs, *, n_replicas=1, backend=None, packed=True,
+               repeats=3):
     """The seed's per-request path: one dispatch per request."""
     engine = make_engine(cfg, ta, max_batch=8, n_replicas=n_replicas,
-                         backend=backend)
+                         backend=backend, packed=packed)
     engine.submit(xs[0])
     engine.drain()                             # warm the bucket-8 kernel
-    engine.metrics = type(engine.metrics)()
-    t0 = time.monotonic()
-    for x in xs:
-        engine.submit(x)
-        engine.drain()                         # force: batch of 1, now
-    wall = time.monotonic() - t0
-    out = engine.summary()
-    out["wall_s"] = wall
-    out["wall_throughput_rps"] = len(xs) / wall
+    best_wall, best_summary = float("inf"), None
+    for _ in range(max(1, repeats)):
+        engine.metrics = type(engine.metrics)()
+        t0 = time.monotonic()
+        for x in xs:
+            engine.submit(x)
+            engine.drain()                     # force: batch of 1, now
+        wall = time.monotonic() - t0
+        if wall < best_wall:
+            best_wall, best_summary = wall, engine.summary()
+    out = best_summary
+    out["wall_s"] = best_wall
+    out["wall_throughput_rps"] = len(xs) / best_wall
     out["max_batch"] = 1
     return out
+
+
+def run_before_unpacked_static(cfg, ta, xs, *, repeats=3):
+    """The PR-2 configuration on this host: dense uint8 wire, static
+    bucket ladder, default (untuned) kernel tiles — the "before" half of
+    the headline before/after pair."""
+    saved = {name: api.get_tuning(name)
+             for name in [b.name for b in api.list_backends()]}
+    api.clear_tuning()
+    try:
+        return run_batched(cfg, ta, xs, max_batch=64, n_replicas=4,
+                           routing="round_robin", packed=False,
+                           static_buckets=True, repeats=repeats)
+    finally:
+        for name, entry in saved.items():
+            if entry is not None:
+                api.register_tuning(name, entry)
 
 
 def main(argv=None):
@@ -104,8 +156,14 @@ def main(argv=None):
     ap.add_argument("--serial-requests", type=int, default=48,
                     help="requests for the serial baseline (slow path)")
     ap.add_argument("--backend", default=None,
-                    choices=("analog-pallas", "analog-jnp"),
+                    choices=("analog-pallas-packed", "analog-pallas",
+                             "analog-jnp"),
                     help="forward-backend preference (repro.api name)")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="uint32 literal wire format (default on)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed runs per configuration (best reported)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one tiny sweep cell, nothing written")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
@@ -116,6 +174,7 @@ def main(argv=None):
         # WITHOUT touching the committed BENCH_serve.json baseline.
         args.requests = min(args.requests, 64)
         args.serial_requests = min(args.serial_requests, 8)
+        args.repeats = 1
 
     cfg, ta = make_model(jax.random.PRNGKey(0))
     xs = np.asarray(jax.random.bernoulli(
@@ -124,7 +183,8 @@ def main(argv=None):
 
     print("[serve_bench] serial baseline (per-request dispatch)...")
     serial = run_serial(cfg, ta, xs[:args.serial_requests],
-                        backend=args.backend)
+                        backend=args.backend, packed=args.packed,
+                        repeats=args.repeats)
     print(f"[serve_bench]   serial: "
           f"{serial['wall_throughput_rps']:.1f} req/s")
 
@@ -134,16 +194,20 @@ def main(argv=None):
     for n_replicas, max_batch in grid:
         row = run_batched(cfg, ta, xs, max_batch=max_batch,
                           n_replicas=n_replicas,
-                          routing="round_robin", backend=args.backend)
+                          routing="round_robin", backend=args.backend,
+                          packed=args.packed, repeats=args.repeats)
         row["speedup_vs_serial"] = (row["wall_throughput_rps"]
                                     / serial["wall_throughput_rps"])
         sweep.append(row)
         print(f"[serve_bench]   R={n_replicas} batch={max_batch}: "
               f"{row['wall_throughput_rps']:.1f} req/s "
               f"({row['speedup_vs_serial']:.1f}x serial), "
-              f"p99 {row['p99_ms']:.1f} ms [{row['backend']}]")
+              f"p99 {row['p99_ms']:.1f} ms [{row['backend']}, "
+              f"{row['bytes_per_dispatch']:.0f} B/dispatch, "
+              f"buckets {row['bucket_sizes']}]")
     ens = run_batched(cfg, ta, xs, max_batch=64, n_replicas=4,
-                      routing="ensemble", backend=args.backend)
+                      routing="ensemble", backend=args.backend,
+                      packed=args.packed, repeats=args.repeats)
     ens["speedup_vs_serial"] = (ens["wall_throughput_rps"]
                                 / serial["wall_throughput_rps"])
     print(f"[serve_bench]   ensemble R=4 batch=64: "
@@ -160,19 +224,58 @@ def main(argv=None):
             raise SystemExit(1)
         return None
 
+    print("[serve_bench] before: PR-2 config (unpacked, static buckets, "
+          "default tiles) on this host...")
+    before = run_before_unpacked_static(cfg, ta, xs, repeats=args.repeats)
+    print(f"[serve_bench]   before R=4 batch=64: "
+          f"{before['wall_throughput_rps']:.1f} req/s "
+          f"[{before['backend']}, "
+          f"{before['bytes_per_dispatch']:.0f} B/dispatch]")
+
+    # The previously committed headline (possibly from another host /
+    # another PR): captured before this run overwrites the file, so the
+    # regenerated JSON always carries its own point of comparison.
+    prev_rps = None
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            prev_rps = prev.get("headline_r4_b64_rps")
+            if prev_rps is None:        # PR-2 schema: find the sweep row
+                prev_rps = next(
+                    (r["wall_throughput_rps"] for r in prev.get("sweep", [])
+                     if r.get("max_batch") == 64
+                     and r.get("n_replicas") == 4), None)
+            prev_rps = float(prev_rps) if prev_rps is not None else None
+        except (OSError, json.JSONDecodeError, TypeError, ValueError):
+            prev_rps = None
+
     at64 = [r for r in sweep
             if r["max_batch"] == 64 and r["n_replicas"] == 1]
     speedup64 = at64[0]["speedup_vs_serial"]
+    after = [r for r in sweep
+             if r["max_batch"] == 64 and r["n_replicas"] == 4][0]
+    headline = (after["wall_throughput_rps"]
+                / before["wall_throughput_rps"])
     report = {
         "model": {"n_clauses": cfg.n_clauses,
                   "n_literals": cfg.n_literals,
                   "n_classes": cfg.n_classes},
         "backend": jax.default_backend(),
         "requests": args.requests,
+        "repeats": args.repeats,
         "serial_baseline": serial,
         "sweep": sweep,
         "ensemble": ens,
+        "before_unpacked_static": before,
         "speedup_batch64_vs_serial": speedup64,
+        "headline_r4_b64_rps": after["wall_throughput_rps"],
+        "headline_speedup_vs_before": headline,
+        "previous_committed_r4_b64_rps": prev_rps,
+        "headline_speedup_vs_previous_committed": (
+            after["wall_throughput_rps"] / prev_rps if prev_rps else None),
+        "bytes_per_dispatch_before": before["bytes_per_dispatch"],
+        "bytes_per_dispatch_after": after["bytes_per_dispatch"],
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, default=str)
@@ -180,6 +283,16 @@ def main(argv=None):
     print(f"[serve_bench] dynamic batching at 64: "
           f"{speedup64:.1f}x the serial path "
           f"({'PASS' if speedup64 >= 1.5 else 'FAIL'} >= 1.5x)")
+    print(f"[serve_bench] headline R=4 batch=64: "
+          f"{after['wall_throughput_rps']:.1f} req/s = "
+          f"{headline:.2f}x the same-host before-config; operand "
+          f"bytes/dispatch {before['bytes_per_dispatch']:.0f} -> "
+          f"{after['bytes_per_dispatch']:.0f}")
+    if prev_rps:
+        ratio = after["wall_throughput_rps"] / prev_rps
+        print(f"[serve_bench] vs previously committed baseline "
+              f"({prev_rps:.1f} req/s): {ratio:.2f}x "
+              f"({'PASS' if ratio >= 1.3 else 'FAIL'} >= 1.3x)")
     return report
 
 

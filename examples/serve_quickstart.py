@@ -1,8 +1,10 @@
 """Serving-engine quickstart: train a tiny TM, serve it from a pool of
 four simulated crossbar chips with dynamic batching and ensemble voting.
 
-  PYTHONPATH=src python examples/serve_quickstart.py
+  PYTHONPATH=src python examples/serve_quickstart.py [--no-packed]
 """
+
+import argparse
 
 import jax
 import numpy as np
@@ -14,7 +16,13 @@ from repro.data.tm_datasets import noisy_xor
 from repro.serve import BatcherConfig, EngineConfig, ServeEngine
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="uint32 packed literal wire format (default on)")
+    args = ap.parse_args(argv)
+
     cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
                    n_states=100)
     xtr, ytr, xte, yte = noisy_xor(jax.random.PRNGKey(0), 3000, 200)
@@ -26,15 +34,20 @@ def main():
     # Four independently programmed chips (distinct D2D draws); batches
     # of up to 32 requests, majority vote across all four chips per read.
     # The forward path is capability-selected from the repro.api registry:
-    # full noise (csa_offset on) needs the jnp backend, and the engine
-    # says so instead of switching silently.
+    # full noise (csa_offset on) needs the jnp backend — which also
+    # forfeits the packed uint32 wire — and the engine says so instead of
+    # switching silently.
     engine = ServeEngine.from_ta_state(
         ta, cfg, n_replicas=4, key=jax.random.PRNGKey(3),
         vcfg=VariationConfig(),
-        ecfg=EngineConfig(routing="ensemble",
+        ecfg=EngineConfig(routing="ensemble", packed=args.packed,
                           batcher=BatcherConfig(max_batch=32,
                                                 bucket_sizes=(8, 16, 32))))
-    print(f"backend: {engine.backend.name}"
+    bcfg = engine.batcher.cfg
+    print(f"backend: {engine.backend.name} (packed_io={engine.packed_io}, "
+          f"buckets={list(bcfg.bucket_sizes)}"
+          + (f", tuned for {bcfg.tuned_for}" if bcfg.tuned_for else "")
+          + ")"
           + (f" (fallback: {engine.selection.fallback_reason})"
              if engine.selection.fell_back else ""))
 
@@ -47,7 +60,8 @@ def main():
     s = engine.summary()
     print(f"analog ensemble accuracy on 64 requests: {acc:.3f}")
     print(f"{s['batches']} batches, mean {s['mean_batch']:.1f} req/batch, "
-          f"{100 * s['padding_overhead']:.1f}% padding")
+          f"{100 * s['padding_overhead']:.1f}% padding, "
+          f"{s['bytes_per_dispatch']:.0f} operand bytes/dispatch")
     hw = s["hardware"]
     print(f"hardware: {hw['latency_ns']:.0f} ns/read, "
           f"{hw['ensemble_energy_nj_per_dp']:.4f} nJ/datapoint (4 chips), "

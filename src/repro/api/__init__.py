@@ -35,10 +35,12 @@ Deprecated entry points (one-release shims): ``ops.imbue_class_sums_stacked``
 from repro.api.backends import class_sums, predict
 from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
                                 CAP_FUSED_KERNEL, CAP_MODELS_C2C,
-                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP,
-                                CAP_TPU_ONLY, KNOWN_CAPABILITIES, Backend,
-                                Selection, get_backend, list_backends,
-                                register_backend, required_capabilities,
+                                CAP_MODELS_CSA_OFFSET, CAP_PACKED_IO,
+                                CAP_REPLICA_VMAP, CAP_TPU_ONLY,
+                                KNOWN_CAPABILITIES, Backend, Selection,
+                                clear_tuning, get_backend, get_tuning,
+                                list_backends, register_backend,
+                                register_tuning, required_capabilities,
                                 select_backend)
 from repro.api.states import (STATE_TYPES, CoalescedState, CrossbarState,
                               DigitalState, ReplicaStackState)
@@ -47,10 +49,11 @@ __all__ = [
     "class_sums", "predict",
     "Backend", "Selection", "get_backend", "list_backends",
     "register_backend", "required_capabilities", "select_backend",
+    "register_tuning", "get_tuning", "clear_tuning",
     "KNOWN_CAPABILITIES",
     "CAP_ANALOG", "CAP_COALESCED", "CAP_DIGITAL", "CAP_FUSED_KERNEL",
-    "CAP_MODELS_C2C", "CAP_MODELS_CSA_OFFSET", "CAP_REPLICA_VMAP",
-    "CAP_TPU_ONLY",
+    "CAP_MODELS_C2C", "CAP_MODELS_CSA_OFFSET", "CAP_PACKED_IO",
+    "CAP_REPLICA_VMAP", "CAP_TPU_ONLY",
     "STATE_TYPES", "CoalescedState", "CrossbarState", "DigitalState",
     "ReplicaStackState",
 ]

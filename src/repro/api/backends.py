@@ -1,27 +1,41 @@
-"""The five registered forward backends + the uniform entry points.
+"""The registered forward backends + the uniform entry points.
 
 All backends share one contract:
 
     class_sums(state, lits, key=None, **opts) -> int32 [..., M]
 
-``lits`` is the ``[B, 2F]`` literal matrix (``repro.core.tm.literals``);
-outputs are integer class sums (clause votes are ±1, so every path —
-including the float32 Pallas kernels — produces exact integers; the
-uniform API rounds them back to int32).  ``ReplicaStackState`` inputs
-produce ``[R, B, M]``.
+``lits`` is the ``[B, 2F]`` literal matrix (``repro.core.tm.literals``)
+— or, for the ``packed_io`` backends, the ``[B, ceil(2F/32)]`` uint32
+bitplane (``ops.pack_literals``); outputs are integer class sums (clause
+votes are ±1, so every path — including the float32 Pallas kernels —
+produces exact integers; the uniform API rounds them back to int32).
+``ReplicaStackState`` inputs produce ``[R, B, M]``.
 
 Registered backends:
 
-=================  =======================  ==============================
-name               states                   capability notes
-=================  =======================  ==============================
-``digital-jnp``    Digital                  the bit-exact reference
-``digital-pallas`` Digital                  fused clause+polarity kernel
-``analog-jnp``     Crossbar, ReplicaStack   models C2C **and** CSA offset
-``analog-pallas``  Crossbar, ReplicaStack   fused kernel, scalar v_ref
-                                            (no per-column CSA offset)
-``coalesced``      Coalesced                weighted digital tail
-=================  =======================  ==============================
+=========================  =======================  =====================
+name                       states                   capability notes
+=========================  =======================  =====================
+``digital-jnp``            Digital                  the bit-exact
+                                                    reference
+``digital-pallas``         Digital                  fused clause+polarity
+                                                    kernel
+``digital-pallas-packed``  Digital (packed)         uint32 bitplane wire,
+                                                    AND+popcount kernel
+``analog-jnp``             Crossbar, ReplicaStack   models C2C **and**
+                                                    CSA offset
+``analog-pallas``          Crossbar, ReplicaStack   fused kernel, scalar
+                                                    v_ref (no CSA offset)
+``analog-pallas-packed``   Crossbar, ReplicaStack   packed literal wire,
+                           (packed)                 unpack per K tile in
+                                                    VMEM
+``coalesced``              Coalesced                weighted digital tail
+=========================  =======================  =====================
+
+The packed backends only accept states carrying the packed include plane
+(``state.pack()``) and — having the highest priority — win selection for
+packed states; unpacked ``uint8`` literals remain supported everywhere
+(:func:`class_sums` auto-packs at the boundary).
 
 Use :func:`class_sums` / :func:`predict` for capability-based dispatch,
 or ``get_backend(name).fn`` to pin a backend explicitly.
@@ -36,9 +50,9 @@ import jax.numpy as jnp
 
 from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
                                 CAP_FUSED_KERNEL, CAP_MODELS_C2C,
-                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP,
-                                Selection, get_backend, register_backend,
-                                select_backend)
+                                CAP_MODELS_CSA_OFFSET, CAP_PACKED_IO,
+                                CAP_REPLICA_VMAP, Selection, get_backend,
+                                register_backend, select_backend)
 from repro.api.states import (CoalescedState, CrossbarState, DigitalState,
                               ReplicaStackState)
 from repro.core import coalesced as co
@@ -52,6 +66,18 @@ def _to_i32(sums: jax.Array) -> jax.Array:
     if jnp.issubdtype(sums.dtype, jnp.floating):
         return jnp.round(sums).astype(jnp.int32)
     return sums.astype(jnp.int32)
+
+
+def _as_packed_lits(lits: jax.Array) -> jax.Array:
+    """Accept either wire format: pack uint8 literals at the boundary.
+
+    uint32 inputs are already packed words; anything else is a dense 0/1
+    literal matrix and gets packed on device (the migration path — the
+    unpacked entry points keep working against packed backends).
+    """
+    if lits.dtype == jnp.uint32:
+        return lits
+    return ops.pack_literals(lits)
 
 
 # ------------------------------------------------------------- digital
@@ -74,6 +100,19 @@ def digital_pallas(state: DigitalState, lits: jax.Array,
     del key
     return _to_i32(ops.tm_class_sums(lits, state.include, state.tm_cfg,
                                      **tiles))
+
+
+@register_backend("digital-pallas-packed", state_types=(DigitalState,),
+                  capabilities={CAP_DIGITAL, CAP_FUSED_KERNEL,
+                                CAP_PACKED_IO},
+                  priority=30, predicate=lambda s: s.packed)
+def digital_pallas_packed(state: DigitalState, lits: jax.Array,
+                          key: Optional[jax.Array] = None,
+                          **tiles) -> jax.Array:
+    """Packed-wire digital kernel: uint32 bitplanes, AND+popcount."""
+    del key
+    return _to_i32(ops.tm_class_sums_packed(
+        _as_packed_lits(lits), state.include_packed, state.tm_cfg, **tiles))
 
 
 # -------------------------------------------------------------- analog
@@ -121,6 +160,31 @@ def analog_pallas(state, lits: jax.Array,
                                 key, state.vcfg)
     return _to_i32(ops.imbue_class_sums_raw(
         lits, g_on, i_leak, state.include, state.icfg.v_read,
+        state.icfg.r_divider, state.icfg.reference_voltage(),
+        state.tm_cfg, width=state.icfg.width, **tiles))
+
+
+@register_backend("analog-pallas-packed",
+                  state_types=(CrossbarState, ReplicaStackState),
+                  capabilities={CAP_ANALOG, CAP_FUSED_KERNEL,
+                                CAP_MODELS_C2C, CAP_REPLICA_VMAP,
+                                CAP_PACKED_IO},
+                  priority=30, predicate=lambda s: s.packed)
+def analog_pallas_packed(state, lits: jax.Array,
+                         key: Optional[jax.Array] = None,
+                         **tiles) -> jax.Array:
+    """Packed-wire analog kernel: literals stream as uint32 words and
+    unpack per K tile in VMEM (noise semantics == ``analog-pallas``)."""
+    litw = _as_packed_lits(lits)
+    if isinstance(state, ReplicaStackState):
+        return _to_i32(ops.imbue_class_sums_stack_packed(
+            litw, state.r_stack, state.include, state.icfg, state.tm_cfg,
+            key, vcfg=state.vcfg, **tiles))
+    from repro.core.imbue import conductances
+    g_on, i_leak = conductances(state.r_mem, state.include, state.icfg,
+                                key, state.vcfg)
+    return _to_i32(ops.imbue_class_sums_raw_packed(
+        litw, g_on, i_leak, state.include, state.icfg.v_read,
         state.icfg.r_divider, state.icfg.reference_voltage(),
         state.tm_cfg, width=state.icfg.width, **tiles))
 

@@ -40,10 +40,12 @@ CAP_MODELS_CSA_OFFSET = "models_csa_offset"  # per-column CSA input offset
 CAP_REPLICA_VMAP = "supports_replica_vmap"  # [R, C, L] in one dispatch
 CAP_COALESCED = "coalesced_weights"         # weighted digital tail
 CAP_TPU_ONLY = "tpu_only"                   # no interpret-mode fallback
+CAP_PACKED_IO = "packed_io"                 # uint32 bitplane literal wire
 
 KNOWN_CAPABILITIES = frozenset({
     CAP_DIGITAL, CAP_ANALOG, CAP_FUSED_KERNEL, CAP_MODELS_C2C,
     CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP, CAP_COALESCED, CAP_TPU_ONLY,
+    CAP_PACKED_IO,
 })
 
 
@@ -57,9 +59,15 @@ class Backend:
     capabilities: FrozenSet[str]
     priority: int = 0                       # higher wins among candidates
     doc: str = ""
+    # Optional extra acceptance check beyond isinstance — e.g. the packed
+    # backends require the state to carry a packed include plane
+    # (``state.packed``).  None means "type match is enough".
+    predicate: Optional[Callable] = None
 
     def accepts(self, state) -> bool:
-        return isinstance(state, self.state_types)
+        if not isinstance(state, self.state_types):
+            return False
+        return self.predicate is None or bool(self.predicate(state))
 
     def provides(self, caps) -> bool:
         return frozenset(caps) <= self.capabilities
@@ -83,7 +91,7 @@ _REGISTRY: Dict[str, Backend] = {}
 
 
 def register_backend(name: str, *, state_types, capabilities,
-                     priority: int = 0, doc: str = ""):
+                     priority: int = 0, doc: str = "", predicate=None):
     """Decorator: register ``fn`` as backend ``name``."""
     unknown = frozenset(capabilities) - KNOWN_CAPABILITIES
     if unknown:
@@ -97,7 +105,7 @@ def register_backend(name: str, *, state_types, capabilities,
             name=name, fn=fn, state_types=tuple(state_types),
             capabilities=frozenset(capabilities), priority=priority,
             doc=doc or (fn.__doc__ or "").strip().splitlines()[0]
-            if (doc or fn.__doc__) else "")
+            if (doc or fn.__doc__) else "", predicate=predicate)
         return fn
 
     return deco
@@ -179,3 +187,79 @@ def select_backend(state, *, key=None, prefer: Optional[str] = None,
                          fallback_reason=f"{reason}; selected "
                                          f"{cands[0].name}")
     return Selection(backend=cands[0], required=need)
+
+
+# ---------------------------------------------------------------------------
+# Per-backend tuning tables (measured kernel autotuning, ISSUE 3)
+# ---------------------------------------------------------------------------
+#
+# The registry is the designated home for *measured* per-backend tuning:
+# ``kernels/autotune.py`` times (bt, ct, kt) tile candidates and bucket
+# sizes against each registered backend and registers the result here,
+# keyed by backend name.  Consumers (``ServeEngine``,
+# ``BatcherConfig.for_max_batch``) read the table instead of hard-coding
+# tile/bucket constants.  A committed default table
+# (``repro/kernels/tuning_table.json``, regenerated by
+# ``benchmarks/kernel_bench.py``) is lazily loaded on first lookup.
+#
+# Entry schema (plain JSON-shaped dict):
+#   {"tiles": {"ct": int, "kt": int},        # best measured kernel tiles
+#    "bucket_sizes": [int, ...],             # measured-good batch buckets
+#    "bucket_latency_us": {"8": float, ...}, # evidence
+#    "tile_latency_us": {"ctxkt": float, ...},
+#    "shape": {...}}                         # reference workload measured
+
+_TUNING: Dict[str, dict] = {}
+_TUNING_DEFAULTS_LOADED = False
+
+
+def register_tuning(name: str, entry: dict) -> None:
+    """Install (or overwrite) the measured tuning entry for a backend."""
+    _TUNING[name] = dict(entry)
+
+
+def get_tuning(name: str) -> Optional[dict]:
+    """The measured tuning entry for backend ``name`` (or None).
+
+    Falls back to the committed default table shipped with the package
+    the first time an unknown name is looked up.  Entries whose recorded
+    ``jax_backend`` does not match the runtime jax backend are withheld:
+    tiles measured in CPU interpret mode must not override the
+    MXU-aligned defaults on a real TPU (re-run
+    ``benchmarks/kernel_bench.py`` on the target to tune it).
+    """
+    if name not in _TUNING:
+        _load_tuning_defaults()
+    entry = _TUNING.get(name)
+    if entry is not None and "jax_backend" in entry:
+        import jax
+        if entry["jax_backend"] != jax.default_backend():
+            return None
+    return entry
+
+
+def _load_tuning_defaults() -> None:
+    global _TUNING_DEFAULTS_LOADED
+    if _TUNING_DEFAULTS_LOADED:
+        return
+    _TUNING_DEFAULTS_LOADED = True
+    from repro.kernels.autotune import load_default_table  # lazy: no cycle
+    for bname, entry in load_default_table().items():
+        _TUNING.setdefault(bname, entry)
+
+
+def clear_tuning(name: Optional[str] = None) -> None:
+    """Drop one (or every) tuning entry — test hygiene.
+
+    The semantics do not depend on whether a lookup happened first:
+    clearing everything empties the table for good (no later lazy load
+    resurrects it); clearing one name loads the committed defaults for
+    the *other* backends first, then drops just that entry.
+    """
+    global _TUNING_DEFAULTS_LOADED
+    if name is None:
+        _TUNING_DEFAULTS_LOADED = True
+        _TUNING.clear()
+    else:
+        _load_tuning_defaults()
+        _TUNING.pop(name, None)

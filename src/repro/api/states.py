@@ -22,6 +22,14 @@ Device layout is deliberately *state*, not a function argument: the
 crossbar-constrained-mapping line of work (arXiv:1809.08195) and
 IMPACT's one-time-program/many-read model (arXiv:2412.05327) both want
 the programmed arrays to travel with their electrical config.
+
+The include-carrying states additionally support the **packed wire
+format** (ISSUE 3): ``state.pack()`` attaches the uint32 include
+bitplane (``include_packed [.., C, ceil(L/32)]``) as an extra child, and
+``select_backend`` then prefers the ``*-pallas-packed`` backends, which
+stream packed operands (32x less HBM traffic than f32 for one-bit data).
+Dense planes are kept, so every pre-existing backend still accepts a
+packed state.
 """
 
 from __future__ import annotations
@@ -37,6 +45,30 @@ from repro.core.coalesced import CoalescedConfig
 from repro.core.imbue import IMBUEConfig, ProgrammedCrossbar
 from repro.core.mapping import CrossbarMapping
 from repro.core.tm import TMConfig, include_mask
+from repro.kernels import bitpack
+
+
+class _PackedMixin:
+    """Packed-wire-format support shared by the include-carrying states.
+
+    ``pack()`` adds the uint32 include bitplane (``[.., C, ceil(L/32)]``)
+    as an extra pytree child; ``packed`` reports whether it is present.
+    Packed states keep every dense plane, so non-packed backends accept
+    them unchanged — packing only *adds* the packed-io wire format that
+    ``select_backend`` prefers (the ``digital-pallas-packed`` /
+    ``analog-pallas-packed`` backends).
+    """
+
+    @property
+    def packed(self) -> bool:
+        return self.include_packed is not None
+
+    def pack(self):
+        """This state with the packed include plane attached (idempotent)."""
+        if self.packed:
+            return self
+        return dataclasses.replace(
+            self, include_packed=bitpack.pack_bits(self.include))
 
 
 def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
@@ -57,12 +89,13 @@ def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
 
 
 @dataclasses.dataclass(frozen=True)
-class DigitalState:
+class DigitalState(_PackedMixin):
     """The Boolean-domain TM: include actions (+ optional TA states)."""
 
     include: jax.Array                      # [C, L] bool TA actions
     ta_state: Optional[jax.Array]           # [C, L] int, or None
     tm_cfg: TMConfig                        # static
+    include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
 
     @classmethod
     def from_ta(cls, ta_state: jax.Array, tm_cfg: TMConfig) -> "DigitalState":
@@ -81,7 +114,7 @@ class DigitalState:
 
 
 @dataclasses.dataclass(frozen=True)
-class CrossbarState:
+class CrossbarState(_PackedMixin):
     """One programmed IMBUE chip: memristor resistances + TA actions."""
 
     r_mem: jax.Array                        # [C, L] programmed Ω
@@ -89,6 +122,7 @@ class CrossbarState:
     tm_cfg: TMConfig                        # static
     icfg: IMBUEConfig = IMBUEConfig()       # static (electrical)
     vcfg: var.VariationConfig = var.VariationConfig()   # static (noise)
+    include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
 
     @classmethod
     def program(cls, include: jax.Array, key: jax.Array, tm_cfg: TMConfig,
@@ -120,7 +154,7 @@ class CrossbarState:
 
 
 @dataclasses.dataclass(frozen=True)
-class ReplicaStackState:
+class ReplicaStackState(_PackedMixin):
     """R independently programmed chips sharing one set of TA actions.
 
     The serving hot path: backends dispatch the whole stack through ONE
@@ -131,6 +165,7 @@ class ReplicaStackState:
     tm_cfg: TMConfig                        # static
     icfg: IMBUEConfig = IMBUEConfig()       # static
     vcfg: var.VariationConfig = var.VariationConfig()   # static
+    include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
 
     @classmethod
     def program(cls, include: jax.Array, key: jax.Array, n_replicas: int,
@@ -184,9 +219,11 @@ class CoalescedState:
         return self.cfg.n_classes
 
 
-_register(DigitalState, ("include", "ta_state"), ("tm_cfg",))
-_register(CrossbarState, ("r_mem", "include"), ("tm_cfg", "icfg", "vcfg"))
-_register(ReplicaStackState, ("r_stack", "include"),
+_register(DigitalState, ("include", "ta_state", "include_packed"),
+          ("tm_cfg",))
+_register(CrossbarState, ("r_mem", "include", "include_packed"),
+          ("tm_cfg", "icfg", "vcfg"))
+_register(ReplicaStackState, ("r_stack", "include", "include_packed"),
           ("tm_cfg", "icfg", "vcfg"))
 _register(CoalescedState, ("ta_state", "weights"), ("cfg",))
 

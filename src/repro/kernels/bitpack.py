@@ -1,0 +1,99 @@
+"""Bit-packed Boolean planes: the native wire format of the inference stack.
+
+IMBUE's premise is that inference stays in the Boolean domain — literals
+are digital voltages, include bits are programmed cells — yet shipping
+them as float32 (or even uint8) inflates memory traffic 32x (8x) for
+data that is one bit wide.  This module is the single source of truth
+for the packed representation used end-to-end:
+
+* **layout** — little-endian within each ``uint32`` word: bit ``j`` of
+  word ``w`` is Boolean element ``32*w + j``.  Ragged lengths are
+  zero-padded up to the word boundary (padding bits are 0, which every
+  consumer treats as "excluded literal / excluded cell").
+* :func:`pack_bits` / :func:`unpack_bits` — device-side (jnp) pack and
+  unpack, shape ``[..., L] <-> [..., ceil(L/32)]``.
+* :func:`pack_bits_np` — host-side ``np.packbits`` path (used by the
+  serving batcher once per request at submit time, so the queue and the
+  host->device transfer carry ``uint32`` words, not bytes).
+* :func:`unpack_words_f32` — the in-kernel unpack used by the Pallas
+  packed kernels: one ``[bt, kw]`` word block -> ``[bt, 32*kw]`` f32
+  bits in VMEM, right before the violation matmul.
+
+The layouts of the np and jnp packers are asserted identical by the
+round-trip tests (``tests/test_packed*.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+WORD = 32                      # bits per packed word (uint32 lanes)
+
+
+def words_for(n_bits: int) -> int:
+    """Number of uint32 words holding ``n_bits`` booleans."""
+    return -(-n_bits // WORD)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """``[..., L]`` 0/1 -> ``[..., ceil(L/32)] uint32`` (little-endian).
+
+    Accepts any integer/bool dtype; values must be 0/1.  Ragged ``L`` is
+    zero-padded to the word boundary.
+    """
+    bits = jnp.asarray(bits)
+    l = bits.shape[-1]
+    nw = words_for(l)
+    pad = nw * WORD - l
+    b = bits.astype(jnp.uint32)
+    if pad:
+        pads = [(0, 0)] * (b.ndim - 1) + [(0, pad)]
+        b = jnp.pad(b, pads)
+    b = b.reshape(*bits.shape[:-1], nw, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    # bits are disjoint across the shift axis, so sum == bitwise OR
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """``[..., W] uint32`` -> ``[..., n_bits] uint8`` (inverse of pack)."""
+    words = jnp.asarray(words, jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., :, None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD)
+    return flat[..., :n_bits].astype(jnp.uint8)
+
+
+def pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    """Host-side pack: ``[..., L]`` 0/1 -> ``[..., ceil(L/32)] uint32``.
+
+    Uses ``np.packbits(bitorder='little')`` + an explicit little-endian
+    ``uint32`` view, so the layout matches :func:`pack_bits` bit-for-bit
+    on any host.
+    """
+    bits = np.asarray(bits, dtype=np.uint8)
+    nw = words_for(bits.shape[-1])
+    by = np.packbits(bits, axis=-1, bitorder="little")   # [..., ceil(L/8)]
+    pad = nw * 4 - by.shape[-1]
+    if pad:
+        pads = [(0, 0)] * (by.ndim - 1) + [(0, pad)]
+        by = np.pad(by, pads)
+    return np.ascontiguousarray(by).view("<u4")
+
+
+def unpack_words_f32(words: jax.Array, *, n_bits: int) -> jax.Array:
+    """In-kernel unpack: ``[bt, kw] uint32`` -> ``[bt, n_bits] f32``.
+
+    ``n_bits`` must equal ``32 * kw``.  Written with ``jnp.repeat`` +
+    ``broadcasted_iota`` (>= 2D, per the TPU iota constraint) so it
+    lowers inside a Pallas kernel body; the expansion lives entirely in
+    VMEM/registers — HBM only ever sees the words.
+    """
+    bt, kw = words.shape
+    if n_bits != kw * WORD:
+        raise ValueError(f"n_bits={n_bits} != {kw}*{WORD}")
+    expanded = jnp.repeat(words, WORD, axis=1)                 # [bt, n_bits]
+    shift = jax.lax.broadcasted_iota(jnp.uint32, (bt, n_bits), 1) % WORD
+    return ((expanded >> shift) & jnp.uint32(1)).astype(jnp.float32)

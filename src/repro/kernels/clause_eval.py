@@ -6,7 +6,7 @@ a threshold (``viol == 0``), and class sums are a second (tiny) matmul
 against a signed polarity one-hot.  Fusing threshold + polarity matmul into
 the violation matmul keeps clause bits in VMEM — they never touch HBM.
 
-Two kernels:
+Unpacked (f32 operand) kernels:
 
 ``clause_eval_kernel``  grid (B/bt, C/ct, L/kt); f32 violation accumulator
                         in VMEM scratch; emits 0/1 clause block on the last
@@ -15,12 +15,26 @@ Two kernels:
                         ``clauses @ pol`` into the [bt, M] output block
                         (revisited across the C grid dimension).
 
-Blocks are MXU-aligned (128 multiples); all accumulation is f32.  Inputs
-arrive pre-transposed (``include_t [L, C]``) so the violation matmul is a
-plain ``[bt, kt] @ [kt, ct]``.
+Packed (uint32 bitplane operand) kernels — the Boolean wire format:
+
+``clause_eval_packed_kernel`` / ``tm_infer_packed_kernel`` stream
+``[bt, kt/32]`` literal words and ``[kt/32, ct]`` include words from HBM
+(32x less traffic than f32, 8x less than uint8) and never expand them:
+the violation count for a digital clause is
+``popcount(~lit_words & include_words)`` summed over the words of the K
+tile — a bitwise AND + population count on the VPU, where the MXU matmul
+is pure overhead.  Padding bits are safe by construction: literal pad
+bits invert to 1 but include pad bits are 0, so ``AND`` kills them.
+
+Blocks are MXU-aligned (128 multiples) in the unpacked path; packed K
+tiles are multiples of 32 bits.  All accumulation stays in VMEM scratch.
+Inputs arrive pre-transposed (``include_t [L, C]`` / ``[L/32, C]``) so
+the contraction is a plain row-major sweep.
 """
 
 from __future__ import annotations
+
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +42,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.bitpack import WORD
 
 
 def clause_eval_kernel(lit0_ref, inc_t_ref, out_ref, acc_ref):
@@ -67,6 +82,63 @@ def tm_infer_kernel(lit0_ref, inc_t_ref, pol_ref, out_ref, acc_ref):
     @pl.when(k == nk - 1)
     def _emit():
         clauses = (acc_ref[...] == 0.0).astype(jnp.float32)
+        out_ref[...] += jnp.dot(clauses, pol_ref[...],
+                                preferred_element_type=jnp.float32)
+
+
+def _packed_viol_block(litw_ref, incw_t_ref, acc, kw):
+    """Violation counts for one packed K tile: AND + popcount per word.
+
+    ``litw_ref`` holds raw literal words (NOT pre-inverted — the packed
+    wire format is the literals themselves); the kernel inverts in
+    registers.  Each word contributes
+    ``popcount((~lit_w)[bt, 1] & inc_w[1, ct])`` — an outer bitwise AND
+    broadcast on the VPU, no MXU pass.
+    """
+    for w in range(kw):
+        l0 = (~litw_ref[:, w])[:, None]                  # [bt, 1] uint32
+        iw = incw_t_ref[w, :][None, :]                   # [1, ct] uint32
+        acc = acc + jax.lax.population_count(l0 & iw).astype(jnp.int32)
+    return acc
+
+
+def clause_eval_packed_kernel(litw_ref, incw_t_ref, out_ref, acc_ref, *, kw):
+    """One (b, c, k) grid step of the packed violation count + threshold."""
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = _packed_viol_block(litw_ref, incw_t_ref, acc_ref[...], kw)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        out_ref[...] = (acc_ref[...] == 0).astype(out_ref.dtype)
+
+
+def tm_infer_packed_kernel(litw_ref, incw_t_ref, pol_ref, out_ref, acc_ref,
+                           *, kw):
+    """Fused packed path: AND+popcount violations -> threshold -> polarity
+    matmul (the only MXU pass left in the digital pipeline)."""
+    c = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = _packed_viol_block(litw_ref, incw_t_ref, acc_ref[...], kw)
+
+    @pl.when(jnp.logical_and(k == nk - 1, c == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        clauses = (acc_ref[...] == 0).astype(jnp.float32)
         out_ref[...] += jnp.dot(clauses, pol_ref[...],
                                 preferred_element_type=jnp.float32)
 
@@ -113,3 +185,57 @@ def tm_infer_call(lit0, inc_t, pol, *, bt, ct, kt, interpret):
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(lit0, inc_t, pol)
+
+
+def clause_eval_packed_call(litw, incw_t, *, bt, ct, kt, interpret):
+    """``[B, L/32] x [L/32, C] -> [B, C]`` packed clause outputs.
+
+    ``kt`` counts BITS (a multiple of 32); the word blocks are
+    ``kt // 32`` wide.
+    """
+    if kt % WORD:
+        raise ValueError(f"kt={kt} must be a multiple of {WORD} (packed)")
+    kw = kt // WORD
+    b, lw = litw.shape
+    c = incw_t.shape[1]
+    grid = (b // bt, c // ct, lw // kw)
+    return pl.pallas_call(
+        partial(clause_eval_packed_kernel, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, kw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kw, ct), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, ct), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(litw, incw_t)
+
+
+def tm_infer_packed_call(litw, incw_t, pol, *, bt, ct, kt, interpret):
+    """``[B, L/32] x [L/32, C] x [C, M] -> [B, M]`` fused packed sums."""
+    if kt % WORD:
+        raise ValueError(f"kt={kt} must be a multiple of {WORD} (packed)")
+    kw = kt // WORD
+    b, lw = litw.shape
+    c = incw_t.shape[1]
+    m = pol.shape[1]
+    grid = (b // bt, c // ct, lw // kw)
+    return pl.pallas_call(
+        partial(tm_infer_packed_kernel, kw=kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, kw), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kw, ct), lambda i, j, k: (k, j)),
+            pl.BlockSpec((ct, m), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, m), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(litw, incw_t, pol)

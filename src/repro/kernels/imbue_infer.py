@@ -28,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams as _CompilerParams
+from repro.kernels.bitpack import WORD, unpack_words_f32
 
 
 def imbue_infer_kernel(i_ref_ref, v_drive_ref, lit1_ref, g_t_ref, leak_t_ref,
@@ -46,6 +47,52 @@ def imbue_infer_kernel(i_ref_ref, v_drive_ref, lit1_ref, g_t_ref, leak_t_ref,
         i_on = jnp.dot(v_drive_ref[:, sl], g_t_ref[sl, :],
                        preferred_element_type=jnp.float32)
         i_leak = jnp.dot(lit1_ref[:, sl], leak_t_ref[sl, :],
+                         preferred_element_type=jnp.float32)
+        partial_cl = (i_on + i_leak) < i_ref
+        and_ref[...] *= partial_cl.astype(jnp.float32)
+
+    @pl.when(jnp.logical_and(k == nk - 1, c == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(k == nk - 1)
+    def _emit():
+        out_ref[...] += jnp.dot(and_ref[...], pol_ref[...],
+                                preferred_element_type=jnp.float32)
+
+
+def imbue_infer_packed_kernel(scal_ref, litw_ref, g_t_ref, leak_t_ref,
+                              pol_ref, out_ref, and_ref, *, width,
+                              cols_per_block):
+    """Packed-literal variant: stream ``[bt, kt/32]`` uint32 words from
+    HBM and unpack to drive voltages per K tile, in VMEM, right before
+    the column dots.  The conductance/leak planes stay f32 — they are
+    programmed once and live on-device; only the per-request literal
+    operand crosses the host->device boundary, so that is the plane
+    whose wire format matters."""
+    c = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        and_ref[...] = jnp.ones_like(and_ref)
+
+    i_ref = scal_ref[0]       # reference current = v_ref / r_divider
+    v_read = scal_ref[1]      # literal '0' drive voltage
+    kt = cols_per_block * width
+    bits = unpack_words_f32(litw_ref[...], n_bits=kt)     # [bt, kt] 0/1
+    # Literal '0' drives v_read onto the on-path; literal '1' leaks.
+    # (Word-padding bits unpack to 0 -> v_drive = v_read, but their
+    # conductance/leak columns are zero-padded, so they contribute 0 —
+    # identical to the unpacked wrapper's padding semantics.)
+    v_drive = (1.0 - bits) * v_read
+    for w in range(cols_per_block):
+        lo, hi = w * width, (w + 1) * width
+        sl = pl.dslice(lo, width)
+        i_on = jnp.dot(v_drive[:, lo:hi], g_t_ref[sl, :],
+                       preferred_element_type=jnp.float32)
+        i_leak = jnp.dot(bits[:, lo:hi], leak_t_ref[sl, :],
                          preferred_element_type=jnp.float32)
         partial_cl = (i_on + i_leak) < i_ref
         and_ref[...] *= partial_cl.astype(jnp.float32)
@@ -93,4 +140,47 @@ def imbue_infer_call(v_drive, lit1, g_t, leak_t, pol, v_ref, *,
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(jnp.asarray([v_ref / r_div], dtype=jnp.float32), v_drive, lit1, g_t,
+      leak_t, pol)
+
+
+def imbue_infer_packed_call(litw, g_t, leak_t, pol, v_ref, v_read, *,
+                            width, r_div, bt, ct, kt, interpret):
+    """``[B, L/32] -> [B, M]`` analog class sums from packed literals.
+
+    ``kt`` counts BITS and must be a multiple of both ``width`` and 32;
+    the literal word blocks are ``kt // 32`` wide.  ``g_t``/``leak_t``
+    are dense f32 ``[L, C]`` exactly as in :func:`imbue_infer_call` —
+    the packed format applies to the per-request literal operand only.
+    """
+    if kt % width:
+        raise ValueError(f"kt={kt} must be a multiple of width={width}")
+    if kt % WORD:
+        raise ValueError(f"kt={kt} must be a multiple of {WORD} (packed)")
+    kw = kt // WORD
+    b, lw = litw.shape
+    c = g_t.shape[1]
+    m = pol.shape[1]
+    if lw * WORD != g_t.shape[0]:
+        raise ValueError(f"packed literals cover {lw * WORD} bits but "
+                         f"g_t has {g_t.shape[0]} rows")
+    grid = (b // bt, c // ct, lw // kw)
+    kern = partial(imbue_infer_packed_kernel, width=width,
+                   cols_per_block=kt // width)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # [i_ref, v_read]
+            pl.BlockSpec((bt, kw), lambda i, j, k: (i, k)),   # literal words
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),   # g_t
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),   # leak_t
+            pl.BlockSpec((ct, m), lambda i, j, k: (j, 0)),    # pol
+        ],
+        out_specs=pl.BlockSpec((bt, m), lambda i, j, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray([v_ref / r_div, v_read], dtype=jnp.float32), litw, g_t,
       leak_t, pol)

@@ -12,6 +12,16 @@ Public API:
                                                        dispatch per stack
   ``polarity_matrix(cfg, include)``                 -> [C, M] signed one-hot
 
+Packed (uint32 bitplane) wire-format variants — bits stay packed from the
+host queue through HBM, unpacking (if at all) per K tile in VMEM:
+  ``pack_literals(lits)`` / ``pack_include(inc)``   -> [.., ceil(L/32)] u32
+  ``tm_class_sums_packed(litw, incw, cfg)``         -> [B, M] AND+popcount
+  ``clause_eval_packed(litw, incw)``                -> [B, C] clause bits
+  ``imbue_class_sums_stack_packed(litw, ...)``      -> [R, B, M]
+
+Packed K tiles count bits and must be multiples of 32 (one uint32 word);
+padding therefore happens on the word axis (``kt // 32`` words).
+
 Most callers should go through ``repro.api`` (capability-based backend
 selection over registered pytree states) rather than calling these
 wrappers directly; ``imbue_class_sums_stacked`` (per-chip loop) is a
@@ -26,10 +36,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.tm import TMConfig
+from repro.kernels import bitpack
 from repro.kernels import clause_eval as _ce
 from repro.kernels import imbue_infer as _ai
 
-# Default MXU-aligned tile sizes (see §Perf for the sweep).
+# Default MXU-aligned tile sizes (see §Perf for the sweep).  These are
+# the static fallbacks; measured per-backend tables from
+# ``kernels/autotune.py`` override them on the serve path.
 BT, CT, KT = 128, 128, 512
 KT_ANALOG = 256          # multiple of the 32-cell column width
 
@@ -70,6 +83,29 @@ def polarity_matrix(cfg: TMConfig, include: jax.Array | None = None,
     return p
 
 
+def pack_literals(lits: jax.Array) -> jax.Array:
+    """``[..., L]`` 0/1 literals -> ``[..., ceil(L/32)] uint32`` words.
+
+    The packed wire format of the inference stack: what the serving
+    queue holds, what crosses host->device, and what the packed kernels
+    stream from HBM.  Ragged ``L`` zero-pads to the word boundary
+    (pad bits read as literal 0 against zero-padded include/conductance
+    columns, so they never contribute).
+    """
+    return bitpack.pack_bits(lits)
+
+
+def pack_include(include: jax.Array) -> jax.Array:
+    """``[..., C, L]`` bool include plane -> ``[..., C, ceil(L/32)]``
+    uint32 words (the conductance-index plane of a programmed chip)."""
+    return bitpack.pack_bits(include)
+
+
+def _nonempty_from_packed(include_w: jax.Array) -> jax.Array:
+    """``[C, Lw] uint32`` -> ``[C]`` bool "clause has any include"."""
+    return (include_w != 0).any(axis=-1)
+
+
 @partial(jax.jit, static_argnames=("bt", "ct", "kt", "interpret"))
 def clause_eval(lits: jax.Array, include: jax.Array, *,
                 bt: int = BT, ct: int = CT, kt: int = KT,
@@ -98,6 +134,52 @@ def tm_class_sums(lits: jax.Array, include: jax.Array, cfg: TMConfig, *,
     pol = _pad_to(polarity_matrix(cfg, include), 0, ct)
     out = _ce.tm_infer_call(lit0, inc_t, pol, bt=bt, ct=ct, kt=kt,
                             interpret=interp)
+    return out[:b, :cfg.n_classes]
+
+
+@partial(jax.jit, static_argnames=("bt", "ct", "kt", "interpret"))
+def clause_eval_packed(litw: jax.Array, include_w: jax.Array, *,
+                       bt: int = BT, ct: int = CT, kt: int = KT,
+                       interpret: bool | None = None) -> jax.Array:
+    """Digital clause outputs ``[B, C]`` from packed operands.
+
+    ``litw`` ``[B, ceil(L/32)]`` and ``include_w`` ``[C, ceil(L/32)]``
+    are uint32 bitplanes (:func:`pack_literals` / :func:`pack_include`).
+    Training semantics (empty clauses fire), same as :func:`clause_eval`.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kw = kt // bitpack.WORD
+    b, c = litw.shape[0], include_w.shape[0]
+    litw_p = _pad_to(_pad_to(litw.astype(jnp.uint32), 0, bt), 1, kw)
+    incw_t = _pad_to(_pad_to(include_w.astype(jnp.uint32), 0, ct),
+                     1, kw).T
+    out = _ce.clause_eval_packed_call(litw_p, incw_t, bt=bt, ct=ct, kt=kt,
+                                      interpret=interp)
+    return out[:b, :c]
+
+
+@partial(jax.jit, static_argnames=("cfg", "bt", "ct", "kt", "interpret"))
+def tm_class_sums_packed(litw: jax.Array, include_w: jax.Array,
+                         cfg: TMConfig, *,
+                         bt: int = BT, ct: int = CT, kt: int = KT,
+                         interpret: bool | None = None) -> jax.Array:
+    """Fused digital inference from packed bitplanes -> ``[B, M]``.
+
+    Bit-exact vs :func:`tm_class_sums` on the unpacked operands; the
+    empty-clause inference mask is derived from the packed include plane
+    (a clause is empty iff all of its words are zero).
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kw = kt // bitpack.WORD
+    b = litw.shape[0]
+    litw_p = _pad_to(_pad_to(litw.astype(jnp.uint32), 0, bt), 1, kw)
+    incw_t = _pad_to(_pad_to(include_w.astype(jnp.uint32), 0, ct),
+                     1, kw).T
+    pol = polarity_matrix(cfg)
+    pol = pol * _nonempty_from_packed(include_w)[:, None].astype(jnp.float32)
+    pol = _pad_to(pol, 0, ct)
+    out = _ce.tm_infer_packed_call(litw_p, incw_t, pol, bt=bt, ct=ct,
+                                   kt=kt, interpret=interp)
     return out[:b, :cfg.n_classes]
 
 
@@ -181,6 +263,80 @@ def imbue_class_sums_stack(
         g_on, i_leak = conductances(r_mem, include, icfg, k, vcfg)
         return imbue_class_sums_raw(
             lits, g_on, i_leak, include, icfg.v_read, icfg.r_divider,
+            icfg.reference_voltage(), cfg, width=icfg.width,
+            bt=bt, ct=ct, kt=kt, interpret=interpret)
+
+    if key is None:
+        return jax.vmap(lambda r: one(r, None))(r_stack)
+    keys = jax.random.split(key, r_stack.shape[0])
+    return jax.vmap(one)(r_stack, keys)
+
+
+@partial(jax.jit, static_argnames=("cfg", "width", "bt", "ct", "kt",
+                                   "interpret"))
+def imbue_class_sums_raw_packed(
+    litw: jax.Array,          # [B, ceil(L/32)] uint32 packed literals
+    g_on: jax.Array,          # [C, L] on-path conductance (S)
+    i_leak: jax.Array,        # [C, L] leak currents (A)
+    include: jax.Array,       # [C, L] bool (for the empty-clause mask)
+    v_read: float,
+    r_div: float,
+    v_ref: float,
+    cfg: TMConfig,
+    *,
+    width: int = 32,
+    bt: int = BT, ct: int = CT, kt: int = KT_ANALOG,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused analog inference from packed literals -> ``[B, M]``.
+
+    The literal operand stays packed from HBM to VMEM (unpacked per K
+    tile inside the kernel); the conductance/leak planes are dense f32
+    as in :func:`imbue_class_sums_raw`.  Padding the word axis to
+    ``kt/32`` words lands on exactly the same padded bit count as
+    padding ``L`` to ``kt`` (``ceil(ceil(L/32)/(kt/32)) == ceil(L/kt)``),
+    so the two paths see identical zero-padded columns.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kw = kt // bitpack.WORD
+    b = litw.shape[0]
+    litw_p = _pad_to(_pad_to(litw.astype(jnp.uint32), 0, bt), 1, kw)
+    g_t = _pad_to(_pad_to(g_on.astype(jnp.float32), 0, ct), 1, kt).T
+    leak_t = _pad_to(_pad_to(i_leak.astype(jnp.float32), 0, ct), 1, kt).T
+    pol = _pad_to(polarity_matrix(cfg, include), 0, ct)
+    out = _ai.imbue_infer_packed_call(litw_p, g_t, leak_t, pol, v_ref,
+                                      v_read, width=width, r_div=r_div,
+                                      bt=bt, ct=ct, kt=kt, interpret=interp)
+    return out[:b, :cfg.n_classes]
+
+
+@partial(jax.jit, static_argnames=("icfg", "cfg", "vcfg", "bt", "ct", "kt",
+                                   "interpret"))
+def imbue_class_sums_stack_packed(
+    litw: jax.Array,          # [B, ceil(L/32)] uint32 packed literals
+    r_stack: jax.Array,       # [R, C, L] per-replica programmed resistance
+    include: jax.Array,       # [C, L] bool (shared TA actions)
+    icfg,                     # IMBUEConfig (static)
+    cfg: TMConfig,
+    key: jax.Array | None = None,
+    *,
+    vcfg=None,
+    bt: int = BT, ct: int = CT, kt: int = KT_ANALOG,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed-literal replica-stack inference -> ``[R, B, M]``.
+
+    Same single-vmapped-dispatch property and noise semantics as
+    :func:`imbue_class_sums_stack`; only the literal wire format differs.
+    """
+    from repro.core.imbue import conductances
+    from repro.core.variations import VariationConfig
+    vcfg = vcfg or VariationConfig.nominal()
+
+    def one(r_mem, k):
+        g_on, i_leak = conductances(r_mem, include, icfg, k, vcfg)
+        return imbue_class_sums_raw_packed(
+            litw, g_on, i_leak, include, icfg.v_read, icfg.r_divider,
             icfg.reference_voltage(), cfg, width=icfg.width,
             bt=bt, ct=ct, kt=kt, interpret=interpret)
 

@@ -32,7 +32,8 @@ def build_engine(args, cfg: TMConfig, ta: jax.Array) -> ServeEngine:
         batcher=BatcherConfig.for_max_batch(
             args.batch, max_wait_s=args.max_wait_ms * 1e-3),
         routing=args.routing,
-        backend=args.backend)
+        backend=args.backend,
+        packed=args.packed)
     return ServeEngine.from_ta_state(
         ta, cfg, n_replicas=args.replicas, key=jax.random.PRNGKey(3),
         vcfg=vcfg, ecfg=ecfg)
@@ -47,9 +48,14 @@ def main(argv=None):
     ap.add_argument("--routing", default="round_robin",
                     choices=("round_robin", "least_loaded", "ensemble"))
     ap.add_argument("--backend", default=None,
-                    choices=("analog-pallas", "analog-jnp"),
+                    choices=("analog-pallas-packed", "analog-pallas",
+                             "analog-jnp"),
                     help="forward-backend preference (repro.api name); "
                          "capability selection may fall back loudly")
+    ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="uint32 packed literal wire format (default on; "
+                         "--no-packed forces the dense uint8 datapath)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--nominal", action="store_true",
@@ -77,8 +83,14 @@ def main(argv=None):
           f"includes {stats['include_pct']:.2f}%")
 
     engine = build_engine(args, cfg, ta)
+    bcfg = engine.batcher.cfg
     print(f"[serve] pool of {args.replicas} crossbars programmed, "
-          f"routing={args.routing}, backend={engine.backend.name}")
+          f"routing={args.routing}, backend={engine.backend.name}, "
+          f"packed_io={engine.packed_io}")
+    print(f"[serve] buckets {list(bcfg.bucket_sizes)} "
+          f"({'tuned for ' + bcfg.tuned_for if bcfg.tuned_for else 'static'}"
+          f"), kernel tiles "
+          f"{engine.tuning.get('tiles') if engine.tuning else 'default'}")
     if engine.selection.fell_back:
         print(f"[serve] BACKEND FALLBACK: "
               f"{engine.selection.fallback_reason}")

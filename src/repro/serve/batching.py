@@ -9,9 +9,21 @@ of ``kernels/imbue_infer.py``) so every bucket maps to a compiled kernel
 shape and the jit cache stays bounded at ``len(bucket_sizes)`` entries
 per replica-role.
 
-Padding rows replay the first request's features (any valid Boolean row
-works — pad results are discarded on unpad); request -> response pairing
-is by request id, and FIFO order is preserved within and across batches.
+Bucket ladders come from one of two places: an explicit
+``bucket_sizes`` tuple, or — when the config was built by
+:meth:`BatcherConfig.for_max_batch` (``auto_tune=True``) — the measured
+per-backend tuning table in the capability registry
+(``kernels/autotune.py``), which the engine installs at construction
+(``tuned_for`` records the backend the ladder was measured for).
+
+The batcher owns the **wire format**: in packed mode (the packed_io
+backends) each request's Boolean features are packed ONCE at submit time
+into the uint32 literal bitplane (``[ceil(2F/32)]`` words), so the queue
+and every host->device transfer carry 32x less than f32 (8x less than
+uint8) per literal.  Padding rows are zeros — a zero-packed row is a
+valid "all literals 0" input, and pad results are dropped on unpad
+(asserted), so a kernel bug can never silently alias a real request's
+prediction.
 """
 
 from __future__ import annotations
@@ -23,6 +35,26 @@ from typing import Deque, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.kernels.bitpack import WORD, words_for
+
+STATIC_BUCKETS = (8, 16, 32, 64, 128)     # pre-autotuning fallback ladder
+
+
+def pack_request_np(x: np.ndarray) -> np.ndarray:
+    """``[F]`` Boolean features -> ``[ceil(2F/32)]`` uint32 literal words.
+
+    Builds the literal vector (features then complements, matching
+    ``repro.core.tm.literals``) and packs it host-side — called once per
+    request at submit, never per dispatch, so it is written to minimize
+    per-call temporaries (one zeroed word-aligned buffer, one packbits).
+    """
+    x = np.asarray(x, dtype=np.uint8)
+    f = x.shape[-1]
+    buf = np.zeros(words_for(2 * f) * WORD, dtype=np.uint8)  # pad bits = 0
+    buf[:f] = x
+    np.subtract(1, x, out=buf[f:2 * f])
+    return np.packbits(buf, bitorder="little").view("<u4")
+
 
 @dataclasses.dataclass(frozen=True)
 class BatcherConfig:
@@ -30,7 +62,14 @@ class BatcherConfig:
 
     max_batch: int = 128                # largest bucket == Pallas BT tile
     max_wait_s: float = 2e-3            # batching deadline for oldest request
-    bucket_sizes: Tuple[int, ...] = (8, 16, 32, 64, 128)
+    bucket_sizes: Tuple[int, ...] = STATIC_BUCKETS
+    # True -> the engine may replace bucket_sizes with the measured
+    # per-backend ladder from the registry tuning table (set by
+    # for_max_batch; explicit bucket_sizes constructions keep theirs).
+    auto_tune: bool = False
+    # Name of the backend whose measured table produced bucket_sizes
+    # (None for the static/hand-picked ladder).
+    tuned_for: Optional[str] = None
 
     def __post_init__(self):
         sizes = tuple(sorted(self.bucket_sizes))
@@ -48,10 +87,21 @@ class BatcherConfig:
     @classmethod
     def for_max_batch(cls, max_batch: int, **kw) -> "BatcherConfig":
         """Standard tile buckets up to ``max_batch`` (itself the top
-        bucket, so any multiple of 8 up to 128 is a valid max)."""
-        buckets = tuple(b for b in (8, 16, 32, 64, 128) if b < max_batch)
+        bucket, so any multiple of 8 up to 128 is a valid max).  Marks
+        the config ``auto_tune`` so the engine swaps in the measured
+        per-backend ladder once the backend is known."""
+        buckets = tuple(b for b in STATIC_BUCKETS if b < max_batch)
         return cls(max_batch=max_batch,
-                   bucket_sizes=buckets + (max_batch,), **kw)
+                   bucket_sizes=buckets + (max_batch,), auto_tune=True,
+                   **kw)
+
+    def with_tuned_buckets(self, bucket_sizes: Sequence[int],
+                           backend: str) -> "BatcherConfig":
+        """This config with the measured ladder (capped at max_batch)."""
+        tuned = tuple(b for b in sorted(bucket_sizes) if b < self.max_batch)
+        return dataclasses.replace(self,
+                                   bucket_sizes=tuned + (self.max_batch,),
+                                   tuned_for=backend)
 
     def bucket_for(self, n: int) -> int:
         """Smallest bucket holding ``n`` requests."""
@@ -67,7 +117,8 @@ class Request:
     """One queued inference request."""
 
     rid: int
-    x: np.ndarray                       # [F] uint8 Boolean features
+    # [F] uint8 features, or [Lw] uint32 packed literal words (packed mode)
+    x: np.ndarray
     t_enqueue: float
     deadline: float                     # absolute batching deadline
 
@@ -77,8 +128,9 @@ class Batch:
     """A cut batch, padded to a bucketed kernel shape."""
 
     requests: List[Request]
-    x: np.ndarray                       # [bucket, F] uint8
+    x: np.ndarray                       # [bucket, F] uint8 | [bucket, Lw] u32
     bucket: int
+    packed: bool = False
 
     @property
     def n_valid(self) -> int:
@@ -88,20 +140,31 @@ class Batch:
     def n_padding(self) -> int:
         return self.bucket - len(self.requests)
 
+    @property
+    def nbytes(self) -> int:
+        """Bytes this batch moves host->device per dispatch."""
+        return int(self.x.nbytes)
+
 
 class DynamicBatcher:
     """FIFO request queue with deadline/size-triggered batch cutting."""
 
-    def __init__(self, cfg: BatcherConfig = BatcherConfig()):
+    def __init__(self, cfg: BatcherConfig = BatcherConfig(), *,
+                 packed: bool = False):
         self.cfg = cfg
+        self.packed = packed
         self._queue: Deque[Request] = deque()
 
     def __len__(self) -> int:
         return len(self._queue)
 
     def submit(self, rid: int, x: np.ndarray, now: float) -> Request:
-        req = Request(rid=rid, x=np.asarray(x, dtype=np.uint8),
-                      t_enqueue=now, deadline=now + self.cfg.max_wait_s)
+        """Queue one request; in packed mode the features are packed to
+        literal words HERE (once), not at dispatch."""
+        row = (pack_request_np(x) if self.packed
+               else np.asarray(x, dtype=np.uint8))
+        req = Request(rid=rid, x=row, t_enqueue=now,
+                      deadline=now + self.cfg.max_wait_s)
         self._queue.append(req)
         return req
 
@@ -128,7 +191,10 @@ class DynamicBatcher:
         bucket = self.cfg.bucket_for(len(reqs))
         x = np.stack([r.x for r in reqs])
         if bucket > len(reqs):
-            fill = np.broadcast_to(x[0], (bucket - len(reqs), x.shape[1]))
+            # Zero rows, NOT a replay of a real request: a pad row that
+            # leaks through unpad must surface as an obviously-wrong
+            # all-zero input rather than duplicating request 0's answer.
+            fill = np.zeros((bucket - len(reqs), x.shape[1]), dtype=x.dtype)
             x = np.concatenate([x, fill], axis=0)
         return Batch(requests=list(reqs), x=np.ascontiguousarray(x),
-                     bucket=bucket)
+                     bucket=bucket, packed=self.packed)

@@ -1,15 +1,24 @@
 """The IMBUE serving engine: requests in, deadline-batched analog reads out.
 
-Layering (ISSUE 2: unified backend API):
+Layering (ISSUE 2: unified backend API; ISSUE 3: packed datapath +
+measured autotuning):
 
-  submit() -> DynamicBatcher (pad/bucket to Pallas tile shapes)
+  submit() -> DynamicBatcher — in packed mode the request is packed to
+              uint32 literal words HERE, once; the queue and every
+              host->device transfer carry ``[bucket, L/32]`` words
            -> RouterState routing (round-robin / least-loaded / ensemble)
-           -> ``repro.api`` backend — capability-selected once at engine
-              construction (``select_backend``): ``analog-pallas`` (one
-              vmapped kernel over the whole ``ReplicaStackState``) when
-              the pool's noise model allows it, else ``analog-jnp`` —
-              with the switch recorded LOUDLY in ``ServeMetrics``
-           -> Response records + metrics accounting.
+           -> ONE fused jit'd dispatch per batch: the capability-selected
+              ``repro.api`` backend (``analog-pallas-packed`` by default,
+              measured (ct, kt) tiles from the registry tuning table),
+              plus the argmax / ensemble vote — no per-dispatch eager ops
+           -> Response records + metrics accounting (incl. bytes moved).
+
+The backend is capability-selected once at construction
+(``select_backend``); a fallback (e.g. csa_offset forcing the jnp path,
+which also forfeits packed io) is surfaced LOUDLY in ``ServeMetrics``.
+Bucket ladders come from the measured per-backend tuning table
+(``kernels/autotune.py`` -> ``api.get_tuning``) whenever the batcher
+config was built by ``BatcherConfig.for_max_batch``.
 
 The engine is synchronous and single-threaded by design: ``pump()`` cuts
 and dispatches every due batch, so callers drive it from their own event
@@ -31,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
-from repro.api.registry import CAP_FUSED_KERNEL
+from repro.api.registry import CAP_FUSED_KERNEL, CAP_PACKED_IO
 from repro.core import tm
 from repro.core.imbue import IMBUEConfig
 from repro.core.tm import TMConfig
@@ -43,10 +52,13 @@ from repro.serve.replica import ReplicaPool, RouterState, ensemble_vote, \
 
 ENSEMBLE = -1      # Response.replica value when every chip voted
 
-# The engine's default backend preference: the fused Pallas kernel with
-# single-dispatch replica vmap.  Capability selection overrides it when
-# the pool's noise model needs physics the kernel doesn't implement.
+# The engine's default backend preferences: the fused Pallas kernel with
+# single-dispatch replica vmap — packed literal wire when the pool state
+# is packed (EngineConfig.packed, the default), unpacked otherwise.
+# Capability selection overrides either when the pool's noise model
+# needs physics the kernel doesn't implement.
 DEFAULT_BACKEND = "analog-pallas"
+DEFAULT_PACKED_BACKEND = "analog-pallas-packed"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,19 +68,26 @@ class EngineConfig:
     batcher: BatcherConfig = BatcherConfig()
     routing: str = "round_robin"     # round_robin | least_loaded | ensemble
     ensemble_mode: str = "majority"  # majority | sum (see ensemble_vote)
+    # Prefer the packed uint32 literal wire format: the pool state gets
+    # a packed include plane and (absent an explicit backend preference)
+    # selection lands on the packed_io kernels.  Bit-exact vs unpacked;
+    # turn off to force the dense uint8 datapath.
+    packed: bool = True
     # Backend *preference* for the forward path (repro.api registry name).
-    # None -> DEFAULT_BACKEND.  Selection is capability-checked against
-    # the pool's VariationConfig: e.g. `analog-pallas` senses against a
-    # scalar reference and does not model the per-column CSA offset, so a
-    # csa_offset-enabled pool falls back to `analog-jnp` — and the engine
-    # records that switch in ServeMetrics instead of hiding it.
+    # None -> DEFAULT_PACKED_BACKEND / DEFAULT_BACKEND (per ``packed``).
+    # Selection is capability-checked against the pool's
+    # VariationConfig: e.g. the fused kernels sense against a scalar
+    # reference and do not model the per-column CSA offset, so a
+    # csa_offset-enabled pool falls back to `analog-jnp` — and the
+    # engine records that switch in ServeMetrics instead of hiding it.
     backend: Optional[str] = None
     # DEPRECATED (one release): the old boolean kernel toggle.  True maps
     # to backend="analog-pallas", False to "analog-jnp".
     use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None  # None -> interpret off-TPU
 
-    def backend_preference(self) -> str:
+    def backend_preference(self) -> Optional[str]:
+        """The explicit preference, or None for the packed-aware default."""
         if self.use_kernel is not None:
             warnings.warn(
                 "EngineConfig.use_kernel is deprecated; set "
@@ -79,7 +98,7 @@ class EngineConfig:
                 raise ValueError("set EngineConfig.backend or the "
                                  "deprecated use_kernel, not both")
             return "analog-pallas" if self.use_kernel else "analog-jnp"
-        return self.backend or DEFAULT_BACKEND
+        return self.backend
 
 
 @dataclasses.dataclass
@@ -109,10 +128,11 @@ class ServeEngine:
         self.tm_cfg = tm_cfg
         self.ecfg = ecfg
         self.clock = clock
-        self.batcher = DynamicBatcher(ecfg.batcher)
         self.metrics = ServeMetrics()
         self.router: RouterState = pool.router()
         self.state: api.ReplicaStackState = pool.state(tm_cfg)
+        if ecfg.packed:
+            self.state = self.state.pack()
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._noise_free = not (pool.vcfg.c2c or pool.vcfg.csa_offset)
         # Capability-based backend selection, once, up front.  The noise
@@ -120,17 +140,71 @@ class ServeEngine:
         # (preference rejected) is surfaced immediately and accounted per
         # dispatch in ServeMetrics.
         sel_key = None if self._noise_free else self._key
+        prefer = ecfg.backend_preference() or (
+            DEFAULT_PACKED_BACKEND if self.state.packed
+            else DEFAULT_BACKEND)
         self.selection: api.Selection = api.select_backend(
-            self.state, key=sel_key, prefer=ecfg.backend_preference())
+            self.state, key=sel_key, prefer=prefer)
         self.backend: api.Backend = self.selection.backend
         if self.selection.fell_back:
             warnings.warn(
                 f"serve backend fallback: {self.selection.fallback_reason} "
                 "(noise semantics differ from the preferred backend; see "
                 "engine.summary()['forward_fallbacks'])", stacklevel=2)
+        # Wire format follows the SELECTED backend: a fallback off the
+        # packed kernel also falls back to the dense uint8 queue.
+        self.packed_io = CAP_PACKED_IO in self.backend.capabilities
+        # Measured per-backend tuning (kernels/autotune.py): kernel tiles
+        # for every dispatch; bucket ladder when the batcher config was
+        # built by for_max_batch (auto_tune) rather than hand-picked.
+        self.tuning: Optional[dict] = api.get_tuning(self.backend.name)
+        bcfg = ecfg.batcher
+        if bcfg.auto_tune and self.tuning and \
+                self.tuning.get("bucket_sizes"):
+            bcfg = bcfg.with_tuned_buckets(self.tuning["bucket_sizes"],
+                                           self.backend.name)
+        self.batcher = DynamicBatcher(bcfg, packed=self.packed_io)
+        # Pre-sliced single-replica states for routed dispatch (all share
+        # one [1, C, L] shape -> one compiled kernel for every chip) and
+        # ONE fused jit'd forward covering backend + argmax/vote.
+        self._slices = [self.state.replica_slice(i)
+                        for i in range(pool.n_replicas)]
+        self._fwd = self._build_forward()
         self._next_rid = 0
         self._submitted: List[int] = []
         self._results: Dict[int, Response] = {}
+
+    def _build_forward(self):
+        """One jit'd callable per engine: backend forward + prediction.
+
+        Folding the argmax (or ensemble vote) into the same jit removes
+        every per-dispatch eager op from the hot path; ``bt`` is static,
+        so each bucket size compiles once and is then cache-hit.
+        """
+        backend = self.backend
+        fused = CAP_FUSED_KERNEL in backend.capabilities
+        kernel_opts: Dict[str, object] = {}
+        if fused:
+            kernel_opts["interpret"] = self.ecfg.interpret
+            tiles = (self.tuning or {}).get("tiles") or {}
+            for name in ("ct", "kt"):
+                if name in tiles:
+                    kernel_opts[name] = int(tiles[name])
+        routing = self.ecfg.routing
+        mode = self.ecfg.ensemble_mode
+
+        def fwd(state, lits, key, *, bt):
+            opts = dict(kernel_opts, bt=bt) if fused else {}
+            sums_rbm = backend.fn(state, lits, key, **opts)   # [R, B, M]
+            if routing == "ensemble":
+                preds = ensemble_vote(sums_rbm, mode)
+                sums = sums_rbm.sum(axis=0)
+            else:
+                sums = sums_rbm[0]
+                preds = jnp.argmax(sums, axis=-1)
+            return sums, preds
+
+        return jax.jit(fwd, static_argnames=("bt",))
 
     @classmethod
     def from_ta_state(
@@ -196,34 +270,28 @@ class ServeEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
-    def _forward(self, state: api.ReplicaStackState, lits: jax.Array,
-                 key: Optional[jax.Array], bt: int) -> jax.Array:
-        """Per-replica class sums ``[R, bucket, M]``: one backend call."""
-        opts = ({"bt": bt, "interpret": self.ecfg.interpret}
-                if CAP_FUSED_KERNEL in self.backend.capabilities else {})
+    def _dispatch(self, batch: Batch) -> None:
+        t_dispatch = self.clock()
+        # Packed batches already ARE the literal wire format (packed at
+        # submit); dense batches expand to literals on device.
+        lits = jnp.asarray(batch.x)
+        if not batch.packed:
+            lits = tm.literals(lits)
+        key = self._read_key()
         if self.selection.fell_back:
             self.metrics.note_forward_fallback(
                 self.selection.fallback_reason)
-        return self.backend.fn(state, lits, key, **opts)
-
-    def _dispatch(self, batch: Batch) -> None:
-        t_dispatch = self.clock()
-        lits = tm.literals(jnp.asarray(batch.x))
-        key = self._read_key()
         if self.ecfg.routing == "ensemble":
-            sums_rbm = self._forward(self.state, lits, key, batch.bucket)
-            preds = ensemble_vote(sums_rbm, self.ecfg.ensemble_mode)
-            sums = sums_rbm.sum(axis=0)
+            sums, preds = self._fwd(self.state, lits, key, bt=batch.bucket)
             replica = ENSEMBLE
             for i in range(self.pool.n_replicas):
                 self.router.note_dispatch(i, batch.bucket)
         else:
             replica = self.router.pick(self.ecfg.routing)
-            sums = self._forward(self.state.replica_slice(replica), lits,
-                                 key, batch.bucket)[0]
-            preds = jnp.argmax(sums, axis=-1)
+            sums, preds = self._fwd(self._slices[replica], lits, key,
+                                    bt=batch.bucket)
             self.router.note_dispatch(replica, batch.bucket)
-        preds = np.asarray(jax.block_until_ready(preds))
+        preds = np.asarray(preds)
         sums = np.asarray(sums)
         t_done = self.clock()
 
@@ -238,7 +306,10 @@ class ServeEngine:
                 t_dispatch=t_dispatch, t_done=t_done,
                 bucket=batch.bucket, n_valid=batch.n_valid,
                 replica=replica))
-        self.metrics.record_batch(records, batch.bucket)
+        # Pad rows (batch.n_padding of them) are dropped here by
+        # construction: only batch.requests rows produce Responses.
+        assert len(records) == batch.n_valid
+        self.metrics.record_batch(records, batch.bucket, batch.nbytes)
 
     # ------------------------------------------------------------- metrics
 
@@ -250,6 +321,10 @@ class ServeEngine:
         out["n_replicas"] = self.pool.n_replicas
         out["backend"] = self.backend.name
         out["backend_preferred"] = self.selection.preferred
+        out["packed_io"] = self.packed_io
+        out["bucket_sizes"] = list(self.batcher.cfg.bucket_sizes)
+        out["buckets_tuned_for"] = self.batcher.cfg.tuned_for
+        out["kernel_tiles"] = dict((self.tuning or {}).get("tiles") or {})
         if includes is None:
             includes = int(jnp.sum(self.pool.include))
         out["hardware"] = hardware_figures(

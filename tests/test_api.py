@@ -44,7 +44,7 @@ def states(small_cfg, random_ta, keys):
                            n_states=cfg.n_states)
     w = ops.polarity_matrix(cfg, inc,
                             n_class_pad=cfg.n_classes).astype(jnp.int32)
-    return {
+    out = {
         "digital": api.DigitalState.from_ta(random_ta, cfg),
         "crossbar": api.CrossbarState.program(inc, keys["program"], cfg,
                                               NOMINAL),
@@ -53,12 +53,18 @@ def states(small_cfg, random_ta, keys):
         "coalesced": api.CoalescedState(ta_state=random_ta, weights=w,
                                         cfg=ccfg),
     }
+    # packed twins: same model, uint32 include bitplane attached
+    out["digital_packed"] = out["digital"].pack()
+    out["crossbar_packed"] = out["crossbar"].pack()
+    out["stack_packed"] = out["stack"].pack()
+    return out
 
 
 # ------------------------------------------------------ pytree round-trips
 
 @pytest.mark.parametrize("name", ["digital", "crossbar", "stack",
-                                  "coalesced"])
+                                  "coalesced", "digital_packed",
+                                  "stack_packed"])
 def test_state_pytree_roundtrip(states, name):
     s = states[name]
     leaves, treedef = jax.tree_util.tree_flatten(s)
@@ -125,32 +131,41 @@ def test_replica_slice_and_single_replica(states):
 def test_parity_matrix_all_backends_match_digital_reference(
         states, small_cfg, random_ta, boolean_batch):
     """EVERY registered backend == ``tm.forward`` bit-for-bit at nominal
-    variation.  Iterates the registry so a newly registered backend is
-    automatically held to the same bar."""
+    variation, over every state (packed and unpacked) it accepts.
+    Iterates the registry so a newly registered backend is automatically
+    held to the same bar; the packed backends are exercised with BOTH
+    wire formats (pre-packed uint32 words and auto-packed uint8
+    literals)."""
+    from repro.kernels import ops
     x = jnp.asarray(boolean_batch)
     lits = tm.literals(x)
+    litw = ops.pack_literals(lits)
     ref = np.asarray(tm.forward(random_ta, x, small_cfg))
-    by_type = {api.DigitalState: states["digital"],
-               api.CrossbarState: states["crossbar"],
-               api.ReplicaStackState: states["stack"],
-               api.CoalescedState: states["coalesced"]}
     checked = 0
     for backend in api.list_backends():
-        for stype, state in by_type.items():
+        packed_io = api.CAP_PACKED_IO in backend.capabilities
+        for name, state in states.items():
             if not backend.accepts(state):
                 continue
-            got = np.asarray(api.class_sums(state, lits,
-                                            backend=backend.name))
-            assert got.dtype == np.int32, (backend.name, got.dtype)
-            if got.ndim == 3:                       # replica stack
-                for r in range(got.shape[0]):
-                    np.testing.assert_array_equal(got[r], ref,
-                                                  err_msg=backend.name)
-            else:
-                np.testing.assert_array_equal(got, ref,
-                                              err_msg=backend.name)
+            wires = (lits, litw) if packed_io else (lits,)
+            for wire in wires:
+                got = np.asarray(api.class_sums(state, wire,
+                                                backend=backend.name))
+                assert got.dtype == np.int32, (backend.name, got.dtype)
+                if got.ndim == 3:                   # replica stack
+                    for r in range(got.shape[0]):
+                        np.testing.assert_array_equal(
+                            got[r], ref, err_msg=f"{backend.name}/{name}")
+                else:
+                    np.testing.assert_array_equal(
+                        got, ref, err_msg=f"{backend.name}/{name}")
             checked += 1
-    assert checked >= 7     # 2 digital + 2x2 analog + 1 coalesced
+    # digital{jnp,pallas} x {digital, digital_packed} = 4,
+    # digital-pallas-packed x {digital_packed} = 1,
+    # analog{jnp,pallas} x {crossbar, stack} x {unpacked, packed} = 8,
+    # analog-pallas-packed x {crossbar_packed, stack_packed} = 2,
+    # coalesced x 1  ->  16 (state, backend) cells
+    assert checked >= 16
 
 
 def test_predict_matches_digital_argmax(states, random_ta, small_cfg,
@@ -167,6 +182,57 @@ def test_predict_matches_digital_argmax(states, random_ta, small_cfg,
 def test_selection_prefers_fused_kernel_at_nominal(states):
     sel = api.select_backend(states["stack"])
     assert sel.backend.name == "analog-pallas" and not sel.fell_back
+
+
+def test_selection_prefers_packed_backend_for_packed_state(states):
+    """A packed state selects the packed_io kernel (highest priority);
+    an unpacked state can never land on it (predicate gating); an
+    explicit unpacked preference is still honored."""
+    sel = api.select_backend(states["stack_packed"])
+    assert sel.backend.name == "analog-pallas-packed" and not sel.fell_back
+    assert api.CAP_PACKED_IO in sel.backend.capabilities
+    sel_d = api.select_backend(states["digital_packed"])
+    assert sel_d.backend.name == "digital-pallas-packed"
+    # unpacked state: packed backends are not even candidates
+    assert not api.get_backend("analog-pallas-packed").accepts(
+        states["stack"])
+    sel_u = api.select_backend(states["stack"])
+    assert sel_u.backend.name == "analog-pallas"
+    # explicit pin beats the packed preference, loudly satisfiable
+    sel_pin = api.select_backend(states["stack_packed"],
+                                 prefer="analog-pallas")
+    assert sel_pin.backend.name == "analog-pallas" and not sel_pin.fell_back
+
+
+def test_selection_packed_state_with_csa_noise_falls_back(small_cfg, keys):
+    """csa_offset still wins over packed preference: the packed kernel
+    lacks models_csa_offset, so a noisy read falls back (loudly) to
+    analog-jnp — which also forfeits packed io."""
+    inc = jax.random.bernoulli(keys["init"], 0.1,
+                               (small_cfg.n_clauses,
+                                small_cfg.n_literals))
+    noisy = api.ReplicaStackState.program(
+        inc, keys["program"], 2, small_cfg, VariationConfig()).pack()
+    sel = api.select_backend(noisy, key=jax.random.PRNGKey(0),
+                             prefer="analog-pallas-packed")
+    assert sel.fell_back and sel.backend.name == "analog-jnp"
+    assert "models_csa_offset" in sel.fallback_reason
+
+
+def test_pack_is_idempotent_and_preserves_model(states):
+    s = states["stack"]
+    p = s.pack()
+    assert p.packed and p.pack() is p
+    assert not s.packed                       # pack() is non-mutating
+    np.testing.assert_array_equal(np.asarray(p.r_stack),
+                                  np.asarray(s.r_stack))
+    from repro.kernels import bitpack
+    np.testing.assert_array_equal(
+        np.asarray(bitpack.unpack_bits(p.include_packed,
+                                       s.include.shape[-1])),
+        np.asarray(s.include).astype(np.uint8))
+    # replica_slice keeps the packed plane
+    assert p.replica_slice(0).packed
 
 
 def test_selection_falls_back_on_csa_offset(small_cfg, keys):

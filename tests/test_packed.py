@@ -1,0 +1,159 @@
+"""Bit-packed datapath tests (ISSUE 3): pack/unpack round-trips, np/jnp
+layout agreement, and packed-kernel parity against the unpacked wrappers
+— which are themselves held to the digital oracle by test_kernels.py /
+test_api.py, so equality here closes the chain back to ``tm.forward``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import imbue
+from repro.core.imbue import IMBUEConfig
+from repro.core.tm import TMConfig, literals
+from repro.core.variations import VariationConfig
+from repro.kernels import bitpack, ops
+
+
+# ------------------------------------------------------------ round trips
+
+@pytest.mark.parametrize("l", [1, 7, 31, 32, 33, 64, 100, 128, 130])
+def test_pack_unpack_roundtrip_ragged(l):
+    bits = jax.random.bernoulli(jax.random.PRNGKey(l), 0.5,
+                                (5, l)).astype(jnp.uint8)
+    words = bitpack.pack_bits(bits)
+    assert words.dtype == jnp.uint32
+    assert words.shape == (5, bitpack.words_for(l))
+    np.testing.assert_array_equal(
+        np.asarray(bitpack.unpack_bits(words, l)), np.asarray(bits))
+
+
+@pytest.mark.parametrize("l", [1, 8, 30, 32, 50, 96, 130])
+def test_np_and_jnp_packers_agree(l):
+    """The host-side packbits path and the device-side shift path are the
+    same layout, bit for bit (the serving queue depends on this)."""
+    bits = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(100 + l), 0.5, (4, l))).astype(np.uint8)
+    np.testing.assert_array_equal(bitpack.pack_bits_np(bits),
+                                  np.asarray(bitpack.pack_bits(bits)))
+
+
+def test_pack_request_matches_literal_pack():
+    from repro.serve.batching import pack_request_np
+    x = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(0), 0.4, (37,))).astype(np.uint8)
+    lits = np.concatenate([x, 1 - x])
+    np.testing.assert_array_equal(pack_request_np(x),
+                                  bitpack.pack_bits_np(lits))
+
+
+# ------------------------------------------------------- digital kernels
+
+@pytest.mark.parametrize("b,c,l", [
+    (1, 1, 1),            # degenerate, all padding
+    (7, 5, 33),           # ragged, L not a multiple of 32
+    (33, 32, 96),
+    (64, 24, 100),
+])
+def test_clause_eval_packed_matches_unpacked(b, c, l):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(b * c + l))
+    lits = jax.random.bernoulli(k1, 0.5, (b, l)).astype(jnp.uint8)
+    inc = jax.random.bernoulli(k2, 0.1, (c, l)).astype(jnp.uint8)
+    got = ops.clause_eval_packed(ops.pack_literals(lits),
+                                 ops.pack_include(inc))
+    want = ops.clause_eval(lits, inc)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,j,f", [(2, 4, 30), (4, 6, 50), (3, 2, 64)])
+def test_tm_class_sums_packed_matches_unpacked(m, j, f):
+    cfg = TMConfig(n_classes=m, clauses_per_class=j, n_features=f)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(m * j + f))
+    lits = jax.random.bernoulli(k1, 0.5,
+                                (17, cfg.n_literals)).astype(jnp.uint8)
+    inc = jax.random.bernoulli(k2, 0.1,
+                               (cfg.n_clauses,
+                                cfg.n_literals)).astype(jnp.uint8)
+    got = ops.tm_class_sums_packed(ops.pack_literals(lits),
+                                   ops.pack_include(inc), cfg)
+    want = ops.tm_class_sums(lits, inc, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_kernels_reject_bad_kt():
+    lits = jnp.zeros((8, 64), jnp.uint8)
+    inc = jnp.zeros((8, 64), jnp.uint8)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        ops.clause_eval_packed(ops.pack_literals(lits),
+                               ops.pack_include(inc), kt=48)
+
+
+# -------------------------------------------------------- analog kernels
+
+@pytest.mark.parametrize("vcfg", [
+    VariationConfig.nominal(),
+    VariationConfig(c2c=False, csa_offset=False),     # D2D only
+])
+def test_imbue_packed_matches_unpacked(vcfg):
+    cfg = TMConfig(n_classes=3, clauses_per_class=4, n_features=40)
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.bernoulli(ks[0], 0.5, (21, cfg.n_features)).astype(
+        jnp.uint8)
+    inc = jax.random.bernoulli(ks[1], 0.08,
+                               (cfg.n_clauses, cfg.n_literals))
+    xbar = imbue.program_crossbar(inc, ks[2], vcfg)
+    lits = literals(x)
+    g_on, i_leak = imbue.cell_conductances(xbar, None, vcfg)
+    got = ops.imbue_class_sums_raw_packed(
+        ops.pack_literals(lits), g_on, i_leak, xbar.include,
+        xbar.cfg.v_read, xbar.cfg.r_divider, xbar.cfg.reference_voltage(),
+        cfg, width=xbar.cfg.width)
+    want = ops.imbue_class_sums(lits, xbar, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_imbue_stack_packed_bit_exact_under_c2c_noise(keys):
+    """Same key -> the packed and unpacked stack dispatches draw the SAME
+    noise and agree bit-for-bit (the wire format cannot perturb physics)."""
+    cfg = TMConfig(n_classes=3, clauses_per_class=4, n_features=40)
+    vcfg = VariationConfig(csa_offset=False)
+    inc = jax.random.bernoulli(keys["init"], 0.1,
+                               (cfg.n_clauses, cfg.n_literals))
+    r_stack = imbue.program_replica_stack(inc, keys["program"], 3, vcfg)
+    x = jax.random.bernoulli(keys["data"], 0.4,
+                             (16, cfg.n_features)).astype(jnp.uint8)
+    lits = literals(x)
+    key = keys["read"]
+    want = ops.imbue_class_sums_stack(lits, r_stack, inc, IMBUEConfig(),
+                                      cfg, key, vcfg=vcfg, bt=16)
+    got = ops.imbue_class_sums_stack_packed(
+        ops.pack_literals(lits), r_stack, inc, IMBUEConfig(), cfg, key,
+        vcfg=vcfg, bt=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ------------------------------------------------------------- autotuner
+
+def test_prune_bucket_ladder():
+    from repro.kernels.autotune import prune_bucket_ladder
+    # flat latency -> ladder collapses to the largest bucket
+    assert prune_bucket_ladder({8: 100.0, 16: 99.0, 32: 101.0,
+                                64: 100.0}) == (64,)
+    # strictly amortizing latency -> every bucket survives
+    assert prune_bucket_ladder({8: 10.0, 16: 15.0, 32: 30.0,
+                                64: 60.0}) == (8, 16, 32, 64)
+
+
+def test_autotune_smoke_produces_entries():
+    """A smoke-sized measured sweep produces registry entries with tiles
+    and a bucket ladder for every fused-kernel backend."""
+    from repro import api
+    from repro.kernels.autotune import autotune
+    entries = autotune(backend_names=["digital-pallas-packed"], smoke=True,
+                       register=False)
+    assert set(entries) == {"digital-pallas-packed"}
+    e = entries["digital-pallas-packed"]
+    assert set(e["tiles"]) == {"ct", "kt"} and e["tiles"]["kt"] % 32 == 0
+    assert e["bucket_sizes"] and all(b % 8 == 0 for b in e["bucket_sizes"])
+    assert api.get_tuning("no-such-backend") is None

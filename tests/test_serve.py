@@ -56,8 +56,30 @@ def test_batcher_pads_and_keeps_fifo_order():
     assert batch.bucket == 16 and batch.n_valid == 11 and batch.n_padding == 5
     assert [r.rid for r in batch.requests] == list(range(11))
     assert batch.x.shape == (16, 4)
-    # padding rows replay a valid row (results discarded on unpad)
-    np.testing.assert_array_equal(batch.x[11:], batch.x[:1].repeat(5, 0))
+    # padding rows are ZEROS, never a replay of a real request: a pad row
+    # leaking through unpad must surface as an obviously-wrong all-zero
+    # input, not duplicate request 0's prediction
+    np.testing.assert_array_equal(batch.x[11:], np.zeros((5, 4), np.uint8))
+
+
+def test_batcher_packed_mode_packs_once_at_submit():
+    """Packed mode: the queue holds uint32 literal words (packed at
+    submit), pad rows are zero words, and the packed row equals the
+    host-side pack of [x, 1-x]."""
+    from repro.serve.batching import pack_request_np
+    clock = FakeClock()
+    b = DynamicBatcher(BatcherConfig(max_batch=8, bucket_sizes=(8,)),
+                       packed=True)
+    xs = [np.array([1, 0, 1, 1, 0], np.uint8) for _ in range(3)]
+    for rid, x in enumerate(xs):
+        b.submit(rid, x, clock())
+    assert b._queue[0].x.dtype == np.uint32          # packed in the queue
+    batch = b.cut(clock(), force=True)
+    assert batch.packed and batch.x.dtype == np.uint32
+    assert batch.x.shape == (8, 1)                   # ceil(10/32) = 1 word
+    np.testing.assert_array_equal(batch.x[0], pack_request_np(xs[0]))
+    np.testing.assert_array_equal(batch.x[3:], np.zeros((5, 1), np.uint32))
+    assert batch.nbytes == batch.x.nbytes
 
 
 def test_batcher_deadline_trigger():
@@ -186,7 +208,7 @@ def test_least_loaded_balances_rows(small_cfg, random_ta, keys):
 def test_kernel_and_jnp_paths_agree(small_cfg, random_ta, boolean_batch,
                                     keys):
     preds = []
-    for backend in ("analog-pallas", "analog-jnp"):
+    for backend in ("analog-pallas-packed", "analog-pallas", "analog-jnp"):
         eng = ServeEngine.from_ta_state(
             random_ta, small_cfg, n_replicas=2, key=keys["route"],
             vcfg=VariationConfig.nominal(),
@@ -194,7 +216,87 @@ def test_kernel_and_jnp_paths_agree(small_cfg, random_ta, boolean_batch,
         assert eng.backend.name == backend        # preference satisfied
         eng.submit_many(list(boolean_batch))
         preds.append([r.pred for r in eng.drain()])
-    assert preds[0] == preds[1]
+    assert preds[0] == preds[1] == preds[2]
+
+
+def test_default_engine_selects_packed_backend(small_cfg, random_ta, keys,
+                                               boolean_batch):
+    """EngineConfig() defaults to the packed wire: the pool state gets a
+    packed include plane, selection lands on analog-pallas-packed, the
+    batcher queues uint32 words, and bytes-moved shrinks accordingly."""
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=keys["route"],
+        vcfg=VariationConfig.nominal(), ecfg=EngineConfig())
+    assert eng.state.packed
+    assert eng.backend.name == "analog-pallas-packed"
+    assert eng.packed_io and eng.batcher.packed
+    eng.submit_many(list(boolean_batch[:16]))
+    eng.drain()
+    s = eng.summary()
+    assert s["packed_io"] is True
+    # 16 requests pad to one bucket of 8? no: max_batch 128 deadline cut
+    # -> one batch; words = ceil(2F/32) * 4 bytes per row
+    words = -(-2 * small_cfg.n_features // 32)
+    assert s["bytes_moved"] % (words * 4) == 0
+    # unpacked engine moves 8x more per row (uint8 literals vs packed)
+    eng2 = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=keys["route"],
+        vcfg=VariationConfig.nominal(), ecfg=EngineConfig(packed=False))
+    assert eng2.backend.name == "analog-pallas" and not eng2.packed_io
+
+
+def test_engine_consumes_registry_tuning_table(small_cfg, random_ta, keys):
+    """Autotuned bucket sizes come from the registry tuning table, not a
+    hard-coded ladder: a for_max_batch batcher picks up the measured
+    buckets (capped at max_batch) and records which backend they were
+    measured for; kernel tiles flow into the dispatch opts."""
+    from repro import api
+    saved = api.get_tuning("analog-pallas-packed")
+    api.register_tuning("analog-pallas-packed",
+                        {"tiles": {"ct": 32, "kt": 128},
+                         "bucket_sizes": [8, 24, 96]})
+    try:
+        eng = ServeEngine.from_ta_state(
+            random_ta, small_cfg, n_replicas=1, key=keys["route"],
+            vcfg=VariationConfig.nominal(),
+            ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(64)))
+        assert eng.backend.name == "analog-pallas-packed"
+        # 96 exceeds max_batch and is dropped; max_batch caps the ladder
+        assert eng.batcher.cfg.bucket_sizes == (8, 24, 64)
+        assert eng.batcher.cfg.tuned_for == "analog-pallas-packed"
+        assert eng.summary()["kernel_tiles"] == {"ct": 32, "kt": 128}
+        # an explicit (hand-picked) ladder is NEVER overridden
+        eng2 = ServeEngine.from_ta_state(
+            random_ta, small_cfg, n_replicas=1, key=keys["route"],
+            vcfg=VariationConfig.nominal(),
+            ecfg=EngineConfig(batcher=BatcherConfig(
+                max_batch=16, bucket_sizes=(8, 16))))
+        assert eng2.batcher.cfg.bucket_sizes == (8, 16)
+        assert eng2.batcher.cfg.tuned_for is None
+    finally:
+        api.clear_tuning("analog-pallas-packed")
+        if saved is not None:
+            api.register_tuning("analog-pallas-packed", saved)
+
+
+def test_pad_rows_are_dropped_on_unpad(small_cfg, random_ta, keys,
+                                       boolean_batch):
+    """A padded dispatch returns exactly n_valid responses, and each
+    matches the digital oracle — zero pad rows cannot alias a real
+    request's prediction."""
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=1, key=keys["route"],
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                                bucket_sizes=(16,))))
+    rids = eng.submit_many(list(boolean_batch[:5]))   # 5 valid, 11 pad
+    responses = eng.drain()
+    assert [r.rid for r in responses] == rids and len(responses) == 5
+    digital = np.asarray(tm.predict(
+        random_ta, jnp.asarray(boolean_batch[:5]), small_cfg))
+    np.testing.assert_array_equal(np.array([r.pred for r in responses]),
+                                  digital)
+    assert eng.metrics.padded_rows == 11
 
 
 def test_use_kernel_flag_is_a_deprecated_alias(small_cfg, random_ta, keys):
