@@ -13,16 +13,13 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import api
 from repro.core import coalesced as co
-from repro.core import energy, imbue
+from repro.core import energy, imbue, tm_train
 from repro.core import variations as var
 from repro.core.mapping import csa_count_packed
 from repro.core.tm import TMConfig, include_stats, init_ta_state
-from repro.core import tm_train
 from repro.core.variations import VariationConfig
 from repro.data.tm_datasets import noisy_xor
 

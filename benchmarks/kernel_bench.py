@@ -27,7 +27,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import imbue
 from repro.core.tm import TMConfig, include_mask, init_ta_state, literals

@@ -8,7 +8,6 @@ Each function returns a list of result rows and a list of
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

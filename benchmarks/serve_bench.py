@@ -25,7 +25,17 @@ that transfer are the *relative* win of batching/tuning and the
 bytes-moved-per-dispatch column, which is exactly the HBM/interconnect
 traffic a real accelerator would carry.
 
+ISSUE 4 additions: **async** rows (``AsyncServeEngine`` double-buffers
+dispatches so host packing overlaps device compute; the headline pair is
+sync vs async at R=4 batch=64 on the same host) and **sharded** rows
+(the pool's ``[R, C, L]`` stack split over a ``replica`` device mesh;
+needs >1 device — pass ``--host-devices 8`` to force CPU host devices
+before jax initializes).  Sharded rows ride the GSPMD jnp backend by
+capability (``CAP_SHARDED``); on forced CPU devices they measure
+*mechanics*, not a speedup — the fake devices share one physical socket.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--requests 192]
+  PYTHONPATH=src python -m benchmarks.serve_bench --host-devices 8
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI, no JSON
 """
 
@@ -34,7 +44,12 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(sys.argv[1:])   # must precede the first jax import
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +58,9 @@ import numpy as np
 from repro import api
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
-from repro.serve import BatcherConfig, EngineConfig, ServeEngine
+from repro.launch.mesh import make_replica_mesh
+from repro.serve import (AsyncServeEngine, BatcherConfig, EngineConfig,
+                         ServeEngine)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -60,7 +77,8 @@ def make_model(key):
 
 
 def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin",
-                backend=None, packed=True, static_buckets=False):
+                backend=None, packed=True, static_buckets=False,
+                engine_cls=ServeEngine, mesh=None):
     # CSA offset off so serving stays on the fused Pallas kernel path
     # (capability selection would reject the pallas backends otherwise;
     # see repro.api.select_backend).
@@ -71,16 +89,17 @@ def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin",
                                 bucket_sizes=sizes + (max_batch,))
     else:
         batcher = BatcherConfig.for_max_batch(max_batch)
-    return ServeEngine.from_ta_state(
+    return engine_cls.from_ta_state(
         ta, cfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
         vcfg=VariationConfig(csa_offset=False),
         ecfg=EngineConfig(batcher=batcher, routing=routing,
-                          backend=backend, packed=packed))
+                          backend=backend, packed=packed),
+        mesh=mesh)
 
 
 def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing,
                 backend=None, packed=True, static_buckets=False,
-                repeats=3):
+                repeats=3, engine_cls=ServeEngine, mesh=None):
     """Submit everything, then drain: batches cut at ``max_batch``.
 
     Best of ``repeats`` timed runs (one warmed engine) — see module
@@ -89,7 +108,8 @@ def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing,
     engine = make_engine(cfg, ta, max_batch=max_batch,
                          n_replicas=n_replicas, routing=routing,
                          backend=backend, packed=packed,
-                         static_buckets=static_buckets)
+                         static_buckets=static_buckets,
+                         engine_cls=engine_cls, mesh=mesh)
     engine.submit_many([xs[0]] * max_batch)   # warm the kernel cache
     engine.drain()
     best_wall, best_summary = float("inf"), None
@@ -105,7 +125,47 @@ def run_batched(cfg, ta, xs, *, max_batch, n_replicas, routing,
     out["wall_s"] = best_wall
     out["wall_throughput_rps"] = len(xs) / best_wall
     out["max_batch"] = max_batch
+    out["async"] = engine_cls is AsyncServeEngine
     return out
+
+
+def run_async_pair(cfg, ta, xs, *, max_batch, n_replicas, repeats=3,
+                   backend=None, packed=True, mesh=None):
+    """Sync vs async on the SAME workload, runs interleaved.
+
+    Wall-clock on a shared host drifts over minutes; alternating the two
+    engines run-for-run makes the sync/async ratio robust to that drift
+    in a way two back-to-back sweeps are not.  Best-of per engine."""
+    engines = {}
+    for is_async in (False, True):
+        eng = make_engine(cfg, ta, max_batch=max_batch,
+                          n_replicas=n_replicas, routing="round_robin",
+                          backend=backend, packed=packed, mesh=mesh,
+                          engine_cls=(AsyncServeEngine if is_async
+                                      else ServeEngine))
+        eng.submit_many([xs[0]] * max_batch)      # warm the kernel cache
+        eng.drain()
+        engines[is_async] = eng
+    best = {False: (float("inf"), None), True: (float("inf"), None)}
+    for _ in range(max(1, repeats)):
+        for is_async in (False, True):
+            eng = engines[is_async]
+            eng.metrics = type(eng.metrics)()
+            t0 = time.monotonic()
+            eng.submit_many(list(xs))
+            eng.drain()
+            wall = time.monotonic() - t0
+            if wall < best[is_async][0]:
+                best[is_async] = (wall, eng.summary())
+    rows = {}
+    for is_async in (False, True):
+        wall, summary = best[is_async]
+        summary["wall_s"] = wall
+        summary["wall_throughput_rps"] = len(xs) / wall
+        summary["max_batch"] = max_batch
+        summary["async"] = is_async
+        rows[is_async] = summary
+    return rows[False], rows[True]
 
 
 def run_serial(cfg, ta, xs, *, n_replicas=1, backend=None, packed=True,
@@ -165,7 +225,15 @@ def main(argv=None):
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed runs per configuration (best reported)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: one tiny sweep cell, nothing written")
+                    help="CI smoke: one tiny sweep cell; the committed "
+                         "baseline JSON is never touched")
+    ap.add_argument("--smoke-out", default=None,
+                    help="write the smoke report JSON here (CI uploads "
+                         "it as a workflow artifact); default: no write")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N CPU host devices before jax init so "
+                         "the sharded rows run (XLA_FLAGS=--xla_force_"
+                         "host_platform_device_count)")
     ap.add_argument("--out", default=os.path.join(REPO, "BENCH_serve.json"))
     args = ap.parse_args(argv)
     if args.smoke:
@@ -213,13 +281,69 @@ def main(argv=None):
     print(f"[serve_bench]   ensemble R=4 batch=64: "
           f"{ens['wall_throughput_rps']:.1f} req/s")
 
+    # Async overlap at the headline cell: identical config to the sync
+    # R=4 batch=64 sweep row, AsyncServeEngine dispatch schedule; the
+    # two engines are timed interleaved so host drift can't fake a win.
+    sync_row, async_row = run_async_pair(
+        cfg, ta, xs, max_batch=64, n_replicas=4, backend=args.backend,
+        packed=args.packed, repeats=args.repeats)
+    for row in (sync_row, async_row):
+        row["speedup_vs_serial"] = (row["wall_throughput_rps"]
+                                    / serial["wall_throughput_rps"])
+    async_speedup = (async_row["wall_throughput_rps"]
+                     / sync_row["wall_throughput_rps"])
+    print(f"[serve_bench]   async R=4 batch=64: "
+          f"{async_row['wall_throughput_rps']:.1f} req/s = "
+          f"{async_speedup:.2f}x sync "
+          f"({sync_row['wall_throughput_rps']:.1f} req/s paired), "
+          f"overlap {100 * async_row['overlap_fraction']:.0f}%")
+
+    # Sharded rows: the pool split over a replica device mesh.  On
+    # forced CPU host devices this measures mechanics (the jnp GSPMD
+    # backend on fake devices sharing one socket), not a speedup.
+    sharded = []
+    n_dev = jax.device_count()
+    for n_replicas, use_async, routing in (
+            (4, False, "round_robin"), (4, True, "round_robin"),
+            (8, True, "round_robin"), (8, False, "ensemble")):
+        if n_replicas > n_dev or args.smoke:
+            continue
+        mesh = make_replica_mesh(n_replicas, 1)
+        row = run_batched(cfg, ta, xs, max_batch=64,
+                          n_replicas=n_replicas, routing=routing,
+                          backend=args.backend, packed=args.packed,
+                          repeats=args.repeats, mesh=mesh,
+                          engine_cls=(AsyncServeEngine if use_async
+                                      else ServeEngine))
+        row["speedup_vs_serial"] = (row["wall_throughput_rps"]
+                                    / serial["wall_throughput_rps"])
+        sharded.append(row)
+        print(f"[serve_bench]   sharded R={n_replicas} batch=64 "
+              f"({routing}{', async' if use_async else ''}): "
+              f"{row['wall_throughput_rps']:.1f} req/s on "
+              f"{row['backend']}, mesh {row['mesh']}, overlap "
+              f"{100 * row['overlap_fraction']:.0f}%")
+    if not sharded and not args.smoke:
+        print(f"[serve_bench]   sharded rows skipped: {n_dev} device(s) "
+              "visible (pass --host-devices 8)")
+
     if args.smoke:
         row = sweep[0]
         ok = (row["speedup_vs_serial"] >= 1.5
-              and row["forward_fallbacks"] == [])
+              and row["forward_fallbacks"] == []
+              and async_row["forward_fallbacks"] == [])
         print(f"[serve_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
               f"{row['speedup_vs_serial']:.1f}x serial on "
-              f"{row['backend']} (nothing written)")
+              f"{row['backend']}, async {async_speedup:.2f}x sync "
+              f"(committed baseline untouched)")
+        if args.smoke_out:
+            with open(args.smoke_out, "w") as f:
+                json.dump({"smoke": True, "devices": n_dev,
+                           "serial_baseline": serial, "sweep": sweep,
+                           "ensemble": ens, "async_r4_b64": async_row,
+                           "async_speedup_vs_sync": async_speedup},
+                          f, indent=2, default=str)
+            print(f"[serve_bench] wrote smoke report to {args.smoke_out}")
         if not ok:
             raise SystemExit(1)
         return None
@@ -253,8 +377,7 @@ def main(argv=None):
     at64 = [r for r in sweep
             if r["max_batch"] == 64 and r["n_replicas"] == 1]
     speedup64 = at64[0]["speedup_vs_serial"]
-    after = [r for r in sweep
-             if r["max_batch"] == 64 and r["n_replicas"] == 4][0]
+    after = sync_row
     headline = (after["wall_throughput_rps"]
                 / before["wall_throughput_rps"])
     report = {
@@ -262,11 +385,18 @@ def main(argv=None):
                   "n_literals": cfg.n_literals,
                   "n_classes": cfg.n_classes},
         "backend": jax.default_backend(),
+        "devices": n_dev,
         "requests": args.requests,
         "repeats": args.repeats,
         "serial_baseline": serial,
         "sweep": sweep,
         "ensemble": ens,
+        "sync_r4_b64_paired": sync_row,
+        "async_r4_b64": async_row,
+        "async_speedup_vs_sync_r4_b64": async_speedup,
+        "async_overlap_fraction": async_row["overlap_fraction"],
+        "sync_overlap_fraction": sync_row["overlap_fraction"],
+        "sharded": sharded,
         "before_unpacked_static": before,
         "speedup_batch64_vs_serial": speedup64,
         "headline_r4_b64_rps": after["wall_throughput_rps"],
@@ -274,6 +404,13 @@ def main(argv=None):
         "previous_committed_r4_b64_rps": prev_rps,
         "headline_speedup_vs_previous_committed": (
             after["wall_throughput_rps"] / prev_rps if prev_rps else None),
+        # Cross-commit throughput ratios compare different hosts/device
+        # configs (e.g. --host-devices 8 adds fake-device overhead the
+        # single-device baseline never paid); same-run pairs above are
+        # the apples-to-apples numbers.
+        "previous_committed_note": (
+            "previous baseline may predate --host-devices forcing; "
+            f"this run saw {n_dev} device(s)"),
         "bytes_per_dispatch_before": before["bytes_per_dispatch"],
         "bytes_per_dispatch_after": after["bytes_per_dispatch"],
     }
@@ -288,11 +425,17 @@ def main(argv=None):
           f"{headline:.2f}x the same-host before-config; operand "
           f"bytes/dispatch {before['bytes_per_dispatch']:.0f} -> "
           f"{after['bytes_per_dispatch']:.0f}")
+    print(f"[serve_bench] async overlap at R=4 batch=64: "
+          f"{async_speedup:.2f}x the synchronous packed baseline "
+          f"({'PASS' if async_speedup >= 1.0 else 'FAIL'} >= 1.0x), "
+          f"overlap {100 * async_row['overlap_fraction']:.0f}% vs "
+          f"{100 * sync_row['overlap_fraction']:.0f}% sync")
     if prev_rps:
         ratio = after["wall_throughput_rps"] / prev_rps
         print(f"[serve_bench] vs previously committed baseline "
               f"({prev_rps:.1f} req/s): {ratio:.2f}x "
-              f"({'PASS' if ratio >= 1.3 else 'FAIL'} >= 1.3x)")
+              f"({'PASS' if ratio >= 1.0 else 'FAIL'} >= 1.0x, "
+              f"no regression)")
     return report
 
 

@@ -2,6 +2,15 @@
 four simulated crossbar chips with dynamic batching and ensemble voting.
 
   PYTHONPATH=src python examples/serve_quickstart.py [--no-packed]
+  PYTHONPATH=src python examples/serve_quickstart.py --mesh 4   # sharded
+
+``--mesh R[xB]`` shards the pool's programmed ``[R, C, L]`` stack over a
+device mesh (one fused ensemble dispatch spans every device) — run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` to try it on a
+CPU-only box; responses stay bit-identical to the single-device engine.
+For the overlapped (double-buffered) dispatch schedule and the full
+flag surface, see ``repro.launch.serve`` (``--async-serve``,
+``--host-devices``).
 """
 
 import argparse
@@ -21,7 +30,17 @@ def main(argv=None):
     ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="uint32 packed literal wire format (default on)")
+    ap.add_argument("--mesh", default=None, metavar="RxB",
+                    help="shard the replica pool over a device mesh "
+                         "(e.g. '4' or '2x2'); needs that many visible "
+                         "devices — force CPU host devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N")
     args = ap.parse_args(argv)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import parse_mesh_spec
+        mesh = parse_mesh_spec(args.mesh)
 
     cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
                    n_states=100)
@@ -42,8 +61,11 @@ def main(argv=None):
         vcfg=VariationConfig(),
         ecfg=EngineConfig(routing="ensemble", packed=args.packed,
                           batcher=BatcherConfig(max_batch=32,
-                                                bucket_sizes=(8, 16, 32))))
+                                                bucket_sizes=(8, 16, 32))),
+        mesh=mesh)
     bcfg = engine.batcher.cfg
+    if mesh is not None:
+        print(f"pool sharded over mesh {dict(mesh.shape)}")
     print(f"backend: {engine.backend.name} (packed_io={engine.packed_io}, "
           f"buckets={list(bcfg.bucket_sizes)}"
           + (f", tuned for {bcfg.tuned_for}" if bcfg.tuned_for else "")

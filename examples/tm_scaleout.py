@@ -14,7 +14,6 @@ os.environ.setdefault("XLA_FLAGS",
 import time  # noqa: E402
 
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core import tm, tm_distributed as tmd  # noqa: E402

@@ -51,7 +51,7 @@ import jax.numpy as jnp
 from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
                                 CAP_FUSED_KERNEL, CAP_MODELS_C2C,
                                 CAP_MODELS_CSA_OFFSET, CAP_PACKED_IO,
-                                CAP_REPLICA_VMAP, Selection, get_backend,
+                                CAP_REPLICA_VMAP, CAP_SHARDED,
                                 register_backend, select_backend)
 from repro.api.states import (CoalescedState, CrossbarState, DigitalState,
                               ReplicaStackState)
@@ -83,7 +83,7 @@ def _as_packed_lits(lits: jax.Array) -> jax.Array:
 # ------------------------------------------------------------- digital
 
 @register_backend("digital-jnp", state_types=(DigitalState,),
-                  capabilities={CAP_DIGITAL}, priority=10)
+                  capabilities={CAP_DIGITAL, CAP_SHARDED}, priority=10)
 def digital_jnp(state: DigitalState, lits: jax.Array,
                 key: Optional[jax.Array] = None) -> jax.Array:
     """Boolean-domain reference: violation matmul + polarity counters."""
@@ -120,11 +120,16 @@ def digital_pallas_packed(state: DigitalState, lits: jax.Array,
 @register_backend("analog-jnp",
                   state_types=(CrossbarState, ReplicaStackState),
                   capabilities={CAP_ANALOG, CAP_MODELS_C2C,
-                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP},
+                                CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP,
+                                CAP_SHARDED},
                   priority=10)
 def analog_jnp(state, lits: jax.Array,
                key: Optional[jax.Array] = None) -> jax.Array:
-    """Einsum KCL + per-column CSA compare (full noise model)."""
+    """Einsum KCL + per-column CSA compare (full noise model).
+
+    Pure jnp ops, so GSPMD partitions the dispatch across a sharded
+    ``r_stack`` — the only backend vocabulary that declares
+    ``CAP_SHARDED`` alongside the full noise model."""
     if isinstance(state, ReplicaStackState):
         cls = imbue.stacked_clause_outputs(
             state.r_stack, state.include, lits, state.tm_cfg, key,
@@ -192,7 +197,8 @@ def analog_pallas_packed(state, lits: jax.Array,
 # ----------------------------------------------------------- coalesced
 
 @register_backend("coalesced", state_types=(CoalescedState,),
-                  capabilities={CAP_DIGITAL, CAP_COALESCED}, priority=10)
+                  capabilities={CAP_DIGITAL, CAP_COALESCED, CAP_SHARDED},
+                  priority=10)
 def coalesced_jnp(state: CoalescedState, lits: jax.Array,
                   key: Optional[jax.Array] = None) -> jax.Array:
     """Shared clause pool with a weighted digital tail."""

@@ -41,11 +41,12 @@ CAP_REPLICA_VMAP = "supports_replica_vmap"  # [R, C, L] in one dispatch
 CAP_COALESCED = "coalesced_weights"         # weighted digital tail
 CAP_TPU_ONLY = "tpu_only"                   # no interpret-mode fallback
 CAP_PACKED_IO = "packed_io"                 # uint32 bitplane literal wire
+CAP_SHARDED = "sharded_dispatch"            # safe under NamedSharding
 
 KNOWN_CAPABILITIES = frozenset({
     CAP_DIGITAL, CAP_ANALOG, CAP_FUSED_KERNEL, CAP_MODELS_C2C,
     CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP, CAP_COALESCED, CAP_TPU_ONLY,
-    CAP_PACKED_IO,
+    CAP_PACKED_IO, CAP_SHARDED,
 })
 
 
@@ -130,9 +131,17 @@ def required_capabilities(state, key=None) -> FrozenSet[str]:
     * a noisy read (``key`` given) against a ``VariationConfig`` with
       ``csa_offset`` on needs a backend that models the per-column CSA
       offset — the fused kernel thresholds against one scalar reference
-      and therefore does NOT.
+      and therefore does NOT;
+    * a state *partitioned* across devices (``state.shard(mesh)``) needs
+      a backend whose dispatch is safe under ``NamedSharding`` — the
+      Pallas kernels are single-device custom calls and do not declare
+      it, so sharded states fall back (loudly) to the GSPMD-partitioned
+      jnp paths.
     """
+    from repro.distributed.sharding import tree_is_sharded
     need = set()
+    if tree_is_sharded(state):
+        need.add(CAP_SHARDED)
     if isinstance(state, ReplicaStackState):
         need.add(CAP_REPLICA_VMAP)
     if isinstance(state, (CrossbarState, ReplicaStackState)):

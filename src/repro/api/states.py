@@ -74,7 +74,17 @@ class _PackedMixin:
 def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
     """Register a frozen dataclass as a pytree: ``data_fields`` become
     children (arrays; ``None`` children flatten away cleanly), and
-    ``meta_fields`` become hashable aux_data."""
+    ``meta_fields`` become hashable aux_data.
+
+    Registration is *with keys* (``GetAttrKey`` per field) so path-based
+    consumers — ``distributed.sharding.tree_shardings`` maps the
+    ``r_stack`` leaf onto the ``replica`` mesh axis by name — see field
+    names instead of flatten indices."""
+
+    def flatten_with_keys(obj):
+        return (tuple((jax.tree_util.GetAttrKey(f), getattr(obj, f))
+                      for f in data_fields),
+                tuple(getattr(obj, f) for f in meta_fields))
 
     def flatten(obj):
         return (tuple(getattr(obj, f) for f in data_fields),
@@ -84,7 +94,8 @@ def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
         return cls(**dict(zip(data_fields, children)),
                    **dict(zip(meta_fields, meta)))
 
-    jax.tree_util.register_pytree_node(cls, flatten, unflatten)
+    jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys,
+                                            unflatten, flatten)
     return cls
 
 
@@ -198,6 +209,23 @@ class ReplicaStackState(_PackedMixin):
         """Single-chip view ``[1, C, L]`` — shape is replica-independent,
         so routed dispatch reuses one compiled kernel for every chip."""
         return dataclasses.replace(self, r_stack=self.r_stack[i:i + 1])
+
+    @property
+    def is_sharded(self) -> bool:
+        """True when the stack is partitioned across >1 device (which
+        adds ``CAP_SHARDED`` to the required capability set)."""
+        from repro.distributed.sharding import tree_is_sharded
+        return tree_is_sharded(self)
+
+    def shard(self, mesh, rules=None) -> "ReplicaStackState":
+        """This state placed onto ``mesh``: ``r_stack`` split over the
+        ``replica`` logical axis (one shard of chips per device), the
+        shared include planes replicated.  ``rules`` defaults to
+        ``distributed.sharding.replica_rules(mesh)``.  Programming is
+        unchanged — the same per-seed D2D draws land in each shard — so
+        sharded serving stays bit-reproducible."""
+        from repro.distributed.sharding import shard_tree
+        return shard_tree(self, mesh, rules)
 
     def replica(self, i: int) -> CrossbarState:
         """Chip ``i`` as a standalone ``CrossbarState``."""

@@ -1,4 +1,4 @@
 """Architecture config registry — importing this package registers all
 assigned architectures plus the paper's own TM configs."""
-from repro.configs.base import get_config, list_archs, smoke  # noqa: F401
 from repro.configs import archs  # noqa: F401  (registration side-effect)
+from repro.configs.base import get_config, list_archs, smoke  # noqa: F401

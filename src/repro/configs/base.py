@@ -11,8 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict
 
-from repro.models.config import (LayerSpec, MLAConfig, ModelConfig,
-                                 MoEConfig, SSMConfig)
+from repro.models.config import MLAConfig, ModelConfig
 
 _REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
 

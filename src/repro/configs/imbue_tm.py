@@ -8,7 +8,6 @@ inference step through the same machinery as the LM archs.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
 from repro.core.tm import TMConfig

@@ -22,7 +22,6 @@ Shardings for the dry-run come from ``tm_shardings``.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import tm_train
 from repro.core.tm import TMConfig, literals
-from repro.kernels import ref as kref
 from repro.kernels.ops import polarity_matrix
 
 
@@ -120,7 +118,6 @@ def pad_clauses_for_mesh(cfg: TMConfig, mesh: Mesh) -> TMConfig:
     clauses output 0: EXACT original semantics); for training it is a
     marginally larger TM (e.g. 5120 vs 5000 clauses)."""
     import dataclasses
-    import math
     if "model" not in mesh.shape:
         return cfg
     m = mesh.shape["model"]

@@ -18,8 +18,6 @@ import queue
 import threading
 from typing import Dict, Iterator, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig

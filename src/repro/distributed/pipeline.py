@@ -14,7 +14,6 @@ trainer uses.  Tested against sequential execution on 8 CPU devices.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -39,6 +39,7 @@ class ShardingRules:
     mlp: Optional[str] = "model"        # ffn hidden axis
     fsdp: Optional[str] = "data"        # parameter fsdp axis
     tensor: Optional[str] = "model"     # parameter TP axis
+    replica: Optional[str] = None       # serve-pool [R, ...] leading dim
 
     def resolve(self, logical: Optional[str]):
         if logical is None:
@@ -86,6 +87,10 @@ def constrain(x: jax.Array, *logical_axes) -> jax.Array:
 # spec for the *unstacked* param; _with_stack prepends None for each extra
 # leading dim.
 _PARAM_RULES = [
+    # serve replica pools: programmed chips split over the replica axis,
+    # shared TA actions (include planes) replicated (matched before the
+    # generic rules — the leading [R] dim is the only sharded one)
+    (r"r_stack$",          lambda r: P(r.replica, None, None)),
     # embeddings / head
     (r"embed$",            lambda r: P(r.tensor, r.fsdp)),
     (r"unembed$",          lambda r: P(r.fsdp, r.tensor)),
@@ -243,6 +248,49 @@ def cache_shardings(tree, mesh: Mesh, rules: ShardingRules,
         lambda leaf: NamedSharding(
             mesh, cache_pspec(leaf.shape, mesh, rules, batch_size,
                               seq_len)), tree)
+
+
+def replica_rules(mesh: Mesh) -> ShardingRules:
+    """Serving rules for a replica-pool mesh (``launch.mesh.
+    make_replica_mesh``): the programmed ``[R, ...]`` stack splits over
+    the ``replica`` axis; the request batch optionally splits over
+    ``batch`` for data-parallel reads.  Every model-parallel axis is off
+    — replica reads are embarrassingly parallel, there is nothing to
+    all-reduce."""
+    return ShardingRules(
+        batch="batch" if "batch" in mesh.shape else None,
+        seq=None, embed=None, heads=None, kv_seq=None, expert=None,
+        vocab=None, mlp=None, fsdp=None, tensor=None,
+        replica="replica" if "replica" in mesh.shape else None)
+
+
+def shard_tree(tree, mesh: Mesh, rules: Optional[ShardingRules] = None):
+    """Place a (registered, keyed) pytree onto ``mesh`` per ``rules``
+    (default :func:`replica_rules`) — THE single placement recipe
+    behind ``ReplicaPool.shard`` / ``ReplicaStackState.shard`` and the
+    serve engine's mesh path."""
+    rules = rules if rules is not None else replica_rules(mesh)
+    return jax.device_put(tree, tree_shardings(tree, mesh, rules))
+
+
+def tree_is_sharded(tree) -> bool:
+    """True if any leaf is *partitioned* across more than one device.
+
+    Fully-replicated multi-device placements and single-device arrays
+    return False: partitioning is what changes how a computation must be
+    compiled (backends declare ``CAP_SHARDED`` when their dispatch is
+    safe under ``NamedSharding``; see ``repro.api.registry``)."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is None:
+            continue
+        try:
+            if (len(sharding.device_set) > 1
+                    and not sharding.is_fully_replicated):
+                return True
+        except (AttributeError, TypeError):
+            continue
+    return False
 
 
 def validate_divisibility(tree, mesh: Mesh, rules: ShardingRules) -> list:

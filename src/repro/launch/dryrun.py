@@ -30,7 +30,6 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs import get_config  # noqa: E402
 from repro.distributed import sharding as shd  # noqa: E402
 from repro.launch import shapes as shp  # noqa: E402
 from repro.launch.mesh import make_production_mesh, rules_for  # noqa: E402

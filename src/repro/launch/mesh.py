@@ -33,6 +33,40 @@ def make_pipeline_mesh(stages: int = 4) -> Mesh:
     return jax.make_mesh((stages,), ("pipe",))
 
 
+def make_replica_mesh(n_replica: int, n_batch: int = 1) -> Mesh:
+    """Serving mesh for sharded replica pools: ``("replica", "batch")``.
+
+    The ``replica`` axis splits a pool's programmed ``[R, C, L]`` stack
+    (one shard of chips per device); the optional ``batch`` axis splits
+    request rows for data-parallel reads.  Consumed by
+    ``ReplicaPool.shard`` via ``distributed.sharding.replica_rules``."""
+    return jax.make_mesh((n_replica, n_batch), ("replica", "batch"))
+
+
+def parse_mesh_spec(spec: str) -> Mesh:
+    """``"8"`` or ``"2x4"`` -> a replica[xbatch] serving mesh.
+
+    The product must not exceed ``jax.device_count()`` (force host
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before jax initializes, or ``--host-devices`` on the CLIs)."""
+    parts = spec.lower().split("x")
+    if not 1 <= len(parts) <= 2:
+        raise ValueError(f"bad mesh spec {spec!r}; want 'R' or 'RxB'")
+    try:
+        dims = [int(p) for p in parts]
+    except ValueError:
+        raise ValueError(f"bad mesh spec {spec!r}; want 'R' or 'RxB'")
+    n_replica, n_batch = dims[0], dims[1] if len(dims) == 2 else 1
+    if n_replica < 1 or n_batch < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    if n_replica * n_batch > jax.device_count():
+        raise ValueError(
+            f"mesh {spec!r} needs {n_replica * n_batch} devices but only "
+            f"{jax.device_count()} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N before jax init")
+    return make_replica_mesh(n_replica, n_batch)
+
+
 def batch_axes(mesh: Mesh):
     return tuple(a for a in ("pod", "data") if a in mesh.shape)
 

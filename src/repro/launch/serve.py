@@ -8,12 +8,19 @@ alongside the crossbar's hardware figures of merit.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 256 --replicas 4
   PYTHONPATH=src python -m repro.launch.serve --routing ensemble
+  PYTHONPATH=src python -m repro.launch.serve --host-devices 8 \\
+      --mesh 2x4 --replicas 8 --async-serve   # sharded + overlapped
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import sys
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices(sys.argv[1:])   # must precede the first jax import
 
 import jax
 import numpy as np
@@ -22,7 +29,9 @@ from repro.core import tm, tm_train
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
 from repro.data.tm_datasets import synthetic_image_dataset
-from repro.serve import BatcherConfig, EngineConfig, ServeEngine
+from repro.launch.mesh import parse_mesh_spec
+from repro.serve import (AsyncServeEngine, BatcherConfig, EngineConfig,
+                         ServeEngine)
 
 
 def build_engine(args, cfg: TMConfig, ta: jax.Array) -> ServeEngine:
@@ -33,10 +42,13 @@ def build_engine(args, cfg: TMConfig, ta: jax.Array) -> ServeEngine:
             args.batch, max_wait_s=args.max_wait_ms * 1e-3),
         routing=args.routing,
         backend=args.backend,
-        packed=args.packed)
-    return ServeEngine.from_ta_state(
+        packed=args.packed,
+        max_in_flight=args.max_in_flight)
+    mesh = parse_mesh_spec(args.mesh) if args.mesh else None
+    cls = AsyncServeEngine if args.async_serve else ServeEngine
+    return cls.from_ta_state(
         ta, cfg, n_replicas=args.replicas, key=jax.random.PRNGKey(3),
-        vcfg=vcfg, ecfg=ecfg)
+        vcfg=vcfg, ecfg=ecfg, mesh=mesh)
 
 
 def main(argv=None):
@@ -56,6 +68,20 @@ def main(argv=None):
                     default=True,
                     help="uint32 packed literal wire format (default on; "
                          "--no-packed forces the dense uint8 datapath)")
+    ap.add_argument("--mesh", default=None, metavar="RxB",
+                    help="shard the replica pool over a device mesh, "
+                         "e.g. '8' or '2x4' (replica x batch axes); the "
+                         "[R, C, L] stack splits over 'replica' and one "
+                         "fused ensemble dispatch spans every device")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N host (CPU) devices before jax init "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count); lets --mesh run on a laptop/CI box")
+    ap.add_argument("--async-serve", action="store_true",
+                    help="AsyncServeEngine: double-buffer dispatches so "
+                         "host batching overlaps device compute")
+    ap.add_argument("--max-in-flight", type=int, default=2,
+                    help="async depth: un-collected dispatches allowed")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--nominal", action="store_true",
@@ -87,6 +113,10 @@ def main(argv=None):
     print(f"[serve] pool of {args.replicas} crossbars programmed, "
           f"routing={args.routing}, backend={engine.backend.name}, "
           f"packed_io={engine.packed_io}")
+    if engine.mesh is not None:
+        print(f"[serve] pool sharded over mesh {dict(engine.mesh.shape)} "
+              f"({jax.device_count()} devices visible); "
+              f"async={'on' if args.async_serve else 'off'}")
     print(f"[serve] buckets {list(bcfg.bucket_sizes)} "
           f"({'tuned for ' + bcfg.tuned_for if bcfg.tuned_for else 'static'}"
           f"), kernel tiles "
@@ -123,6 +153,10 @@ def main(argv=None):
           f"{summary['p95_ms']:.1f}/{summary['p99_ms']:.1f} ms; "
           f"{summary['throughput_rps']:.0f} inf/s (CPU interp); "
           f"replica rows {summary['replica_load_rows']}")
+    print(f"[serve] overlap: {100 * summary['overlap_fraction']:.0f}% of "
+          f"device time hidden behind host work "
+          f"(pack {summary['host_pack_s'] * 1e3:.1f} ms, blocked wait "
+          f"{summary['device_wait_s'] * 1e3:.1f} ms)")
     print(f"[serve] crossbar figures: {hw['latency_ns']:.0f} ns/datapoint, "
           f"{hw['energy_nj_per_dp']:.3f} nJ/datapoint, "
           f"{hw['top_j_inv']:.0f} TopJ^-1, pool "

@@ -12,7 +12,7 @@ tm_infer) so it runs through the same dry-run machinery.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

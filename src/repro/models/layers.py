@@ -9,7 +9,6 @@ partition rules key on them (w_up / w_down / w_q / experts_* / embed ...).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 import jax

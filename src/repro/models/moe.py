@@ -26,9 +26,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig
-from repro.models.layers import dtype_of, fan_in_init, init_mlp, apply_mlp
 from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_mlp, dtype_of, fan_in_init, init_mlp
 
 
 def expert_capacity(cfg: ModelConfig, seq_len: int) -> int:

@@ -18,7 +18,6 @@ Decode steps are O(1)-state recurrences; caches are dicts of arrays.
 
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,9 +19,6 @@ VLM stub, ``audio_frames`` for the audio stub; see models/frontends.py).
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

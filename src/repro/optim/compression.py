@@ -20,7 +20,6 @@ tests/test_distributed.py::test_compressed_psum_bytes).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

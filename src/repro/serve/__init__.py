@@ -15,8 +15,9 @@ Layers (see each module's docstring):
 """
 
 from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
-from repro.serve.engine import (DEFAULT_BACKEND, ENSEMBLE, EngineConfig,
-                                Response, ServeEngine)
+from repro.serve.engine import (DEFAULT_BACKEND, DEFAULT_SHARDED_BACKEND,
+                                ENSEMBLE, AsyncServeEngine, EngineConfig,
+                                InFlight, Response, ServeEngine)
 from repro.serve.metrics import (RequestRecord, ServeMetrics,
                                  hardware_figures)
 from repro.serve.replica import (ReplicaPool, RouterState, ensemble_vote,
@@ -24,7 +25,8 @@ from repro.serve.replica import (ReplicaPool, RouterState, ensemble_vote,
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher", "Request",
-    "DEFAULT_BACKEND", "ENSEMBLE", "EngineConfig", "Response",
+    "DEFAULT_BACKEND", "DEFAULT_SHARDED_BACKEND", "ENSEMBLE",
+    "AsyncServeEngine", "EngineConfig", "InFlight", "Response",
     "ServeEngine",
     "RequestRecord", "ServeMetrics", "hardware_figures",
     "ReplicaPool", "RouterState", "ensemble_vote", "program_replica_pool",

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import bisect
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, List, Optional, Sequence, Tuple
 
@@ -131,6 +132,9 @@ class Batch:
     x: np.ndarray                       # [bucket, F] uint8 | [bucket, Lw] u32
     bucket: int
     packed: bool = False
+    # Host time spent assembling this batch's operand (stack + pad) —
+    # the per-dispatch "host pack" half of the overlap accounting.
+    pack_s: float = 0.0
 
     @property
     def n_valid(self) -> int:
@@ -188,6 +192,7 @@ class DynamicBatcher:
         return self.pad(reqs)
 
     def pad(self, reqs: Sequence[Request]) -> Batch:
+        t0 = time.perf_counter()
         bucket = self.cfg.bucket_for(len(reqs))
         x = np.stack([r.x for r in reqs])
         if bucket > len(reqs):
@@ -197,4 +202,5 @@ class DynamicBatcher:
             fill = np.zeros((bucket - len(reqs), x.shape[1]), dtype=x.dtype)
             x = np.concatenate([x, fill], axis=0)
         return Batch(requests=list(reqs), x=np.ascontiguousarray(x),
-                     bucket=bucket, packed=self.packed)
+                     bucket=bucket, packed=self.packed,
+                     pack_s=time.perf_counter() - t0)

@@ -26,6 +26,27 @@ loop (the CLI in ``launch/serve.py``), a benchmark harness, or tests.
 An injectable ``clock`` makes deadline behaviour fully deterministic
 under test.  Every analog read draws its noise from one engine-owned
 PRNG key, so a fixed seed gives bit-reproducible serving traces.
+
+ISSUE 4 makes the engine device-parallel and latency-hiding:
+
+* **sharded pools** — pass ``mesh=`` (see ``launch.mesh.
+  make_replica_mesh`` / ``--mesh`` on the CLI) and the pool is placed
+  with ``pool.shard(mesh, rules)``: the programmed ``[R, C, L]`` stack
+  splits over the ``replica`` mesh axis, so one fused ensemble dispatch
+  spans every device instead of one.  Capability selection extends to
+  ``CAP_SHARDED``: a partitioned state only matches backends declared
+  safe under ``NamedSharding`` (the GSPMD jnp paths) and any other
+  preference falls back LOUDLY, exactly like ``csa_offset``.
+* **overlapped host batching** — :class:`AsyncServeEngine` double-
+  buffers dispatches: a batch's jit'd call is *issued* without blocking
+  (JAX dispatch is async; results are device futures) and only
+  *collected* — ``jax.block_until_ready`` — once ``max_in_flight``
+  later batches have been issued or at drain.  Host-side
+  packing/bucketing of batch N+1 therefore proceeds while batch N is in
+  flight; ``ServeMetrics`` reports the per-dispatch host-pack vs
+  blocked-device-wait split and the resulting ``overlap_fraction``.
+  The synchronous ``ServeEngine`` collects immediately (single-device
+  behavior is unchanged by default).
 """
 
 from __future__ import annotations
@@ -33,7 +54,8 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -56,9 +78,14 @@ ENSEMBLE = -1      # Response.replica value when every chip voted
 # single-dispatch replica vmap — packed literal wire when the pool state
 # is packed (EngineConfig.packed, the default), unpacked otherwise.
 # Capability selection overrides either when the pool's noise model
-# needs physics the kernel doesn't implement.
+# needs physics the kernel doesn't implement.  Sharded (mesh) pools
+# default straight to the GSPMD-partitioned jnp path: the Pallas
+# kernels are single-device custom calls and do not declare
+# CAP_SHARDED, so preferring them would only produce a (correct, loud)
+# fallback warning on every construction.
 DEFAULT_BACKEND = "analog-pallas"
 DEFAULT_PACKED_BACKEND = "analog-pallas-packed"
+DEFAULT_SHARDED_BACKEND = "analog-jnp"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +112,10 @@ class EngineConfig:
     # to backend="analog-pallas", False to "analog-jnp".
     use_kernel: Optional[bool] = None
     interpret: Optional[bool] = None  # None -> interpret off-TPU
+    # AsyncServeEngine only: how many dispatched batches may be in
+    # flight (un-collected device futures) at once.  2 = classic double
+    # buffering — pack batch N+1 while batch N computes.
+    max_in_flight: int = 2
 
     def backend_preference(self) -> Optional[str]:
         """The explicit preference, or None for the packed-aware default."""
@@ -112,6 +143,26 @@ class Response:
     latency_s: float
 
 
+@dataclasses.dataclass
+class InFlight:
+    """One issued-but-not-collected dispatch: the device futures of a
+    batch's fused forward call plus the timestamps the overlap
+    accounting needs.  ``sums``/``preds`` are lazy jax arrays until
+    :meth:`ServeEngine._collect` blocks on them."""
+
+    batch: Batch
+    sums: jax.Array                  # [bucket, M] device future
+    preds: jax.Array                 # [bucket] device future
+    replica: int                     # serving chip, or ENSEMBLE
+    t_dispatch: float                # clock at dispatch start
+    t_issue: float                   # clock right after the jit call
+    # Engine-cumulative blocked-wait seconds at issue time: lets the
+    # collect side subtract OTHER batches' block_until_ready stalls
+    # from this batch's in-flight window, so overlap_fraction only
+    # counts time the host spent doing productive work.
+    blocked_snapshot: float = 0.0
+
+
 class ServeEngine:
     """Dynamic-batching inference engine over a crossbar replica pool."""
 
@@ -123,7 +174,19 @@ class ServeEngine:
         *,
         key: jax.Array | None = None,
         clock: Callable[[], float] = time.monotonic,
+        mesh=None,
+        rules=None,
     ):
+        # Device-parallel pools: shard the [R, C, L] stack over the
+        # mesh's replica axis BEFORE anything reads it; the shared
+        # include planes replicate.  Routing/ensemble semantics and the
+        # per-seed noise stream are placement-independent.
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed.sharding import replica_rules
+            rules = rules if rules is not None else replica_rules(mesh)
+            pool = pool.shard(mesh, rules)
+        self.rules = rules
         self.pool = pool
         self.tm_cfg = tm_cfg
         self.ecfg = ecfg
@@ -141,7 +204,8 @@ class ServeEngine:
         # dispatch in ServeMetrics.
         sel_key = None if self._noise_free else self._key
         prefer = ecfg.backend_preference() or (
-            DEFAULT_PACKED_BACKEND if self.state.packed
+            DEFAULT_SHARDED_BACKEND if self.state.is_sharded
+            else DEFAULT_PACKED_BACKEND if self.state.packed
             else DEFAULT_BACKEND)
         self.selection: api.Selection = api.select_backend(
             self.state, key=sel_key, prefer=prefer)
@@ -173,6 +237,7 @@ class ServeEngine:
         self._next_rid = 0
         self._submitted: List[int] = []
         self._results: Dict[int, Response] = {}
+        self._blocked_s = 0.0           # cumulative block_until_ready time
 
     def _build_forward(self):
         """One jit'd callable per engine: backend forward + prediction.
@@ -218,13 +283,20 @@ class ServeEngine:
         icfg: IMBUEConfig = IMBUEConfig(),
         ecfg: EngineConfig = EngineConfig(),
         clock: Callable[[], float] = time.monotonic,
+        mesh=None,
+        rules=None,
     ) -> "ServeEngine":
-        """Program a fresh pool from trained TA state and wrap an engine."""
+        """Program a fresh pool from trained TA state and wrap an engine.
+
+        Programming happens BEFORE placement, so a ``mesh``-sharded
+        engine serves bit-identical responses to the single-device
+        engine at the same seed."""
         key = key if key is not None else jax.random.PRNGKey(0)
         k_prog, k_serve = jax.random.split(key)
         pool = program_replica_pool(tm.include_mask(ta_state, tm_cfg),
                                     k_prog, n_replicas, vcfg, icfg)
-        return cls(pool, tm_cfg, ecfg, key=k_serve, clock=clock)
+        return cls(pool, tm_cfg, ecfg, key=k_serve, clock=clock,
+                   mesh=mesh, rules=rules)
 
     # --------------------------------------------------------------- intake
 
@@ -254,11 +326,19 @@ class ServeEngine:
     def drain(self) -> List[Response]:
         """Force-serve everything queued; responses in submission order."""
         self.pump(force=True)
+        self._collect_pending()
         return [self._results[rid] for rid in self._submitted
                 if rid in self._results]
 
     def result(self, rid: int) -> Optional[Response]:
+        if rid not in self._results:
+            self._collect_pending()
         return self._results.get(rid)
+
+    def _collect_pending(self) -> None:
+        """Collect any outstanding dispatches (no-op: the synchronous
+        engine collects inside ``_dispatch``; AsyncServeEngine
+        overrides)."""
 
     # ------------------------------------------------------------ dispatch
 
@@ -270,13 +350,38 @@ class ServeEngine:
         self._key, k = jax.random.split(self._key)
         return k
 
+    def _shard_lits(self, lits: jax.Array) -> jax.Array:
+        """Place the batch operand onto the engine mesh: rows split over
+        the ``batch`` logical axis when it divides (data-parallel
+        reads), replicated otherwise.  No-op off-mesh."""
+        if self.mesh is None or self.rules is None:
+            return lits
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        ax = self.rules.batch
+        axes = (ax,) if isinstance(ax, str) else tuple(ax or ())
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape[a]
+        spec = (P(self.rules.batch, *([None] * (lits.ndim - 1)))
+                if axes and lits.shape[0] % size == 0 else P())
+        return jax.device_put(lits, NamedSharding(self.mesh, spec))
+
     def _dispatch(self, batch: Batch) -> None:
+        """Synchronous dispatch: issue the fused call and collect it
+        immediately (all device time shows up as blocked wait)."""
+        self._collect(self._issue(batch))
+
+    def _issue(self, batch: Batch) -> InFlight:
+        """Issue one batch's fused jit'd forward WITHOUT blocking on the
+        result: JAX dispatch is asynchronous, so the returned
+        :class:`InFlight` holds device futures."""
         t_dispatch = self.clock()
         # Packed batches already ARE the literal wire format (packed at
         # submit); dense batches expand to literals on device.
         lits = jnp.asarray(batch.x)
         if not batch.packed:
             lits = tm.literals(lits)
+        lits = self._shard_lits(lits)
         key = self._read_key()
         if self.selection.fell_back:
             self.metrics.note_forward_fallback(
@@ -291,25 +396,49 @@ class ServeEngine:
             sums, preds = self._fwd(self._slices[replica], lits, key,
                                     bt=batch.bucket)
             self.router.note_dispatch(replica, batch.bucket)
-        preds = np.asarray(preds)
-        sums = np.asarray(sums)
+        return InFlight(batch=batch, sums=sums, preds=preds,
+                        replica=replica, t_dispatch=t_dispatch,
+                        t_issue=self.clock(),
+                        blocked_snapshot=self._blocked_s)
+
+    def _collect(self, fl: InFlight) -> None:
+        """Block on one in-flight dispatch and materialize Responses.
+
+        Overlap accounting: of the window ``t_issue -> collection
+        start``, only the part where the host was doing productive work
+        counts as hidden device time — stalls spent inside OTHER
+        batches' ``block_until_ready`` (tracked via ``_blocked_s``
+        snapshots) are subtracted, so a deep pipeline cannot claim its
+        neighbours' blocked waits as overlap.  The remainder of this
+        batch's device time shows up as its own blocked wait."""
+        t_wait0 = self.clock()
+        jax.block_until_ready((fl.sums, fl.preds))
         t_done = self.clock()
+        blocked_elsewhere = self._blocked_s - fl.blocked_snapshot
+        overlapped = max(0.0, (t_wait0 - fl.t_issue) - blocked_elsewhere)
+        self._blocked_s += t_done - t_wait0
+        preds = np.asarray(fl.preds)
+        sums = np.asarray(fl.sums)
+        batch = fl.batch
 
         records = []
         for row, req in enumerate(batch.requests):
             self._results[req.rid] = Response(
                 rid=req.rid, pred=int(preds[row]),
-                class_sums=sums[row], replica=replica,
+                class_sums=sums[row], replica=fl.replica,
                 latency_s=t_done - req.t_enqueue)
             records.append(RequestRecord(
                 rid=req.rid, t_enqueue=req.t_enqueue,
-                t_dispatch=t_dispatch, t_done=t_done,
+                t_dispatch=fl.t_dispatch, t_done=t_done,
                 bucket=batch.bucket, n_valid=batch.n_valid,
-                replica=replica))
+                replica=fl.replica))
         # Pad rows (batch.n_padding of them) are dropped here by
         # construction: only batch.requests rows produce Responses.
         assert len(records) == batch.n_valid
         self.metrics.record_batch(records, batch.bucket, batch.nbytes)
+        self.metrics.note_dispatch_timing(
+            pack_s=batch.pack_s, wait_s=t_done - t_wait0,
+            overlapped_s=overlapped)
 
     # ------------------------------------------------------------- metrics
 
@@ -322,6 +451,9 @@ class ServeEngine:
         out["backend"] = self.backend.name
         out["backend_preferred"] = self.selection.preferred
         out["packed_io"] = self.packed_io
+        out["sharded"] = self.state.is_sharded
+        out["mesh"] = (dict(self.mesh.shape) if self.mesh is not None
+                       else None)
         out["bucket_sizes"] = list(self.batcher.cfg.bucket_sizes)
         out["buckets_tuned_for"] = self.batcher.cfg.tuned_for
         out["kernel_tiles"] = dict((self.tuning or {}).get("tiles") or {})
@@ -331,3 +463,60 @@ class ServeEngine:
             self.tm_cfg, includes, self.pool.n_replicas,
             ensemble=self.ecfg.routing == "ensemble")
         return out
+
+
+class AsyncServeEngine(ServeEngine):
+    """Double-buffered serving: overlap host batching with device compute.
+
+    Same construction surface, routing semantics, and per-seed noise
+    stream as :class:`ServeEngine` — only the dispatch schedule changes.
+    ``_dispatch`` *issues* the fused jit'd call (device futures; no
+    host block) and defers collection until ``ecfg.max_in_flight``
+    newer dispatches are outstanding, a result is requested, or the
+    engine drains.  With the default depth of 2, the host packs and
+    issues batch N+1 while batch N's kernel is in flight — the classic
+    pipeline that makes serving throughput track device time instead of
+    host+device time.  Responses still come back in submission order
+    from :meth:`drain`, and ``summary()['overlap_fraction']`` reports
+    how much device time the pipelining actually hid."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        if self.ecfg.max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        self._pending: Deque[InFlight] = deque()
+
+    @property
+    def in_flight(self) -> int:
+        """Issued-but-uncollected dispatches right now."""
+        return len(self._pending)
+
+    def _dispatch(self, batch: Batch) -> None:
+        while len(self._pending) >= self.ecfg.max_in_flight:
+            self._collect(self._pending.popleft())
+        self._pending.append(self._issue(batch))
+
+    def pump(self, force: bool = False) -> int:
+        served = super().pump(force)
+        # Opportunistically collect dispatches whose device work already
+        # finished: results land as early as the event loop allows, and
+        # host *idle* time between request arrivals is not misattributed
+        # as overlap (the in-flight window closes at the first pump
+        # after completion, not whenever the next batch forces a
+        # collect).  The overlap accounting therefore remains a
+        # host-side observation — exact under continuous load, an
+        # approximation when the engine sits idle between pumps.
+        while self._pending and self._is_ready(self._pending[0]):
+            self._collect(self._pending.popleft())
+        return served
+
+    @staticmethod
+    def _is_ready(fl: InFlight) -> bool:
+        try:
+            return bool(fl.preds.is_ready() and fl.sums.is_ready())
+        except AttributeError:      # non-jax arrays (test doubles)
+            return True
+
+    def _collect_pending(self) -> None:
+        while self._pending:
+            self._collect(self._pending.popleft())

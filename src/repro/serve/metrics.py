@@ -69,12 +69,35 @@ class ServeMetrics:
         # so noise semantics differ from the preference.  Loud on purpose.
         self.forward_fallbacks: List[str] = []
         self.fallback_dispatches = 0
+        # Overlap accounting (async serving): per dispatch, how long the
+        # host spent packing/bucketing the batch, how long it *blocked*
+        # on the device at collection, and how much of the in-flight
+        # window was hidden behind other host work.  A synchronous
+        # engine collects immediately, so its overlapped_s stays ~0.
+        self.host_pack_s = 0.0
+        self.device_wait_s = 0.0
+        self.overlapped_s = 0.0
 
     def note_forward_fallback(self, reason: str) -> None:
         """Record one dispatch served by a fallback backend."""
         self.fallback_dispatches += 1
         if reason not in self.forward_fallbacks:
             self.forward_fallbacks.append(reason)
+
+    def note_dispatch_timing(self, pack_s: float, wait_s: float,
+                             overlapped_s: float) -> None:
+        """Account one dispatch's host-pack time, blocked device wait,
+        and the in-flight span that host work overlapped."""
+        self.host_pack_s += max(0.0, pack_s)
+        self.device_wait_s += max(0.0, wait_s)
+        self.overlapped_s += max(0.0, overlapped_s)
+
+    def overlap_fraction(self) -> float:
+        """Fraction of total in-flight device time hidden behind host
+        work: ``overlapped / (overlapped + blocked wait)``.  ~0 for the
+        synchronous engine, -> 1 when batching fully hides compute."""
+        busy = self.overlapped_s + self.device_wait_s
+        return self.overlapped_s / busy if busy > 0 else 0.0
 
     def record_batch(self, records: List[RequestRecord], bucket: int,
                      nbytes: int = 0) -> None:
@@ -120,7 +143,10 @@ class ServeMetrics:
                "bytes_per_dispatch": (self.bytes_moved / self.batches
                                       if self.batches else 0.0),
                "forward_fallbacks": list(self.forward_fallbacks),
-               "fallback_dispatches": self.fallback_dispatches}
+               "fallback_dispatches": self.fallback_dispatches,
+               "host_pack_s": self.host_pack_s,
+               "device_wait_s": self.device_wait_s,
+               "overlap_fraction": self.overlap_fraction()}
         out.update(self.latency_ms())
         return out
 

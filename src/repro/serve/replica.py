@@ -82,7 +82,6 @@ class RouterState:
         self.batches_dispatched[i] += 1
 
 
-@jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class ReplicaPool:
     """R programmed crossbars sharing one set of TA actions (device state
@@ -96,6 +95,11 @@ class ReplicaPool:
     def tree_flatten(self):
         return (self.r_stack, self.include), (self.icfg, self.vcfg)
 
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("r_stack"), self.r_stack),
+                 (jax.tree_util.GetAttrKey("include"), self.include)),
+                (self.icfg, self.vcfg))
+
     @classmethod
     def tree_unflatten(cls, aux, children):
         r_stack, include = children
@@ -108,9 +112,28 @@ class ReplicaPool:
 
     @property
     def mapping(self) -> CrossbarMapping:
-        c, l = self.include.shape
-        return CrossbarMapping(n_clauses=c, n_literals=l,
+        n_c, n_l = self.include.shape
+        return CrossbarMapping(n_clauses=n_c, n_literals=n_l,
                                width=self.icfg.width)
+
+    @property
+    def is_sharded(self) -> bool:
+        """True when the programmed stack is partitioned across devices."""
+        from repro.distributed.sharding import tree_is_sharded
+        return tree_is_sharded(self)
+
+    def shard(self, mesh, rules=None) -> "ReplicaPool":
+        """This pool placed onto ``mesh``: the ``[R, C, L]`` stack splits
+        over the ``replica`` logical axis (``distributed.sharding``
+        ``tree_shardings`` + the ``r_stack`` rule), the shared include
+        plane is replicated on every device.  One fused ensemble
+        dispatch then spans all devices of the mesh.
+
+        ``rules`` defaults to ``replica_rules(mesh)``.  Routing and
+        ensemble semantics are unchanged — programming happened before
+        placement, so per-seed bit-reproducibility is preserved."""
+        from repro.distributed.sharding import shard_tree
+        return shard_tree(self, mesh, rules)
 
     def state(self, tm_cfg: TMConfig) -> ReplicaStackState:
         """The pool as a unified-backend ``ReplicaStackState``."""
@@ -127,6 +150,11 @@ class ReplicaPool:
         return ProgrammedCrossbar(r_mem=self.r_stack[i],
                                   include=self.include,
                                   mapping=self.mapping, cfg=self.icfg)
+
+
+jax.tree_util.register_pytree_with_keys(
+    ReplicaPool, ReplicaPool.tree_flatten_with_keys,
+    ReplicaPool.tree_unflatten, ReplicaPool.tree_flatten)
 
 
 def program_replica_pool(

@@ -15,7 +15,7 @@ feedback before the (implicit) data-axis reduction — see
 
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

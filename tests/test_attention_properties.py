@@ -1,15 +1,12 @@
 """Attention-layer invariants (head padding, GQA grouping, RoPE)."""
 
-import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs import get_config, smoke
 from repro.models import attention as attn
-from repro.models.config import ModelConfig, LayerSpec
+from repro.models.config import LayerSpec, ModelConfig
 
 
 def _cfg(h=4, kv=2, d=32, pad=0, **kw):

@@ -1,7 +1,6 @@
 """Tests for the IMBUE analog crossbar simulation + energy model."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

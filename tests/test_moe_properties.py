@@ -1,6 +1,5 @@
 """MoE dispatch/combine property tests (the §Perf iter-1..4 target)."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -9,9 +8,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.configs import get_config, smoke
 from repro.models import moe as moe_mod
-from repro.models.config import MoEConfig, ModelConfig, LayerSpec
+from repro.models.config import LayerSpec, ModelConfig, MoEConfig
 
 
 def _cfg(e=4, k=2, cf=8.0, d=32, shared=0, dense=False):

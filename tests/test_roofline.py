@@ -4,11 +4,10 @@ here) and parse collectives/dots from partitioned modules."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.roofline.analysis import (HloCost, PEAK_FLOPS,
-                                     parse_computations, xla_cost_dict)
+from repro.roofline.analysis import (HloCost, parse_computations,
+                                     xla_cost_dict)
 
 
 def _scan_fn(x, ws):
