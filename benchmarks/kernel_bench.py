@@ -119,20 +119,26 @@ def main(argv=None):
     mode = "smoke" if args.smoke else "full"
     print(f"[kernel_bench] measured autotune sweep ({mode}) on "
           f"{jax.default_backend()}...")
+    # Full mode measures BOTH committed shapes — the serve-bench
+    # reference and the KWS-6 streaming shape — under their own
+    # (backend, shape bucket) keys; smoke keeps CI to the reference.
     entries = autotune.autotune(smoke=args.smoke, reps=args.reps)
-    for name, e in sorted(entries.items()):
-        print(f"[kernel_bench]   {name}: tiles={e['tiles']} "
+    flat = [(name, skey, e) for name, shapes in sorted(entries.items())
+            for skey, e in sorted(shapes.items())]
+    for name, skey, e in flat:
+        print(f"[kernel_bench]   {name} @ {skey}: tiles={e['tiles']} "
               f"buckets={e['bucket_sizes']} "
               f"(best tile {min(e['tile_latency_us'].values()):.0f} us)")
     if args.smoke:
-        ok = all(e["tiles"] and e["bucket_sizes"] for e in entries.values())
+        ok = all(e["tiles"] and e["bucket_sizes"] for _, _, e in flat)
         print(f"[kernel_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
-              f"{len(entries)} backends tuned (nothing written)")
+              f"{len(flat)} (backend, shape) cells tuned "
+              "(nothing written)")
         if not ok:
             raise SystemExit(1)
         return None
     path = autotune.save_table(entries, args.out)
-    print(f"[kernel_bench] wrote {path}")
+    print(f"[kernel_bench] wrote {path} ({len(flat)} cells)")
     return entries
 
 

@@ -196,17 +196,14 @@ def run_before_unpacked_static(cfg, ta, xs, *, repeats=3):
     """The PR-2 configuration on this host: dense uint8 wire, static
     bucket ladder, default (untuned) kernel tiles — the "before" half of
     the headline before/after pair."""
-    saved = {name: api.get_tuning(name)
-             for name in [b.name for b in api.list_backends()]}
+    saved = api.tuning_snapshot()
     api.clear_tuning()
     try:
         return run_batched(cfg, ta, xs, max_batch=64, n_replicas=4,
                            routing="round_robin", packed=False,
                            static_buckets=True, repeats=repeats)
     finally:
-        for name, entry in saved.items():
-            if entry is not None:
-                api.register_tuning(name, entry)
+        api.restore_tuning(saved)
 
 
 def main(argv=None):
@@ -386,6 +383,7 @@ def main(argv=None):
                   "n_classes": cfg.n_classes},
         "backend": jax.default_backend(),
         "devices": n_dev,
+        "host_cpus": os.cpu_count(),
         "requests": args.requests,
         "repeats": args.repeats,
         "serial_baseline": serial,
@@ -409,8 +407,9 @@ def main(argv=None):
         # single-device baseline never paid); same-run pairs above are
         # the apples-to-apples numbers.
         "previous_committed_note": (
-            "previous baseline may predate --host-devices forcing; "
-            f"this run saw {n_dev} device(s)"),
+            "previous baseline may predate --host-devices forcing or come "
+            f"from a larger host; this run saw {n_dev} device(s) on "
+            f"{os.cpu_count()} CPU core(s)"),
         "bytes_per_dispatch_before": before["bytes_per_dispatch"],
         "bytes_per_dispatch_after": after["bytes_per_dispatch"],
     }

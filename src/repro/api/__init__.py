@@ -37,11 +37,13 @@ from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
                                 CAP_FUSED_KERNEL, CAP_MODELS_C2C,
                                 CAP_MODELS_CSA_OFFSET, CAP_PACKED_IO,
                                 CAP_REPLICA_VMAP, CAP_SHARDED, CAP_TPU_ONLY,
-                                KNOWN_CAPABILITIES, Backend, Selection,
-                                clear_tuning, get_backend, get_tuning,
-                                list_backends, register_backend,
+                                KNOWN_CAPABILITIES, REF_SHAPE_KEY, Backend,
+                                Selection, clear_tuning, get_backend,
+                                get_tuning, list_backends, register_backend,
                                 register_tuning, required_capabilities,
-                                select_backend)
+                                restore_tuning, select_backend,
+                                shape_bucket_key, shape_key_of,
+                                tuning_snapshot)
 from repro.api.states import (STATE_TYPES, CoalescedState, CrossbarState,
                               DigitalState, ReplicaStackState)
 
@@ -49,7 +51,8 @@ __all__ = [
     "class_sums", "predict",
     "Backend", "Selection", "get_backend", "list_backends",
     "register_backend", "required_capabilities", "select_backend",
-    "register_tuning", "get_tuning", "clear_tuning",
+    "register_tuning", "get_tuning", "clear_tuning", "tuning_snapshot",
+    "restore_tuning", "shape_bucket_key", "shape_key_of", "REF_SHAPE_KEY",
     "KNOWN_CAPABILITIES",
     "CAP_ANALOG", "CAP_COALESCED", "CAP_DIGITAL", "CAP_FUSED_KERNEL",
     "CAP_MODELS_C2C", "CAP_MODELS_CSA_OFFSET", "CAP_PACKED_IO",

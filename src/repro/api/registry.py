@@ -199,47 +199,97 @@ def select_backend(state, *, key=None, prefer: Optional[str] = None,
 
 
 # ---------------------------------------------------------------------------
-# Per-backend tuning tables (measured kernel autotuning, ISSUE 3)
+# Per-(backend, shape bucket) tuning tables (measured autotuning,
+# ISSUE 3; shape-aware since ISSUE 5)
 # ---------------------------------------------------------------------------
 #
 # The registry is the designated home for *measured* per-backend tuning:
 # ``kernels/autotune.py`` times (bt, ct, kt) tile candidates and bucket
-# sizes against each registered backend and registers the result here,
-# keyed by backend name.  Consumers (``ServeEngine``,
-# ``BatcherConfig.for_max_batch``) read the table instead of hard-coding
-# tile/bucket constants.  A committed default table
-# (``repro/kernels/tuning_table.json``, regenerated by
+# sizes against each registered backend and registers the result here.
+# Consumers (``ServeEngine``, ``BatcherConfig.for_max_batch``) read the
+# table instead of hard-coding tile/bucket constants.  A committed
+# default table (``repro/kernels/tuning_table.json``, regenerated by
 # ``benchmarks/kernel_bench.py``) is lazily loaded on first lookup.
+#
+# Entries are keyed by **(backend name, shape bucket)**: the right tiles
+# depend on the model's (C, L) as much as on the backend, so a KWS-shaped
+# model must never inherit tiles measured at the serve-bench shape.
+# ``shape_bucket_key`` rounds (n_clauses, n_literals) up to powers of two
+# ("c64-l1024"), so near-identical shapes share an entry while genuinely
+# different workloads get their own — measured lazily on first sight when
+# the consumer opts in (``EngineConfig.lazy_tune`` ->
+# ``kernels.autotune.ensure_tuning``).
 #
 # Entry schema (plain JSON-shaped dict):
 #   {"tiles": {"ct": int, "kt": int},        # best measured kernel tiles
 #    "bucket_sizes": [int, ...],             # measured-good batch buckets
 #    "bucket_latency_us": {"8": float, ...}, # evidence
 #    "tile_latency_us": {"ctxkt": float, ...},
-#    "shape": {...}}                         # reference workload measured
+#    "shape": {...},                         # exact workload measured
+#    "jax_backend": "cpu" | "tpu" | ...,     # withholding guard
+#    "lazy": bool}                           # measured on first sight?
 
-_TUNING: Dict[str, dict] = {}
+# The serve-bench reference bucket: TMConfig(4 classes x 8 clauses,
+# 64 features) -> C=32, L=128.  Legacy (pre-shape-key) lookups and
+# entries without shape information land here.
+REF_SHAPE_KEY = "c32-l128"
+
+_TUNING: Dict[str, Dict[str, dict]] = {}      # name -> shape_key -> entry
 _TUNING_DEFAULTS_LOADED = False
 
 
-def register_tuning(name: str, entry: dict) -> None:
-    """Install (or overwrite) the measured tuning entry for a backend."""
-    _TUNING[name] = dict(entry)
+def _pow2ceil(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
-def get_tuning(name: str) -> Optional[dict]:
-    """The measured tuning entry for backend ``name`` (or None).
+def shape_bucket_key(n_clauses: int, n_literals: int) -> str:
+    """The tuning-table shape bucket for a ``[C, L]`` model: both dims
+    rounded up to the next power of two (``"c64-l1024"``)."""
+    return f"c{_pow2ceil(n_clauses)}-l{_pow2ceil(n_literals)}"
 
-    Falls back to the committed default table shipped with the package
-    the first time an unknown name is looked up.  Entries whose recorded
-    ``jax_backend`` does not match the runtime jax backend are withheld:
-    tiles measured in CPU interpret mode must not override the
-    MXU-aligned defaults on a real TPU (re-run
-    ``benchmarks/kernel_bench.py`` on the target to tune it).
+
+def shape_key_of(shape: dict) -> str:
+    """Bucket key of an entry's recorded ``shape`` dict
+    (``{"n_classes", "clauses_per_class", "n_features"}``)."""
+    return shape_bucket_key(shape["n_classes"] * shape["clauses_per_class"],
+                            2 * shape["n_features"])
+
+
+def register_tuning(name: str, entry: dict,
+                    shape_key: Optional[str] = None) -> None:
+    """Install (or overwrite) the measured entry for
+    ``(backend, shape bucket)``.  ``shape_key`` defaults to the bucket
+    of the entry's own recorded ``shape`` (or :data:`REF_SHAPE_KEY` for
+    shapeless legacy entries)."""
+    _load_tuning_defaults()        # an early register must not shadow the
+    if shape_key is None:          # committed entries of OTHER buckets
+        shape_key = (shape_key_of(entry["shape"]) if entry.get("shape")
+                     else REF_SHAPE_KEY)
+    _TUNING.setdefault(name, {})[shape_key] = dict(entry)
+
+
+def get_tuning(name: str,
+               shape_key: Optional[str] = None) -> Optional[dict]:
+    """The measured entry for ``(backend, shape bucket)``, or None.
+
+    ``shape_key`` is a :func:`shape_bucket_key` string; None is the
+    legacy lookup and means the serve-bench reference bucket
+    (:data:`REF_SHAPE_KEY`).  Falls back to the committed default table
+    shipped with the package on first lookup of an unknown backend.
+
+    Two withholding rules — a near-miss entry must fall back to
+    defaults, never be silently applied:
+
+    * a different **shape bucket** is a different key, so tiles measured
+      at the serve-bench shape are never handed to a KWS-shaped engine;
+    * an entry whose recorded ``jax_backend`` does not match the runtime
+      jax backend is withheld: tiles measured in CPU interpret mode must
+      not override the MXU-aligned defaults on a real TPU (re-run
+      ``benchmarks/kernel_bench.py`` on the target to tune it).
     """
     if name not in _TUNING:
         _load_tuning_defaults()
-    entry = _TUNING.get(name)
+    entry = _TUNING.get(name, {}).get(shape_key or REF_SHAPE_KEY)
     if entry is not None and "jax_backend" in entry:
         import jax
         if entry["jax_backend"] != jax.default_backend():
@@ -247,23 +297,49 @@ def get_tuning(name: str) -> Optional[dict]:
     return entry
 
 
+def tuning_snapshot() -> Dict[str, Dict[str, dict]]:
+    """A deep copy of the whole loaded table (defaults included) — pair
+    with :func:`restore_tuning` around code that mutates it (benchmarks,
+    tests).  Deep so that in-place edits of an entry's nested values
+    (``tiles``, ``bucket_sizes``) cannot leak through a restore."""
+    import copy
+    _load_tuning_defaults()
+    return {name: {k: copy.deepcopy(e) for k, e in shapes.items()}
+            for name, shapes in _TUNING.items()}
+
+
+def restore_tuning(snapshot: Dict[str, Dict[str, dict]]) -> None:
+    """Replace the table with a :func:`tuning_snapshot` copy."""
+    import copy
+    global _TUNING_DEFAULTS_LOADED
+    _TUNING_DEFAULTS_LOADED = True            # snapshot already folded them
+    _TUNING.clear()
+    for name, shapes in snapshot.items():
+        for k, e in shapes.items():
+            _TUNING.setdefault(name, {})[k] = copy.deepcopy(e)
+
+
 def _load_tuning_defaults() -> None:
     global _TUNING_DEFAULTS_LOADED
     if _TUNING_DEFAULTS_LOADED:
         return
     _TUNING_DEFAULTS_LOADED = True
-    from repro.kernels.autotune import load_default_table  # lazy: no cycle
-    for bname, entry in load_default_table().items():
-        _TUNING.setdefault(bname, entry)
+    # Lazy import: no cycle.  normalize_table is the ONE implementation
+    # of the pre-ISSUE-5 flat-schema migration (save/merge uses it too).
+    from repro.kernels.autotune import load_default_table, normalize_table
+    for bname, shapes in normalize_table(load_default_table()).items():
+        for skey, entry in shapes.items():
+            _TUNING.setdefault(bname, {}).setdefault(skey, entry)
 
 
 def clear_tuning(name: Optional[str] = None) -> None:
-    """Drop one (or every) tuning entry — test hygiene.
+    """Drop one backend's (or every) tuning entry — test hygiene.
 
     The semantics do not depend on whether a lookup happened first:
     clearing everything empties the table for good (no later lazy load
     resurrects it); clearing one name loads the committed defaults for
-    the *other* backends first, then drops just that entry.
+    the *other* backends first, then drops that backend's entries for
+    ALL shape buckets.
     """
     global _TUNING_DEFAULTS_LOADED
     if name is None:

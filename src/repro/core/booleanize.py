@@ -7,6 +7,18 @@ the paper's KWS-6 models) or spaced uniformly across the observed range.
 
 ``fit`` is numpy/JAX host-side (one-time preprocessing); ``transform`` is a
 jit-friendly pure function.
+
+Streaming (ISSUE 5): the paper's KWS-6 workload is continuous audio — a
+spectral frame arrives every hop, and each classifier read covers a
+*window* of recent frames.  :class:`StreamingBooleanizer` is the
+incremental form of that windowing: frames are thermometer-encoded as
+they arrive, a ring buffer keeps only the frames still needed by future
+windows, and one Boolean feature row (``window * F * K`` bits) is
+emitted per hop.  The invariant the serving stack leans on is
+**chunking invariance**: pushing a stream in any chunking produces
+exactly the rows of :meth:`StreamingBooleanizer.transform_offline` on
+the concatenated stream, so a streamed session can be checked
+bit-for-bit against offline batched inference.
 """
 
 from __future__ import annotations
@@ -64,3 +76,111 @@ def binarize(x: jax.Array, threshold: float = 0.5) -> jax.Array:
     """1-bit booleanization (the paper's image datasets use binarized
     pixels: MNIST-family inputs -> 784 Boolean features)."""
     return (x > threshold).astype(jnp.uint8)
+
+
+class StreamingBooleanizer:
+    """Sliding-window thermometer encoder for frame streams.
+
+    Wraps a fitted :class:`Booleanizer` (per-frame-feature thresholds)
+    with a window of ``window`` frames advancing ``hop`` frames per
+    emitted row: row ``t`` covers frames ``[t*hop, t*hop + window)`` of
+    the stream and concatenates their thermometer bits into one
+    ``[window * F * K]`` uint8 feature row — the Boolean input of one
+    classifier read.
+
+    The instance is the session's **ring buffer of recent frames**:
+    frames are encoded once on arrival and dropped as soon as no future
+    window can reference them, so memory stays ``O(window)`` regardless
+    of stream length.  Everything is host-side numpy (streaming happens
+    at the serving front-end, before the batched device dispatch).
+
+    Chunking invariance — ``push(a); push(b)`` emits exactly the rows of
+    ``transform_offline(concat(a, b))`` — is the property that lets a
+    streamed session be asserted bit-identical to offline batched
+    inference over the same windows.
+    """
+
+    def __init__(self, booleanizer: Booleanizer, window: int, hop: int):
+        if window < 1 or hop < 1:
+            raise ValueError(f"window and hop must be >= 1, got "
+                             f"{window}/{hop}")
+        self.booleanizer = booleanizer
+        self.window = int(window)
+        self.hop = int(hop)
+        # Host-side threshold copy: frames are compared in float32 on
+        # both the streaming (numpy) and offline (jnp) paths, so the
+        # emitted bits are identical.
+        self._thr = np.asarray(booleanizer.thresholds, dtype=np.float32)
+        self.reset()
+
+    @property
+    def frame_features(self) -> int:
+        """Raw features per frame (``F``)."""
+        return self._thr.shape[0]
+
+    @property
+    def bits_per_frame(self) -> int:
+        return self._thr.shape[0] * self._thr.shape[1]
+
+    @property
+    def n_boolean_features(self) -> int:
+        """Boolean features per emitted window row."""
+        return self.window * self.bits_per_frame
+
+    @property
+    def frames_buffered(self) -> int:
+        return len(self._buf)
+
+    def reset(self) -> None:
+        """Forget the stream (fresh session)."""
+        self._buf = np.zeros((0, self.bits_per_frame), dtype=np.uint8)
+        self._start = 0          # absolute index of _buf[0] in the stream
+        self._next = 0           # absolute index of the next window start
+
+    def _encode(self, frames: np.ndarray) -> np.ndarray:
+        """``[T, F]`` float32 -> ``[T, F*K]`` uint8 thermometer bits."""
+        bits = frames[:, :, None] > self._thr[None, :, :]
+        return bits.reshape(frames.shape[0], -1).astype(np.uint8)
+
+    def _check_frames(self, frames) -> np.ndarray:
+        frames = np.asarray(frames, dtype=np.float32)
+        if frames.ndim == 1:
+            frames = frames[None, :]
+        if frames.ndim != 2 or frames.shape[1] != self.frame_features:
+            raise ValueError(f"expected [T, {self.frame_features}] frames, "
+                             f"got {frames.shape}")
+        return frames
+
+    def push(self, frames) -> np.ndarray:
+        """Feed ``[T, F]`` (or a single ``[F]``) raw frames; returns the
+        ``[n_new, window*F*K]`` Boolean rows completed by them (possibly
+        zero rows)."""
+        frames = self._check_frames(frames)
+        self._buf = np.concatenate([self._buf, self._encode(frames)])
+        rows = []
+        end = self._start + len(self._buf)
+        while self._next + self.window <= end:
+            lo = self._next - self._start
+            rows.append(self._buf[lo:lo + self.window].reshape(-1))
+            self._next += self.hop
+        drop = min(self._next - self._start, len(self._buf))
+        if drop > 0:             # ring-buffer trim: frames nothing needs
+            self._buf = self._buf[drop:]
+            self._start += drop
+        if not rows:
+            return np.zeros((0, self.n_boolean_features), dtype=np.uint8)
+        return np.stack(rows)
+
+    def transform_offline(self, frames) -> np.ndarray:
+        """All window rows of a complete ``[T, F]`` stream at once
+        (stateless; the batched-oracle side of the streamed == offline
+        bit-exactness invariant)."""
+        frames = self._check_frames(frames)
+        n = (0 if len(frames) < self.window
+             else 1 + (len(frames) - self.window) // self.hop)
+        if n == 0:
+            return np.zeros((0, self.n_boolean_features), dtype=np.uint8)
+        bits = self._encode(frames)
+        idx = (self.hop * np.arange(n)[:, None]
+               + np.arange(self.window)[None, :])
+        return bits[idx].reshape(n, -1)

@@ -10,6 +10,13 @@ image/audio corpora are not redistributable inside this container, so:
   28x28 images from per-class prototype masks + bit-flip noise) so the
   full train -> program-crossbar -> analog-inference -> energy pipeline is
   runnable end to end.
+* ``synthetic_kws6`` produces a KWS-6-shaped streaming stand-in
+  (ISSUE 5): six keyword classes, each a distinct spectral-prototype
+  trajectory over mel-like bins, sampled as per-utterance frame streams
+  with phase/amplitude jitter and additive noise.  Utterances are meant
+  to be windowed by ``core.booleanize.StreamingBooleanizer`` (one
+  Boolean row per hop) — ``kws6_windows`` does that offline for
+  training/eval.
 * ``paper_model_stats`` carries the *published* model statistics of
   Table IV (clauses, TA cells, include counts, CSA counts) so the energy
   benchmarks reproduce the paper's numbers independently of retraining.
@@ -22,6 +29,7 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def noisy_xor(
@@ -66,6 +74,78 @@ def synthetic_image_dataset(
     x_train, y_train = make(ktr, kytr, n_train)
     x_test, y_test = make(kte, kyte, n_test)
     return x_train, y_train, x_test, y_test
+
+
+KWS6_CLASSES = ("yes", "no", "up", "down", "left", "right")
+
+
+def synthetic_kws6(
+    key: jax.Array,
+    n_utterances: int = 60,
+    n_frames: int = 32,
+    n_mels: int = 12,
+    n_classes: int = 6,
+    noise: float = 0.15,
+) -> Tuple[jax.Array, jax.Array]:
+    """KWS-6 streaming stand-in: per-class spectral prototypes + noise.
+
+    Each keyword class is (a) a formant-like trajectory over ``n_mels``
+    spectral bins — a Gaussian energy bump whose center sweeps with a
+    class-specific slope and vibrato — plus (b) a class-stationary
+    harmonic signature (a fixed pair of resonance bins), so any single
+    window carries class evidence even though the trajectory part looks
+    different at every hop.  Utterances add phase/amplitude jitter and
+    white noise, so windows of the same keyword vary but stay separable.
+
+    Returns ``(frames [N, T, M] float32, labels [N] int32)`` — raw frame
+    streams, to be windowed/booleanized by ``StreamingBooleanizer``.
+    """
+    ky, kph, kamp, kn = jax.random.split(key, 4)
+    y = jax.random.randint(ky, (n_utterances,), 0, n_classes)
+    t = jnp.linspace(0.0, 1.0, n_frames)                       # [T]
+    m = jnp.arange(n_mels, dtype=jnp.float32)                  # [M]
+
+    c = jnp.arange(n_classes, dtype=jnp.float32)
+    base = 1.0 + (n_mels - 3.0) * c / max(n_classes - 1, 1)    # start bin
+    slope = jnp.where(c % 2 == 0, 1.0, -1.0) * (n_mels / 6.0)  # sweep
+    vib_f = 1.0 + (c % 3)                                      # vibrato Hz
+    # class-stationary resonances: two fixed bins per class
+    sig1 = (c + 0.5) * n_mels / n_classes
+    sig2 = jnp.mod(sig1 + n_mels / 2.0 + c % 2, float(n_mels))
+
+    phase = jax.random.uniform(kph, (n_utterances,), maxval=1.0)
+    amp = 1.0 + 0.2 * jax.random.normal(kamp, (n_utterances,))
+
+    def utterance(label, ph, a):
+        center = (base[label] + slope[label] * t
+                  + 0.8 * jnp.sin(2 * jnp.pi * (vib_f[label] * t + ph)))
+        center = jnp.clip(center, 0.0, n_mels - 1.0)           # [T]
+        bump = jnp.exp(-0.5 * ((m[None, :] - center[:, None]) / 1.2) ** 2)
+        res = (jnp.exp(-0.5 * ((m - sig1[label]) / 0.7) ** 2)
+               + jnp.exp(-0.5 * ((m - sig2[label]) / 0.7) ** 2))
+        return a * (bump + 0.8 * res[None, :])                 # [T, M]
+
+    x = jax.vmap(utterance)(y, phase, amp)
+    x = x + noise * jax.random.normal(kn, x.shape)
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def kws6_windows(frames, labels, windower) -> Tuple[np.ndarray, np.ndarray]:
+    """Offline windowing of a KWS-6 utterance batch for training/eval.
+
+    ``windower`` is a fitted ``StreamingBooleanizer``; every utterance's
+    frame stream yields its window rows (``transform_offline``), each
+    labeled with the utterance's keyword.  Returns
+    ``(rows [NW, window*M*K] uint8, y [NW] int64)``.
+    """
+    frames = np.asarray(frames)
+    labels = np.asarray(labels)
+    rows, ys = [], []
+    for i in range(frames.shape[0]):
+        r = windower.transform_offline(frames[i])
+        rows.append(r)
+        ys.append(np.full(len(r), labels[i], dtype=np.int64))
+    return np.concatenate(rows), np.concatenate(ys)
 
 
 @dataclasses.dataclass(frozen=True)

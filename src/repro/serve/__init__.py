@@ -11,7 +11,10 @@ Layers (see each module's docstring):
   response loop, with capability-selected forward and loud fallback
   accounting;
 * ``metrics``   — simulated latency/throughput + the paper's energy
-  figures of merit.
+  figures of merit;
+* ``stream``    — per-session streaming front-end (ISSUE 5): sliding
+  windows per client multiplexed onto one shared engine, with
+  majority-vote posterior smoothing and per-session metrics.
 """
 
 from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
@@ -22,6 +25,8 @@ from repro.serve.metrics import (RequestRecord, ServeMetrics,
                                  hardware_figures)
 from repro.serve.replica import (ReplicaPool, RouterState, ensemble_vote,
                                  program_replica_pool)
+from repro.serve.stream import (Decision, StreamConfig, StreamServer,
+                                StreamSession, majority_vote)
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher", "Request",
@@ -30,4 +35,6 @@ __all__ = [
     "ServeEngine",
     "RequestRecord", "ServeMetrics", "hardware_figures",
     "ReplicaPool", "RouterState", "ensemble_vote", "program_replica_pool",
+    "Decision", "StreamConfig", "StreamServer", "StreamSession",
+    "majority_vote",
 ]

@@ -116,6 +116,17 @@ class EngineConfig:
     # flight (un-collected device futures) at once.  2 = classic double
     # buffering — pack batch N+1 while batch N computes.
     max_in_flight: int = 2
+    # Shape-aware autotuning (ISSUE 5): the tuning table is keyed by
+    # (backend, shape bucket), so an engine whose model shape has no
+    # measured entry gets DEFAULT tiles/buckets rather than another
+    # shape's.  With lazy_tune=True the engine measures the missing
+    # entry ONCE at construction (a small tile/bucket sweep,
+    # ``kernels.autotune.ensure_tuning``) and registers it for every
+    # later engine at the same (backend, bucket).  Off by default:
+    # measurement costs seconds of kernel compiles, which tests and
+    # short-lived engines shouldn't pay — streaming deployments
+    # (``launch/stream.py``, ``benchmarks/stream_bench.py``) turn it on.
+    lazy_tune: bool = False
 
     def backend_preference(self) -> Optional[str]:
         """The explicit preference, or None for the packed-aware default."""
@@ -221,7 +232,18 @@ class ServeEngine:
         # Measured per-backend tuning (kernels/autotune.py): kernel tiles
         # for every dispatch; bucket ladder when the batcher config was
         # built by for_max_batch (auto_tune) rather than hand-picked.
-        self.tuning: Optional[dict] = api.get_tuning(self.backend.name)
+        # Keyed by (backend, shape bucket) since ISSUE 5 — this engine's
+        # model shape only ever consumes tiles measured at a matching
+        # shape, falling back to defaults (or, with ecfg.lazy_tune, one
+        # lazy measurement) for unseen shapes.
+        self.shape_key: str = api.shape_bucket_key(tm_cfg.n_clauses,
+                                                   tm_cfg.n_literals)
+        self.tuning: Optional[dict] = api.get_tuning(
+            self.backend.name, shape_key=self.shape_key)
+        if (self.tuning is None and ecfg.lazy_tune
+                and CAP_FUSED_KERNEL in self.backend.capabilities):
+            from repro.kernels.autotune import ensure_tuning
+            self.tuning = ensure_tuning(self.backend, tm_cfg)
         bcfg = ecfg.batcher
         if bcfg.auto_tune and self.tuning and \
                 self.tuning.get("bucket_sizes"):
@@ -237,6 +259,11 @@ class ServeEngine:
         self._next_rid = 0
         self._submitted: List[int] = []
         self._results: Dict[int, Response] = {}
+        # Streaming hygiene (ISSUE 5): rids consumed via take()/discard()
+        # are pruned from _submitted on the next pump/drain, so an
+        # always-on front-end doesn't grow engine bookkeeping forever.
+        self._taken: set = set()
+        self._discard: set = set()
         self._blocked_s = 0.0           # cumulative block_until_ready time
 
     def _build_forward(self):
@@ -315,6 +342,7 @@ class ServeEngine:
 
     def pump(self, force: bool = False) -> int:
         """Cut and dispatch every due batch; returns #requests served."""
+        self._prune_consumed()
         served = 0
         while True:
             batch = self.batcher.cut(self.clock(), force=force)
@@ -324,16 +352,54 @@ class ServeEngine:
             served += batch.n_valid
 
     def drain(self) -> List[Response]:
-        """Force-serve everything queued; responses in submission order."""
+        """Force-serve everything queued; responses in submission order
+        (excluding responses already consumed by :meth:`take` /
+        :meth:`discard` — the streaming front-end's path)."""
         self.pump(force=True)
         self._collect_pending()
         return [self._results[rid] for rid in self._submitted
                 if rid in self._results]
 
+    def _prune_consumed(self) -> None:
+        """Drop bookkeeping for rids consumed via take()/discard(), so
+        long-running streaming keeps _submitted bounded by the backlog."""
+        if self._taken:
+            self._submitted = [r for r in self._submitted
+                               if r not in self._taken]
+            self._taken.clear()
+
     def result(self, rid: int) -> Optional[Response]:
         if rid not in self._results:
             self._collect_pending()
         return self._results.get(rid)
+
+    def poll(self, rid: int) -> Optional[Response]:
+        """:meth:`result` without forcing collection: returns the
+        Response if its batch has already been collected, else None.
+        Streaming front-ends use this so polling a queued window never
+        blocks on an async engine's in-flight dispatches."""
+        return self._results.get(rid)
+
+    def take(self, rid: int) -> Optional[Response]:
+        """:meth:`poll` + forget: pops the Response so the engine drops
+        its bookkeeping for ``rid``.  The streaming front-end consumes
+        results this way — an always-on session must not grow
+        ``_results``/``_submitted`` without bound.  After a successful
+        take, :meth:`result`/:meth:`drain` no longer see the rid."""
+        resp = self.poll(rid)
+        if resp is not None:
+            del self._results[rid]
+            self._taken.add(rid)
+        return resp
+
+    def discard(self, rid: int) -> None:
+        """Forget ``rid`` entirely: drop its Response now, or on arrival
+        if it is still queued/in flight (a reset streaming session
+        abandons its pending windows; their reads still happen and are
+        still counted in metrics, but the Responses are not retained)."""
+        if self._results.pop(rid, None) is None:
+            self._discard.add(rid)
+        self._taken.add(rid)
 
     def _collect_pending(self) -> None:
         """Collect any outstanding dispatches (no-op: the synchronous
@@ -423,10 +489,13 @@ class ServeEngine:
 
         records = []
         for row, req in enumerate(batch.requests):
-            self._results[req.rid] = Response(
-                rid=req.rid, pred=int(preds[row]),
-                class_sums=sums[row], replica=fl.replica,
-                latency_s=t_done - req.t_enqueue)
+            if req.rid in self._discard:      # abandoned by a session
+                self._discard.discard(req.rid)  # reset; served + counted,
+            else:                               # never retained
+                self._results[req.rid] = Response(
+                    rid=req.rid, pred=int(preds[row]),
+                    class_sums=sums[row], replica=fl.replica,
+                    latency_s=t_done - req.t_enqueue)
             records.append(RequestRecord(
                 rid=req.rid, t_enqueue=req.t_enqueue,
                 t_dispatch=fl.t_dispatch, t_done=t_done,
@@ -457,6 +526,8 @@ class ServeEngine:
         out["bucket_sizes"] = list(self.batcher.cfg.bucket_sizes)
         out["buckets_tuned_for"] = self.batcher.cfg.tuned_for
         out["kernel_tiles"] = dict((self.tuning or {}).get("tiles") or {})
+        out["shape_key"] = self.shape_key
+        out["tuning_lazy"] = bool((self.tuning or {}).get("lazy"))
         if includes is None:
             includes = int(jnp.sum(self.pool.include))
         out["hardware"] = hardware_figures(

@@ -15,7 +15,8 @@ Two timebases coexist on purpose:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -55,8 +56,16 @@ def _percentile(sorted_vals: np.ndarray, q: float) -> float:
 class ServeMetrics:
     """Accumulates per-request records and batch accounting."""
 
+    # Per-request records retained for latency percentiles: a recent
+    # window, not the whole history — an always-on streaming deployment
+    # serves millions of windows and must not grow host memory without
+    # bound (counts/rates below use lifetime counters, not this window).
+    RECORDS_WINDOW = 65536
+
     def __init__(self):
-        self.records: List[RequestRecord] = []
+        self.records: Deque[RequestRecord] = deque(
+            maxlen=self.RECORDS_WINDOW)
+        self.n_requests = 0             # lifetime served-request count
         self.batches = 0
         self.padded_rows = 0
         self.valid_rows = 0
@@ -77,6 +86,14 @@ class ServeMetrics:
         self.host_pack_s = 0.0
         self.device_wait_s = 0.0
         self.overlapped_s = 0.0
+        # Streaming sessions (ISSUE 5): per-session keyword-decision
+        # aggregates — count, first/last decision clock time, and a
+        # BOUNDED window of recent latencies (always-on sessions must
+        # not grow metrics forever; the engine's request bookkeeping is
+        # bounded for the same reason).  Window latency is the served
+        # request's enqueue -> done span, so it includes queue wait:
+        # the figure a streaming client feels.
+        self.session_decisions: Dict[str, dict] = {}
 
     def note_forward_fallback(self, reason: str) -> None:
         """Record one dispatch served by a fallback backend."""
@@ -92,6 +109,39 @@ class ServeMetrics:
         self.device_wait_s += max(0.0, wait_s)
         self.overlapped_s += max(0.0, overlapped_s)
 
+    # Latency percentiles are computed over the most recent window of
+    # decisions; counts/rates cover the whole stream.
+    SESSION_LATENCY_WINDOW = 2048
+
+    def note_decision(self, session: str, latency_s: float,
+                      now: float) -> None:
+        """Account one streamed keyword decision for ``session``."""
+        rec = self.session_decisions.setdefault(str(session), {
+            "n": 0, "t_first": float(now), "t_last": float(now),
+            "recent": deque(maxlen=self.SESSION_LATENCY_WINDOW)})
+        rec["n"] += 1
+        rec["t_last"] = float(now)
+        rec["recent"].append(float(latency_s))
+
+    def sessions_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-session decision counts, decision rate, and latency.
+
+        ``decisions_per_s`` is None (JSON null, never NaN — the summary
+        must stay strict-JSON serializable) until a session has two
+        decisions with a positive clock span."""
+        out: Dict[str, Dict[str, float]] = {}
+        for sid, rec in self.session_decisions.items():
+            span = rec["t_last"] - rec["t_first"]
+            lats = np.sort(np.asarray(rec["recent"])) * 1e3
+            out[sid] = {
+                "decisions": rec["n"],
+                "decisions_per_s": ((rec["n"] - 1) / span
+                                    if rec["n"] > 1 and span > 0 else None),
+                "p50_ms": _percentile(lats, 0.50),
+                "p95_ms": _percentile(lats, 0.95),
+            }
+        return out
+
     def overlap_fraction(self) -> float:
         """Fraction of total in-flight device time hidden behind host
         work: ``overlapped / (overlapped + blocked wait)``.  ~0 for the
@@ -105,6 +155,7 @@ class ServeMetrics:
         literal operand that crossed host->device (the packed wire
         format shrinks this ~32x vs f32, ~8x vs uint8)."""
         self.records.extend(records)
+        self.n_requests += len(records)
         self.batches += 1
         self.valid_rows += len(records)
         self.padded_rows += bucket - len(records)
@@ -117,6 +168,7 @@ class ServeMetrics:
     # ------------------------------------------------------------ summaries
 
     def latency_ms(self) -> Dict[str, float]:
+        """Latency percentiles over the retained (recent) records."""
         lats = np.sort([r.latency_s for r in self.records]) * 1e3
         return {"p50_ms": _percentile(lats, 0.50),
                 "p95_ms": _percentile(lats, 0.95),
@@ -124,9 +176,9 @@ class ServeMetrics:
 
     def throughput(self) -> float:
         """Served requests per second of simulation wall-clock."""
-        if not self.records or self.t_last == self.t_first:
+        if not self.n_requests or self.t_last == self.t_first:
             return float("nan")
-        return len(self.records) / (self.t_last - self.t_first)
+        return self.n_requests / (self.t_last - self.t_first)
 
     def padding_overhead(self) -> float:
         """Fraction of dispatched kernel rows that were padding."""
@@ -134,7 +186,7 @@ class ServeMetrics:
         return self.padded_rows / total if total else 0.0
 
     def summary(self) -> Dict[str, float]:
-        out = {"requests": len(self.records), "batches": self.batches,
+        out = {"requests": self.n_requests, "batches": self.batches,
                "throughput_rps": self.throughput(),
                "padding_overhead": self.padding_overhead(),
                "mean_batch": (self.valid_rows / self.batches
@@ -147,6 +199,9 @@ class ServeMetrics:
                "host_pack_s": self.host_pack_s,
                "device_wait_s": self.device_wait_s,
                "overlap_fraction": self.overlap_fraction()}
+        sessions = self.sessions_summary()
+        if sessions:                    # streaming only — keep plain
+            out["sessions"] = sessions  # serving summaries noise-free
         out.update(self.latency_ms())
         return out
 

@@ -1,0 +1,231 @@
+"""Shape-aware tuning-table tests (ISSUE 5).
+
+The registry's tuning table is keyed by (backend, shape bucket) and
+guarded by withholding rules that were previously documented behavior
+with no test:
+
+* an entry recorded under a different **jax backend** (e.g. CPU
+  interpret-mode tiles on a TPU) must be ignored and fall back to
+  defaults;
+* an entry recorded under a different **shape bucket** must never be
+  handed to a model of another shape;
+* lazy measurement runs EXACTLY once per (backend, shape bucket) and is
+  reused by every later engine;
+* hand-picked ``bucket_sizes`` are never overridden, tuned or not;
+* the committed pre-ISSUE-5 flat table schema still loads (migration).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import api
+from repro.api import registry as reg
+from repro.core.variations import VariationConfig
+from repro.kernels import autotune
+from repro.serve import BatcherConfig, EngineConfig, ServeEngine
+
+ENTRY = {"tiles": {"ct": 64, "kt": 256}, "bucket_sizes": [8, 16],
+         "jax_backend": "cpu"}
+
+
+@pytest.fixture(autouse=True)
+def _tuning_guard():
+    """Every test runs against a snapshot-restored table."""
+    snap = api.tuning_snapshot()
+    yield
+    api.restore_tuning(snap)
+
+
+def make_engine(cfg, ta, keys, **ecfg_kw):
+    ecfg_kw.setdefault("batcher", BatcherConfig.for_max_batch(16))
+    return ServeEngine.from_ta_state(
+        ta, cfg, n_replicas=1, key=keys["route"],
+        vcfg=VariationConfig.nominal(), ecfg=EngineConfig(**ecfg_kw))
+
+
+# ----------------------------------------------------- shape bucket keys
+
+def test_shape_bucket_key_rounds_up_to_pow2():
+    assert api.shape_bucket_key(32, 128) == "c32-l128"
+    assert api.shape_bucket_key(33, 129) == "c64-l256"
+    assert api.shape_bucket_key(1, 1) == "c1-l1"
+    assert api.shape_bucket_key(60, 768) == "c64-l1024"
+    # nearby shapes share a bucket; different workloads do not
+    assert api.shape_bucket_key(30, 120) == api.shape_bucket_key(32, 128)
+    assert api.shape_bucket_key(32, 128) != api.shape_bucket_key(64, 128)
+
+
+def test_shape_key_of_entry_shape():
+    assert api.shape_key_of(autotune.REF_SHAPE) == api.REF_SHAPE_KEY
+    assert api.shape_key_of(autotune.KWS_SHAPE) == "c64-l1024"
+
+
+def test_committed_table_is_shape_keyed():
+    """The migrated committed table serves its entries under the
+    reference bucket, and register_tuning derives keys from entry
+    shapes."""
+    entry = api.get_tuning("analog-pallas-packed",
+                           shape_key=api.REF_SHAPE_KEY)
+    assert entry is not None and entry["tiles"]
+    # legacy lookup (no shape_key) is the reference bucket
+    assert api.get_tuning("analog-pallas-packed") == entry
+    # an entry with a recorded shape registers under its own bucket
+    api.register_tuning("analog-pallas-packed",
+                        dict(ENTRY, shape=autotune.KWS_SHAPE))
+    assert api.get_tuning("analog-pallas-packed",
+                          shape_key="c64-l1024")["tiles"] == ENTRY["tiles"]
+    # ...without disturbing the reference entry
+    assert api.get_tuning("analog-pallas-packed") == entry
+
+
+# ------------------------------------------------------ withholding rules
+
+def test_entry_withheld_on_jax_backend_mismatch(small_cfg, random_ta, keys):
+    """SATELLITE: tiles measured under another jax backend are ignored —
+    the engine must run on defaults, not another platform's tiles."""
+    shape_key = api.shape_bucket_key(small_cfg.n_clauses,
+                                     small_cfg.n_literals)
+    api.register_tuning("analog-pallas-packed",
+                        dict(ENTRY, jax_backend="tpu"),
+                        shape_key=shape_key)
+    assert api.get_tuning("analog-pallas-packed",
+                          shape_key=shape_key) is None
+    eng = make_engine(small_cfg, random_ta, keys)
+    assert eng.backend.name == "analog-pallas-packed"
+    assert eng.tuning is None
+    s = eng.summary()
+    assert s["kernel_tiles"] == {}                  # default tiles
+    assert s["buckets_tuned_for"] is None           # static ladder
+    # same entry under the RUNTIME backend is consumed
+    api.register_tuning("analog-pallas-packed",
+                        dict(ENTRY, jax_backend=jax.default_backend()),
+                        shape_key=shape_key)
+    eng2 = make_engine(small_cfg, random_ta, keys)
+    assert eng2.summary()["kernel_tiles"] == ENTRY["tiles"]
+
+
+def test_entry_withheld_on_shape_bucket_mismatch(small_cfg, random_ta,
+                                                 keys):
+    """SATELLITE: an entry for another shape bucket is never applied.
+    small_cfg (C=32, L=64) must NOT consume the committed reference
+    entries (c32-l128) nor an explicit foreign-shape registration."""
+    my_key = api.shape_bucket_key(small_cfg.n_clauses,
+                                  small_cfg.n_literals)
+    assert my_key != api.REF_SHAPE_KEY
+    # the committed reference entry exists, but not for this bucket
+    assert api.get_tuning("analog-pallas-packed") is not None
+    assert api.get_tuning("analog-pallas-packed", shape_key=my_key) is None
+    api.register_tuning("analog-pallas-packed",
+                        dict(ENTRY, jax_backend=jax.default_backend()),
+                        shape_key="c1024-l4096")
+    eng = make_engine(small_cfg, random_ta, keys)
+    assert eng.shape_key == my_key
+    assert eng.tuning is None
+    assert eng.summary()["kernel_tiles"] == {}
+
+
+def test_legacy_flat_table_schema_loads(monkeypatch, small_cfg):
+    """Migration: a pre-ISSUE-5 flat ``{backend: entry}`` table loads
+    under the bucket derived from each entry's recorded shape."""
+    flat = {"analog-pallas-packed": dict(ENTRY, shape=autotune.KWS_SHAPE,
+                                         jax_backend=jax.default_backend()),
+            "digital-pallas": dict(ENTRY,
+                                   jax_backend=jax.default_backend())}
+    monkeypatch.setattr("repro.kernels.autotune.load_default_table",
+                        lambda: flat)
+    monkeypatch.setattr(reg, "_TUNING", {})
+    monkeypatch.setattr(reg, "_TUNING_DEFAULTS_LOADED", False)
+    assert api.get_tuning("analog-pallas-packed",
+                          shape_key="c64-l1024")["tiles"] == ENTRY["tiles"]
+    # shapeless legacy entry lands on the reference bucket
+    assert api.get_tuning("digital-pallas",
+                          shape_key=api.REF_SHAPE_KEY) is not None
+    assert api.get_tuning("digital-pallas", shape_key="c8-l8") is None
+
+
+def test_clear_tuning_drops_all_shapes():
+    api.register_tuning("analog-pallas-packed", dict(ENTRY),
+                        shape_key="c8-l8")
+    api.clear_tuning("analog-pallas-packed")
+    assert api.get_tuning("analog-pallas-packed") is None
+    assert api.get_tuning("analog-pallas-packed", shape_key="c8-l8") is None
+    # other backends keep their committed entries
+    assert api.get_tuning("analog-pallas") is not None
+
+
+# ------------------------------------------------------- lazy measurement
+
+def test_lazy_tune_measures_exactly_once(monkeypatch, small_cfg,
+                                         random_ta, keys):
+    """ACCEPTANCE: an unseen shape triggers lazy measurement exactly
+    once; the second engine at the same (backend, bucket) reuses the
+    registered entry without measuring."""
+    calls = []
+
+    def fake_measure(backend, **kw):
+        calls.append(backend.name)
+        return dict(ENTRY, jax_backend=jax.default_backend(),
+                    shape=dict(kw.get("shape") or {}))
+
+    monkeypatch.setattr(autotune, "autotune_backend", fake_measure)
+    eng = make_engine(small_cfg, random_ta, keys, lazy_tune=True)
+    assert calls == ["analog-pallas-packed"]
+    assert eng.tuning is not None and eng.tuning.get("lazy")
+    assert eng.summary()["tuning_lazy"] is True
+    assert eng.summary()["kernel_tiles"] == ENTRY["tiles"]
+    # measured ladder flowed into the auto_tune batcher (capped at 16)
+    assert eng.batcher.cfg.bucket_sizes == (8, 16)
+    # second engine: registry hit, no second measurement
+    eng2 = make_engine(small_cfg, random_ta, keys, lazy_tune=True)
+    assert calls == ["analog-pallas-packed"]
+    assert eng2.tuning == eng.tuning
+
+
+def test_lazy_tune_never_overrides_hand_picked_buckets(
+        monkeypatch, small_cfg, random_ta, keys):
+    """ACCEPTANCE: hand-picked bucket_sizes survive even when a lazy
+    entry is measured for the shape."""
+    monkeypatch.setattr(
+        autotune, "autotune_backend",
+        lambda backend, **kw: dict(ENTRY,
+                                   jax_backend=jax.default_backend()))
+    eng = make_engine(small_cfg, random_ta, keys, lazy_tune=True,
+                      batcher=BatcherConfig(max_batch=32,
+                                            bucket_sizes=(16, 32)))
+    assert eng.tuning is not None                    # measured...
+    assert eng.batcher.cfg.bucket_sizes == (16, 32)  # ...but not applied
+    assert eng.batcher.cfg.tuned_for is None
+    # tiles still flow (tiles are kernel-internal, not a policy choice)
+    assert eng.summary()["kernel_tiles"] == ENTRY["tiles"]
+
+
+def test_lazy_tune_off_by_default(small_cfg, random_ta, keys,
+                                  monkeypatch):
+    def boom(*a, **kw):
+        raise AssertionError("measured without lazy_tune")
+
+    monkeypatch.setattr(autotune, "autotune_backend", boom)
+    eng = make_engine(small_cfg, random_ta, keys)      # lazy_tune=False
+    assert eng.tuning is None
+
+
+@pytest.mark.slow
+def test_lazy_tune_real_measurement_roundtrip(small_cfg, random_ta, keys):
+    """The REAL lazy measurement path (no monkeypatch): a small sweep
+    runs at the engine's exact shape, registers under its bucket, and
+    produces consumable tiles + a bucket ladder."""
+    shape_key = api.shape_bucket_key(small_cfg.n_clauses,
+                                     small_cfg.n_literals)
+    api.clear_tuning("analog-pallas-packed")
+    eng = make_engine(small_cfg, random_ta, keys, lazy_tune=True)
+    entry = api.get_tuning("analog-pallas-packed", shape_key=shape_key)
+    assert entry is not None and entry["lazy"]
+    assert entry["shape"]["n_features"] == small_cfg.n_features
+    assert set(entry["tiles"]) == {"ct", "kt"}
+    assert entry["tiles"]["kt"] % 32 == 0
+    assert all(b % 8 == 0 for b in entry["bucket_sizes"])
+    assert eng.tuning == entry
+    # serving still works with the lazily measured tiles
+    eng.submit(jnp.zeros(small_cfg.n_features, jnp.uint8))
+    assert len(eng.drain()) == 1

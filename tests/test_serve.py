@@ -250,18 +250,24 @@ def test_engine_consumes_registry_tuning_table(small_cfg, random_ta, keys):
     """Autotuned bucket sizes come from the registry tuning table, not a
     hard-coded ladder: a for_max_batch batcher picks up the measured
     buckets (capped at max_batch) and records which backend they were
-    measured for; kernel tiles flow into the dispatch opts."""
+    measured for; kernel tiles flow into the dispatch opts.  The table
+    is keyed by (backend, shape bucket), so the entry is registered
+    under THIS model's bucket."""
     from repro import api
-    saved = api.get_tuning("analog-pallas-packed")
+    shape_key = api.shape_bucket_key(small_cfg.n_clauses,
+                                     small_cfg.n_literals)
+    saved = api.tuning_snapshot()
     api.register_tuning("analog-pallas-packed",
                         {"tiles": {"ct": 32, "kt": 128},
-                         "bucket_sizes": [8, 24, 96]})
+                         "bucket_sizes": [8, 24, 96]},
+                        shape_key=shape_key)
     try:
         eng = ServeEngine.from_ta_state(
             random_ta, small_cfg, n_replicas=1, key=keys["route"],
             vcfg=VariationConfig.nominal(),
             ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(64)))
         assert eng.backend.name == "analog-pallas-packed"
+        assert eng.shape_key == shape_key
         # 96 exceeds max_batch and is dropped; max_batch caps the ladder
         assert eng.batcher.cfg.bucket_sizes == (8, 24, 64)
         assert eng.batcher.cfg.tuned_for == "analog-pallas-packed"
@@ -275,9 +281,7 @@ def test_engine_consumes_registry_tuning_table(small_cfg, random_ta, keys):
         assert eng2.batcher.cfg.bucket_sizes == (8, 16)
         assert eng2.batcher.cfg.tuned_for is None
     finally:
-        api.clear_tuning("analog-pallas-packed")
-        if saved is not None:
-            api.register_tuning("analog-pallas-packed", saved)
+        api.restore_tuning(saved)
 
 
 def test_pad_rows_are_dropped_on_unpad(small_cfg, random_ta, keys,
