@@ -114,6 +114,12 @@ def main(argv=None):
                     help="timing reps per candidate (min-of-reps)")
     ap.add_argument("--out", default=autotune.DEFAULT_TABLE_PATH,
                     help="tuning-table JSON path (full mode only)")
+    ap.add_argument("--require-backend", action="append", default=[],
+                    metavar="NAME",
+                    help="fail (smoke or full) unless this backend was "
+                         "tuned; repeatable — CI pins the coalesced "
+                         "family so a silently dropped registration "
+                         "cannot pass the smoke")
     args = ap.parse_args(argv)
 
     mode = "smoke" if args.smoke else "full"
@@ -129,6 +135,11 @@ def main(argv=None):
         print(f"[kernel_bench]   {name} @ {skey}: tiles={e['tiles']} "
               f"buckets={e['bucket_sizes']} "
               f"(best tile {min(e['tile_latency_us'].values()):.0f} us)")
+    missing = sorted(set(args.require_backend) - set(entries))
+    if missing:
+        print(f"[kernel_bench] FAIL: required backend(s) not tuned: "
+              f"{missing} (tuned: {sorted(entries)})")
+        raise SystemExit(1)
     if args.smoke:
         ok = all(e["tiles"] and e["bucket_sizes"] for _, _, e in flat)
         print(f"[kernel_bench] SMOKE {'PASS' if ok else 'FAIL'}: "

@@ -34,6 +34,14 @@ before jax initializes).  Sharded rows ride the GSPMD jnp backend by
 capability (``CAP_SHARDED``); on forced CPU devices they measure
 *mechanics*, not a speedup — the fake devices share one physical socket.
 
+ISSUE 6 additions: a **capacity head-to-head** at equal device budget —
+the same 8-class workload served by a replicated per-class analog pool
+(R=4 routed chips) vs ONE coalesced shared clause pool with half the
+clause rows and the weighted digital tail (``run_capacity_pair``, runs
+interleaved like the sync/async pair).  Rows carry ``host_cpus`` and
+their total TA-cell budgets; the smoke adds a coalesced leg that must
+select a ``coalesced*`` backend with zero fallbacks.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--requests 192]
   PYTHONPATH=src python -m benchmarks.serve_bench --host-devices 8
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI, no JSON
@@ -168,6 +176,80 @@ def run_async_pair(cfg, ta, xs, *, max_batch, n_replicas, repeats=3,
     return rows[False], rows[True]
 
 
+def make_capacity_models(key):
+    """The equal-device-budget head-to-head pair: one 8-class workload,
+    two architectures.
+
+    * **analog**: the per-class TM (8 classes x 8 clauses = 64 clause
+      rows) replicated across R routed chips — capacity scales by
+      adding crossbars.
+    * **coalesced**: ONE shared pool with HALF the clause rows (the
+      coalesced capacity lever: clauses are shared between classes, so
+      the same accuracy needs ~2x fewer TA cells — paper §V / the CoTM
+      result) plus the weighted digital tail, on a single chip.
+
+    Both serve the same requests on the same host devices; weights are
+    random (the bench measures serving mechanics, not accuracy)."""
+    from repro.core.coalesced import CoalescedConfig
+    k1, k2, k3 = jax.random.split(key, 3)
+    acfg = TMConfig(n_classes=8, clauses_per_class=8, n_features=64,
+                    n_states=100)
+    inc = jax.random.bernoulli(k1, 0.1, (acfg.n_clauses, acfg.n_literals))
+    ta = jnp.where(inc, acfg.n_states + 1, acfg.n_states).astype(
+        acfg.state_dtype)
+    ccfg = CoalescedConfig(n_classes=8, n_clauses=acfg.n_clauses // 2,
+                           n_features=64, n_states=100)
+    cinc = jax.random.bernoulli(k2, 0.1, (ccfg.n_clauses, ccfg.n_literals))
+    cta = jnp.where(cinc, ccfg.n_states + 1, ccfg.n_states).astype(
+        ccfg.state_dtype)
+    w = jax.random.randint(k3, (ccfg.n_clauses, ccfg.n_classes),
+                           -ccfg.max_weight, ccfg.max_weight + 1, jnp.int32)
+    return acfg, ta, ccfg, cta, w
+
+
+def run_capacity_pair(xs, *, max_batch, n_replicas=4, repeats=3,
+                      packed=True):
+    """Replicated analog vs coalesced shared pool, runs interleaved.
+
+    Same de-noising argument as :func:`run_async_pair`: alternating the
+    two engines run-for-run keeps the ratio robust to host drift.  Each
+    row carries ``host_cpus`` and its total TA-cell budget so the
+    energy/capacity story is auditable next to the throughput."""
+    acfg, ta, ccfg, cta, w = make_capacity_models(jax.random.PRNGKey(7))
+    ecfg = EngineConfig(batcher=BatcherConfig.for_max_batch(max_batch),
+                       routing="round_robin", packed=packed)
+    engines = {
+        "analog": ServeEngine.from_ta_state(
+            ta, acfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
+            vcfg=VariationConfig(csa_offset=False), ecfg=ecfg),
+        "coalesced": ServeEngine.from_coalesced(
+            cta, w, ccfg, key=jax.random.PRNGKey(3), ecfg=ecfg),
+    }
+    for eng in engines.values():
+        eng.submit_many([xs[0]] * max_batch)   # warm the kernel cache
+        eng.drain()
+    best = {name: (float("inf"), None) for name in engines}
+    for _ in range(max(1, repeats)):
+        for name, eng in engines.items():      # interleaved
+            eng.metrics = type(eng.metrics)()
+            t0 = time.monotonic()
+            eng.submit_many(list(xs))
+            eng.drain()
+            wall = time.monotonic() - t0
+            if wall < best[name][0]:
+                best[name] = (wall, eng.summary())
+    rows = {}
+    for name, (wall, summary) in best.items():
+        summary["wall_s"] = wall
+        summary["wall_throughput_rps"] = len(xs) / wall
+        summary["max_batch"] = max_batch
+        summary["host_cpus"] = os.cpu_count()
+        rows[name] = summary
+    rows["analog"]["n_ta_total"] = int(acfg.n_ta) * n_replicas
+    rows["coalesced"]["n_ta_total"] = int(ccfg.n_ta)
+    return rows["analog"], rows["coalesced"]
+
+
 def run_serial(cfg, ta, xs, *, n_replicas=1, backend=None, packed=True,
                repeats=3):
     """The seed's per-request path: one dispatch per request."""
@@ -295,6 +377,23 @@ def main(argv=None):
           f"({sync_row['wall_throughput_rps']:.1f} req/s paired), "
           f"overlap {100 * async_row['overlap_fraction']:.0f}%")
 
+    # Capacity head-to-head (ISSUE 6): replicated analog vs one
+    # coalesced shared pool at equal device budget, runs interleaved —
+    # the same 8-class workload served by R routed per-class chips vs a
+    # single half-size shared clause pool with the weighted tail.
+    cap_analog, cap_coalesced = run_capacity_pair(
+        xs, max_batch=64, n_replicas=4, packed=args.packed,
+        repeats=args.repeats)
+    cap_ratio = (cap_coalesced["wall_throughput_rps"]
+                 / cap_analog["wall_throughput_rps"])
+    print(f"[serve_bench]   capacity head-to-head batch=64: coalesced "
+          f"{cap_coalesced['wall_throughput_rps']:.1f} req/s on "
+          f"{cap_coalesced['backend']} "
+          f"({cap_coalesced['n_ta_total']} TA cells) vs analog R=4 "
+          f"{cap_analog['wall_throughput_rps']:.1f} req/s on "
+          f"{cap_analog['backend']} ({cap_analog['n_ta_total']} TA "
+          f"cells) = {cap_ratio:.2f}x")
+
     # Sharded rows: the pool split over a replica device mesh.  On
     # forced CPU host devices this measures mechanics (the jnp GSPMD
     # backend on fake devices sharing one socket), not a speedup.
@@ -326,19 +425,28 @@ def main(argv=None):
 
     if args.smoke:
         row = sweep[0]
+        coalesced_ok = (
+            cap_coalesced["backend"].startswith("coalesced")
+            and cap_coalesced["forward_fallbacks"] == [])
         ok = (row["speedup_vs_serial"] >= 1.5
               and row["forward_fallbacks"] == []
-              and async_row["forward_fallbacks"] == [])
+              and async_row["forward_fallbacks"] == []
+              and coalesced_ok)
         print(f"[serve_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
               f"{row['speedup_vs_serial']:.1f}x serial on "
-              f"{row['backend']}, async {async_speedup:.2f}x sync "
+              f"{row['backend']}, async {async_speedup:.2f}x sync, "
+              f"coalesced leg on {cap_coalesced['backend']} "
+              f"({'clean' if coalesced_ok else 'FALLBACK'}) "
               f"(committed baseline untouched)")
         if args.smoke_out:
             with open(args.smoke_out, "w") as f:
                 json.dump({"smoke": True, "devices": n_dev,
                            "serial_baseline": serial, "sweep": sweep,
                            "ensemble": ens, "async_r4_b64": async_row,
-                           "async_speedup_vs_sync": async_speedup},
+                           "async_speedup_vs_sync": async_speedup,
+                           "capacity_analog_r4_b64": cap_analog,
+                           "capacity_coalesced_b64": cap_coalesced,
+                           "capacity_coalesced_vs_analog": cap_ratio},
                           f, indent=2, default=str)
             print(f"[serve_bench] wrote smoke report to {args.smoke_out}")
         if not ok:
@@ -395,6 +503,9 @@ def main(argv=None):
         "async_overlap_fraction": async_row["overlap_fraction"],
         "sync_overlap_fraction": sync_row["overlap_fraction"],
         "sharded": sharded,
+        "capacity_analog_r4_b64": cap_analog,
+        "capacity_coalesced_b64": cap_coalesced,
+        "capacity_coalesced_vs_analog": cap_ratio,
         "before_unpacked_static": before,
         "speedup_batch64_vs_serial": speedup64,
         "headline_r4_b64_rps": after["wall_throughput_rps"],

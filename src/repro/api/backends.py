@@ -29,7 +29,12 @@ name                       states                   capability notes
 ``analog-pallas-packed``   Crossbar, ReplicaStack   packed literal wire,
                            (packed)                 unpack per K tile in
                                                     VMEM
-``coalesced``              Coalesced                weighted digital tail
+``coalesced``              Coalesced                weighted digital tail;
+                                                    GSPMD/sharded path
+``coalesced-pallas``       Coalesced                fused kernel, W as the
+                                                    combine matrix
+``coalesced-pallas-packed`` Coalesced (packed)      packed literal wire +
+                                                    weighted tail
 =========================  =======================  =====================
 
 The packed backends only accept states carrying the packed include plane
@@ -201,10 +206,41 @@ def analog_pallas_packed(state, lits: jax.Array,
                   priority=10)
 def coalesced_jnp(state: CoalescedState, lits: jax.Array,
                   key: Optional[jax.Array] = None) -> jax.Array:
-    """Shared clause pool with a weighted digital tail."""
+    """Shared clause pool with a weighted digital tail (GSPMD path:
+    the only coalesced backend safe under a class-sharded ``weights``
+    placement, and the csa/sharded fallback for the fused kernels)."""
     del key
     cls = co.clause_outputs(state.ta_state, lits, state.cfg)
     return _to_i32(cls.astype(jnp.int32) @ state.weights)
+
+
+@register_backend("coalesced-pallas", state_types=(CoalescedState,),
+                  capabilities={CAP_DIGITAL, CAP_COALESCED,
+                                CAP_FUSED_KERNEL},
+                  priority=20)
+def coalesced_pallas(state: CoalescedState, lits: jax.Array,
+                     key: Optional[jax.Array] = None, **tiles) -> jax.Array:
+    """Fused clause-eval + weighted-combine Pallas kernel: the digital
+    kernel's arbitrary ``[C, M]`` combine matrix carries W instead of
+    the signed one-hot polarity matrix."""
+    del key
+    return _to_i32(ops.coalesced_class_sums(lits, state.include,
+                                            state.weights, **tiles))
+
+
+@register_backend("coalesced-pallas-packed", state_types=(CoalescedState,),
+                  capabilities={CAP_DIGITAL, CAP_COALESCED,
+                                CAP_FUSED_KERNEL, CAP_PACKED_IO},
+                  priority=30, predicate=lambda s: s.packed)
+def coalesced_pallas_packed(state: CoalescedState, lits: jax.Array,
+                            key: Optional[jax.Array] = None,
+                            **tiles) -> jax.Array:
+    """Packed-wire coalesced kernel: uint32 bitplanes, AND+popcount
+    violation path, weighted combine tail."""
+    del key
+    return _to_i32(ops.coalesced_class_sums_packed(
+        _as_packed_lits(lits), state.include_packed, state.weights,
+        **tiles))
 
 
 # ------------------------------------------------------- uniform entry

@@ -249,10 +249,15 @@ def shape_bucket_key(n_clauses: int, n_literals: int) -> str:
 
 
 def shape_key_of(shape: dict) -> str:
-    """Bucket key of an entry's recorded ``shape`` dict
-    (``{"n_classes", "clauses_per_class", "n_features"}``)."""
-    return shape_bucket_key(shape["n_classes"] * shape["clauses_per_class"],
-                            2 * shape["n_features"])
+    """Bucket key of an entry's recorded ``shape`` dict.
+
+    Per-class shapes carry ``{"n_classes", "clauses_per_class",
+    "n_features"}``; coalesced shapes carry the total pool directly as
+    ``"n_clauses"`` (there is no per-class split to multiply out)."""
+    n_clauses = shape.get("n_clauses")
+    if n_clauses is None:
+        n_clauses = shape["n_classes"] * shape["clauses_per_class"]
+    return shape_bucket_key(n_clauses, 2 * shape["n_features"])
 
 
 def register_tuning(name: str, entry: dict,

@@ -235,16 +235,52 @@ class ReplicaStackState(_PackedMixin):
 
 
 @dataclasses.dataclass(frozen=True)
-class CoalescedState:
-    """Shared clause pool + per-class integer weights (coalesced TM)."""
+class CoalescedState(_PackedMixin):
+    """Shared clause pool + per-class integer weights (coalesced TM).
+
+    Production-parity since ISSUE 6: ``pack()`` attaches the uint32
+    include bitplane (the ``coalesced-pallas-packed`` wire format),
+    ``shard(mesh)`` splits the per-class weight columns over the
+    ``replica`` mesh axis (class-parallel serving — the IMPACT capacity
+    lever), and the fused ``coalesced-pallas`` backends accept it."""
 
     ta_state: jax.Array                     # [C, L] int TA states
     weights: jax.Array                      # [C, M] int per-class weights
     cfg: CoalescedConfig                    # static
+    include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
+
+    @property
+    def include(self) -> jax.Array:
+        """``[C, L]`` bool TA actions (include iff state > n_states)."""
+        return self.ta_state > self.cfg.n_states
 
     @property
     def n_classes(self) -> int:
         return self.cfg.n_classes
+
+    @property
+    def n_clauses(self) -> int:
+        return self.cfg.n_clauses
+
+    @property
+    def n_literals(self) -> int:
+        return self.cfg.n_literals
+
+    @property
+    def is_sharded(self) -> bool:
+        """True when the weight columns are partitioned across >1 device
+        (which adds ``CAP_SHARDED`` to the required capability set)."""
+        from repro.distributed.sharding import tree_is_sharded
+        return tree_is_sharded(self)
+
+    def shard(self, mesh, rules=None) -> "CoalescedState":
+        """This state placed onto ``mesh``: the ``[C, M]`` weight matrix
+        splits its class axis over the ``replica`` logical axis (each
+        device serves a shard of classes from the SAME shared clause
+        pool), while the TA/include planes replicate.  ``rules``
+        defaults to ``distributed.sharding.replica_rules(mesh)``."""
+        from repro.distributed.sharding import shard_tree
+        return shard_tree(self, mesh, rules)
 
 
 _register(DigitalState, ("include", "ta_state", "include_packed"),
@@ -253,7 +289,8 @@ _register(CrossbarState, ("r_mem", "include", "include_packed"),
           ("tm_cfg", "icfg", "vcfg"))
 _register(ReplicaStackState, ("r_stack", "include", "include_packed"),
           ("tm_cfg", "icfg", "vcfg"))
-_register(CoalescedState, ("ta_state", "weights"), ("cfg",))
+_register(CoalescedState, ("ta_state", "weights", "include_packed"),
+          ("cfg",))
 
 STATE_TYPES = (DigitalState, CrossbarState, ReplicaStackState,
                CoalescedState)

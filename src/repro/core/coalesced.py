@@ -45,6 +45,32 @@ class CoalescedConfig:
     max_weight: int = 127
     state_dtype: jnp.dtype = jnp.int16
 
+    def __post_init__(self):
+        # Fail at construction, not deep inside a kernel with an opaque
+        # shape/overflow error.
+        if self.n_classes < 2:
+            raise ValueError(
+                f"n_classes must be >= 2 (got {self.n_classes}): a "
+                "coalesced pool shares clauses BETWEEN classes")
+        if self.n_clauses < 1 or self.n_features < 1:
+            raise ValueError(
+                f"n_clauses={self.n_clauses} and n_features="
+                f"{self.n_features} must both be >= 1")
+        if self.max_weight < 1:
+            raise ValueError(f"max_weight must be >= 1, got "
+                             f"{self.max_weight}")
+        info = jnp.iinfo(self.state_dtype)
+        if self.max_weight > info.max:
+            raise ValueError(
+                f"max_weight={self.max_weight} does not fit state_dtype="
+                f"{jnp.dtype(self.state_dtype).name} (max {info.max}); "
+                "weight clipping would silently wrap")
+        if 2 * self.n_states + 1 > info.max:
+            raise ValueError(
+                f"TA states span 1..{2 * self.n_states}, which does not "
+                f"fit state_dtype={jnp.dtype(self.state_dtype).name} "
+                f"(max {info.max})")
+
     @property
     def n_literals(self) -> int:
         return 2 * self.n_features

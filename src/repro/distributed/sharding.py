@@ -91,6 +91,11 @@ _PARAM_RULES = [
     # shared TA actions (include planes) replicated (matched before the
     # generic rules — the leading [R] dim is the only sharded one)
     (r"r_stack$",          lambda r: P(r.replica, None, None)),
+    # coalesced pools: the shared [C, L] clause pool replicates, the
+    # [C, M] per-class weight columns split over the replica axis —
+    # class-parallel serving (each device holds the weights of a class
+    # shard; GSPMD all-gathers the tiny [B, M_shard] sums for argmax)
+    (r"(^|\.)weights$",    lambda r: P(None, r.replica)),
     # embeddings / head
     (r"embed$",            lambda r: P(r.tensor, r.fsdp)),
     (r"unembed$",          lambda r: P(r.fsdp, r.tensor)),

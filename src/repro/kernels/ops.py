@@ -10,7 +10,11 @@ Public API:
   ``imbue_class_sums(lits, xbar, cfg)``             -> [B, M] analog, fused
   ``imbue_class_sums_stack(lits, r_stack, ...)``    -> [R, B, M] one vmapped
                                                        dispatch per stack
+  ``coalesced_class_sums(lits, include, w)``        -> [B, M] weighted tail,
+                                                       shared clause pool
   ``polarity_matrix(cfg, include)``                 -> [C, M] signed one-hot
+  ``coalesced_combine(w, nonempty)``                -> [C, M_pad] weighted
+                                                       combine matrix
 
 Packed (uint32 bitplane) wire-format variants — bits stay packed from the
 host queue through HBM, unpacking (if at all) per K tile in VMEM:
@@ -18,6 +22,7 @@ host queue through HBM, unpacking (if at all) per K tile in VMEM:
   ``tm_class_sums_packed(litw, incw, cfg)``         -> [B, M] AND+popcount
   ``clause_eval_packed(litw, incw)``                -> [B, C] clause bits
   ``imbue_class_sums_stack_packed(litw, ...)``      -> [R, B, M]
+  ``coalesced_class_sums_packed(litw, incw, w)``    -> [B, M] weighted tail
 
 Packed K tiles count bits and must be multiples of 32 (one uint32 word);
 padding therefore happens on the word axis (``kt // 32`` words).
@@ -181,6 +186,77 @@ def tm_class_sums_packed(litw: jax.Array, include_w: jax.Array,
     out = _ce.tm_infer_packed_call(litw_p, incw_t, pol, bt=bt, ct=ct,
                                    kt=kt, interpret=interp)
     return out[:b, :cfg.n_classes]
+
+
+def coalesced_combine(weights: jax.Array, nonempty: jax.Array,
+                      n_class_pad: int = 128) -> jax.Array:
+    """``[C, M]`` integer weights -> ``[C, M_pad]`` f32 combine matrix.
+
+    The coalesced analogue of :func:`polarity_matrix`: rows of empty
+    clauses are zeroed (the inference-time empty-clause mask, folded
+    into the matmul) and the class axis pads to the kernel's output
+    width.  Integer weights are exact in f32 (|w| <= 127 << 2^24), so
+    the weighted digital tail stays bit-exact through the float MXU
+    path.
+    """
+    m = weights.shape[1]
+    if m > n_class_pad:
+        raise ValueError(
+            f"n_classes={m} exceeds n_class_pad={n_class_pad}; widen the "
+            "class padding (kernel outputs are sliced to n_classes, so "
+            "silent overflow would drop classes)")
+    w = weights.astype(jnp.float32) * nonempty[:, None].astype(jnp.float32)
+    return _pad_to(w, 1, n_class_pad)
+
+
+@partial(jax.jit, static_argnames=("bt", "ct", "kt", "interpret"))
+def coalesced_class_sums(lits: jax.Array, include: jax.Array,
+                         weights: jax.Array, *,
+                         bt: int = BT, ct: int = CT, kt: int = KT,
+                         interpret: bool | None = None) -> jax.Array:
+    """Fused coalesced inference: shared clause pool ``[C, L]`` +
+    per-class weights ``[C, M]`` -> class sums ``[B, M]``.
+
+    Reuses the digital fused kernel's arbitrary combine-matrix path
+    (``tm_infer_call``) with W in place of the signed one-hot polarity
+    matrix — the crossbar half is UNCHANGED (same violation matmul);
+    only the digital tail swaps ±1 counters for weighted counters.
+    Bit-exact vs ``core.coalesced.forward``.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    b, m = lits.shape[0], weights.shape[1]
+    lit0 = _pad_to(_pad_to((1 - lits).astype(jnp.float32), 0, bt), 1, kt)
+    inc_t = _pad_to(_pad_to(include.astype(jnp.float32), 0, ct), 1, kt).T
+    w = _pad_to(coalesced_combine(weights, include.any(axis=-1)), 0, ct)
+    out = _ce.tm_infer_call(lit0, inc_t, w, bt=bt, ct=ct, kt=kt,
+                            interpret=interp)
+    return out[:b, :m]
+
+
+@partial(jax.jit, static_argnames=("bt", "ct", "kt", "interpret"))
+def coalesced_class_sums_packed(litw: jax.Array, include_w: jax.Array,
+                                weights: jax.Array, *,
+                                bt: int = BT, ct: int = CT, kt: int = KT,
+                                interpret: bool | None = None) -> jax.Array:
+    """Fused coalesced inference from packed bitplanes -> ``[B, M]``.
+
+    ``litw`` ``[B, ceil(L/32)]`` / ``include_w`` ``[C, ceil(L/32)]`` are
+    uint32 words (:func:`pack_literals` / :func:`pack_include`); the
+    AND+popcount violation path is shared with
+    :func:`tm_class_sums_packed`, the combine matrix is W.  Bit-exact vs
+    :func:`coalesced_class_sums` on the unpacked operands.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kw = kt // bitpack.WORD
+    b, m = litw.shape[0], weights.shape[1]
+    litw_p = _pad_to(_pad_to(litw.astype(jnp.uint32), 0, bt), 1, kw)
+    incw_t = _pad_to(_pad_to(include_w.astype(jnp.uint32), 0, ct),
+                     1, kw).T
+    w = _pad_to(coalesced_combine(weights,
+                                  _nonempty_from_packed(include_w)), 0, ct)
+    out = _ce.tm_infer_packed_call(litw_p, incw_t, w, bt=bt, ct=ct,
+                                   kt=kt, interpret=interp)
+    return out[:b, :m]
 
 
 @partial(jax.jit, static_argnames=("cfg", "width", "bt", "ct", "kt",

@@ -18,23 +18,26 @@ Layers (see each module's docstring):
 """
 
 from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
-from repro.serve.engine import (DEFAULT_BACKEND, DEFAULT_SHARDED_BACKEND,
-                                ENSEMBLE, AsyncServeEngine, EngineConfig,
-                                InFlight, Response, ServeEngine)
+from repro.serve.engine import (DEFAULT_BACKEND, DEFAULT_COALESCED_BACKEND,
+                                DEFAULT_SHARDED_BACKEND, ENSEMBLE,
+                                AsyncServeEngine, EngineConfig, InFlight,
+                                Response, ServeEngine)
 from repro.serve.metrics import (RequestRecord, ServeMetrics,
                                  hardware_figures)
-from repro.serve.replica import (ReplicaPool, RouterState, ensemble_vote,
-                                 program_replica_pool)
+from repro.serve.replica import (CoalescedPool, ReplicaPool, RouterState,
+                                 ensemble_vote, program_replica_pool)
 from repro.serve.stream import (Decision, StreamConfig, StreamServer,
                                 StreamSession, majority_vote)
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher", "Request",
-    "DEFAULT_BACKEND", "DEFAULT_SHARDED_BACKEND", "ENSEMBLE",
+    "DEFAULT_BACKEND", "DEFAULT_COALESCED_BACKEND",
+    "DEFAULT_SHARDED_BACKEND", "ENSEMBLE",
     "AsyncServeEngine", "EngineConfig", "InFlight", "Response",
     "ServeEngine",
     "RequestRecord", "ServeMetrics", "hardware_figures",
-    "ReplicaPool", "RouterState", "ensemble_vote", "program_replica_pool",
+    "CoalescedPool", "ReplicaPool", "RouterState", "ensemble_vote",
+    "program_replica_pool",
     "Decision", "StreamConfig", "StreamServer", "StreamSession",
     "majority_vote",
 ]

@@ -86,6 +86,12 @@ ENSEMBLE = -1      # Response.replica value when every chip voted
 DEFAULT_BACKEND = "analog-pallas"
 DEFAULT_PACKED_BACKEND = "analog-pallas-packed"
 DEFAULT_SHARDED_BACKEND = "analog-jnp"
+# Coalesced pools get the same ladder in their own backend family: the
+# fused weighted-tail kernel, its packed-wire variant, and the GSPMD
+# jnp path ("coalesced") for class-sharded weights.
+DEFAULT_COALESCED_BACKEND = "coalesced-pallas"
+DEFAULT_COALESCED_PACKED_BACKEND = "coalesced-pallas-packed"
+DEFAULT_COALESCED_SHARDED_BACKEND = "coalesced"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,7 +210,11 @@ class ServeEngine:
         self.clock = clock
         self.metrics = ServeMetrics()
         self.router: RouterState = pool.router()
-        self.state: api.ReplicaStackState = pool.state(tm_cfg)
+        # ReplicaStackState for crossbar pools, CoalescedState for
+        # CoalescedPool — everything downstream goes through the
+        # capability-selected backend, so the engine never branches on
+        # the concrete state type outside selection defaults.
+        self.state = pool.state(tm_cfg)
         if ecfg.packed:
             self.state = self.state.pack()
         self._key = key if key is not None else jax.random.PRNGKey(0)
@@ -214,10 +224,17 @@ class ServeEngine:
         # (preference rejected) is surfaced immediately and accounted per
         # dispatch in ServeMetrics.
         sel_key = None if self._noise_free else self._key
-        prefer = ecfg.backend_preference() or (
-            DEFAULT_SHARDED_BACKEND if self.state.is_sharded
-            else DEFAULT_PACKED_BACKEND if self.state.packed
-            else DEFAULT_BACKEND)
+        if isinstance(self.state, api.CoalescedState):
+            default = (DEFAULT_COALESCED_SHARDED_BACKEND
+                       if self.state.is_sharded
+                       else DEFAULT_COALESCED_PACKED_BACKEND
+                       if self.state.packed
+                       else DEFAULT_COALESCED_BACKEND)
+        else:
+            default = (DEFAULT_SHARDED_BACKEND if self.state.is_sharded
+                       else DEFAULT_PACKED_BACKEND if self.state.packed
+                       else DEFAULT_BACKEND)
+        prefer = ecfg.backend_preference() or default
         self.selection: api.Selection = api.select_backend(
             self.state, key=sel_key, prefer=prefer)
         self.backend: api.Backend = self.selection.backend
@@ -252,9 +269,14 @@ class ServeEngine:
         self.batcher = DynamicBatcher(bcfg, packed=self.packed_io)
         # Pre-sliced single-replica states for routed dispatch (all share
         # one [1, C, L] shape -> one compiled kernel for every chip) and
-        # ONE fused jit'd forward covering backend + argmax/vote.
-        self._slices = [self.state.replica_slice(i)
-                        for i in range(pool.n_replicas)]
+        # ONE fused jit'd forward covering backend + argmax/vote.  A
+        # coalesced pool has exactly one shared chip: every route lands
+        # on the full state.
+        if hasattr(self.state, "replica_slice"):
+            self._slices = [self.state.replica_slice(i)
+                            for i in range(pool.n_replicas)]
+        else:
+            self._slices = [self.state] * pool.n_replicas
         self._fwd = self._build_forward()
         self._next_rid = 0
         self._submitted: List[int] = []
@@ -287,13 +309,16 @@ class ServeEngine:
 
         def fwd(state, lits, key, *, bt):
             opts = dict(kernel_opts, bt=bt) if fused else {}
-            sums_rbm = backend.fn(state, lits, key, **opts)   # [R, B, M]
-            if routing == "ensemble":
-                preds = ensemble_vote(sums_rbm, mode)
-                sums = sums_rbm.sum(axis=0)
-            else:
-                sums = sums_rbm[0]
-                preds = jnp.argmax(sums, axis=-1)
+            sums = backend.fn(state, lits, key, **opts)  # [R,B,M] | [B,M]
+            if sums.ndim == 3:                   # replica-stacked output
+                if routing == "ensemble":
+                    preds = ensemble_vote(sums, mode)
+                    sums = sums.sum(axis=0)
+                else:
+                    sums = sums[0]
+                    preds = jnp.argmax(sums, axis=-1)
+            else:            # single-chip [B, M] (coalesced shared pool):
+                preds = jnp.argmax(sums, axis=-1)    # ensemble == argmax
             return sums, preds
 
         return jax.jit(fwd, static_argnames=("bt",))
@@ -323,6 +348,33 @@ class ServeEngine:
         pool = program_replica_pool(tm.include_mask(ta_state, tm_cfg),
                                     k_prog, n_replicas, vcfg, icfg)
         return cls(pool, tm_cfg, ecfg, key=k_serve, clock=clock,
+                   mesh=mesh, rules=rules)
+
+    @classmethod
+    def from_coalesced(
+        cls,
+        ta_state: jax.Array,
+        weights: jax.Array,
+        cfg,                             # CoalescedConfig
+        *,
+        ecfg: EngineConfig = EngineConfig(),
+        key: jax.Array | None = None,
+        clock: Callable[[], float] = time.monotonic,
+        mesh=None,
+        rules=None,
+    ) -> "ServeEngine":
+        """Serve a trained coalesced model: one shared clause pool, the
+        weighted digital tail as the combine matrix.
+
+        The engine surface is unchanged — submit/pump/drain, streaming
+        sessions, metrics — only the pool behind it is a single-chip
+        :class:`~repro.serve.replica.CoalescedPool`.  A ``mesh`` shards
+        the ``[C, M]`` weights class axis (class-parallel GSPMD path,
+        backend ``"coalesced"``)."""
+        from repro.serve.replica import CoalescedPool
+        pool = CoalescedPool(ta_state=jnp.asarray(ta_state),
+                             weights=jnp.asarray(weights), cfg=cfg)
+        return cls(pool, cfg, ecfg, key=key, clock=clock,
                    mesh=mesh, rules=rules)
 
     # --------------------------------------------------------------- intake

@@ -39,8 +39,9 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.api.states import ReplicaStackState
+from repro.api.states import CoalescedState, ReplicaStackState
 from repro.core import variations as var
+from repro.core.coalesced import CoalescedConfig
 from repro.core.imbue import IMBUEConfig, ProgrammedCrossbar
 from repro.core.mapping import CrossbarMapping
 from repro.core.tm import TMConfig
@@ -155,6 +156,84 @@ class ReplicaPool:
 jax.tree_util.register_pytree_with_keys(
     ReplicaPool, ReplicaPool.tree_flatten_with_keys,
     ReplicaPool.tree_unflatten, ReplicaPool.tree_flatten)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoalescedPool:
+    """ONE shared coalesced clause pool behind the serving engine.
+
+    The coalesced architecture's capacity story (paper §V / IMPACT) is
+    the mirror image of replica scaling: instead of R chips each holding
+    M per-class clause banks, a single crossbar's clause pool serves all
+    M classes through per-(clause, class) weights in the digital tail.
+    The pool therefore presents the same duck-typed surface
+    ``ServeEngine`` drives (``router()``, ``state()``, ``shard()``,
+    ``n_replicas``, ``include``, ``vcfg``) with ``n_replicas == 1`` —
+    routing degenerates to the single chip, and "ensemble" is just the
+    argmax.  Weighted tails are digital and noise-free, so ``vcfg`` is
+    pinned nominal.
+
+    GSPMD placement: ``shard(mesh)`` splits the ``[C, M]`` ``weights``
+    class axis over the ``replica`` logical axis (class-parallel
+    inference; the shared TA plane replicates) — the coalesced analogue
+    of sharding the ``[R, C, L]`` stack.
+    """
+
+    ta_state: jax.Array             # [C, L] trained TA states
+    weights: jax.Array              # [C, M] per-(clause, class) weights
+    cfg: CoalescedConfig
+
+    def tree_flatten(self):
+        return (self.ta_state, self.weights), (self.cfg,)
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("ta_state"), self.ta_state),
+                 (jax.tree_util.GetAttrKey("weights"), self.weights)),
+                (self.cfg,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ta_state, weights = children
+        return cls(ta_state=ta_state, weights=weights, cfg=aux[0])
+
+    @property
+    def n_replicas(self) -> int:
+        return 1
+
+    @property
+    def vcfg(self) -> var.VariationConfig:
+        """Digital weighted tail: no analog noise model applies."""
+        return var.VariationConfig.nominal()
+
+    @property
+    def include(self) -> jax.Array:
+        """[C, L] bool TA actions (engine hardware-figure accounting)."""
+        return self.ta_state > self.cfg.n_states
+
+    @property
+    def is_sharded(self) -> bool:
+        from repro.distributed.sharding import tree_is_sharded
+        return tree_is_sharded(self)
+
+    def shard(self, mesh, rules=None) -> "CoalescedPool":
+        from repro.distributed.sharding import shard_tree
+        return shard_tree(self, mesh, rules)
+
+    def state(self, cfg: CoalescedConfig | None = None) -> CoalescedState:
+        """The pool as a unified-backend ``CoalescedState``."""
+        if cfg is not None and cfg != self.cfg:
+            raise ValueError("CoalescedPool.state(cfg) must match the "
+                             "pool's own CoalescedConfig")
+        return CoalescedState(ta_state=self.ta_state, weights=self.weights,
+                              cfg=self.cfg)
+
+    def router(self) -> RouterState:
+        return RouterState.create(self.n_replicas)
+
+
+jax.tree_util.register_pytree_with_keys(
+    CoalescedPool, CoalescedPool.tree_flatten_with_keys,
+    CoalescedPool.tree_unflatten, CoalescedPool.tree_flatten)
 
 
 def program_replica_pool(

@@ -57,6 +57,7 @@ def states(small_cfg, random_ta, keys):
     out["digital_packed"] = out["digital"].pack()
     out["crossbar_packed"] = out["crossbar"].pack()
     out["stack_packed"] = out["stack"].pack()
+    out["coalesced_packed"] = out["coalesced"].pack()
     return out
 
 
@@ -64,7 +65,7 @@ def states(small_cfg, random_ta, keys):
 
 @pytest.mark.parametrize("name", ["digital", "crossbar", "stack",
                                   "coalesced", "digital_packed",
-                                  "stack_packed"])
+                                  "stack_packed", "coalesced_packed"])
 def test_state_pytree_roundtrip(states, name):
     s = states[name]
     leaves, treedef = jax.tree_util.tree_flatten(s)
@@ -164,8 +165,10 @@ def test_parity_matrix_all_backends_match_digital_reference(
     # digital-pallas-packed x {digital_packed} = 1,
     # analog{jnp,pallas} x {crossbar, stack} x {unpacked, packed} = 8,
     # analog-pallas-packed x {crossbar_packed, stack_packed} = 2,
-    # coalesced x 1  ->  16 (state, backend) cells
-    assert checked >= 16
+    # coalesced{,-pallas} x {coalesced, coalesced_packed} = 4,
+    # coalesced-pallas-packed x {coalesced_packed} = 1
+    #   ->  20 (state, backend) cells
+    assert checked >= 20
 
 
 def test_predict_matches_digital_argmax(states, random_ta, small_cfg,

@@ -1,17 +1,35 @@
-"""Coalesced TM tests (paper §V future work, arXiv:2108.07594)."""
+"""Coalesced TM tests (paper §V future work, arXiv:2108.07594).
+
+Training still drives ``core.coalesced`` directly (there is no training
+entry in the serving API), but every INFERENCE assertion goes through
+the unified ``repro.api`` surface — ``select_backend`` +
+``api.class_sums``/``api.predict`` — so these tests exercise the same
+capability-dispatched path production serves on, across the whole
+coalesced backend family (jnp, fused Pallas, packed wire).
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import coalesced as co
+from repro.core import tm
 from repro.data.tm_datasets import noisy_xor
+
+COALESCED_BACKENDS = ("coalesced", "coalesced-pallas",
+                      "coalesced-pallas-packed")
 
 
 @pytest.fixture(scope="module")
 def xor_clean():
     return noisy_xor(jax.random.PRNGKey(0), 3000, 500, label_noise=0.0)
+
+
+def _state(ta, w, cfg, *, packed=False):
+    s = api.CoalescedState(ta_state=ta, weights=w, cfg=cfg)
+    return s.pack() if packed else s
 
 
 def test_learns_clean_xor_with_half_the_clauses(xor_clean):
@@ -21,9 +39,30 @@ def test_learns_clean_xor_with_half_the_clauses(xor_clean):
     ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
     ta, w = co.fit(ta, w, jax.random.PRNGKey(2), xtr, ytr, cfg,
                    epochs=20, batch_size=16)
-    assert float(co.accuracy(ta, w, xte, yte, cfg)) >= 0.98
+    # accuracy through the unified API — the capability-selected backend
+    preds = np.asarray(api.predict(_state(ta, w, cfg), xte))
+    assert (preds == np.asarray(yte)).mean() >= 0.98
     # the shared pool is HALF the vanilla TA-cell budget (24 clauses)
     assert cfg.n_ta == 12 * 24
+
+
+def test_trained_model_served_identically_by_every_backend(xor_clean):
+    """The whole coalesced backend family agrees bit-for-bit on a
+    TRAINED model (ragged real weights, not synthetic ones)."""
+    xtr, ytr, xte, _ = xor_clean
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=8, n_features=12,
+                             n_states=100)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    ta, w = co.fit(ta, w, jax.random.PRNGKey(2), xtr[:512], ytr[:512],
+                   cfg, epochs=3, batch_size=16)
+    lits = tm.literals(xte[:32])
+    ref = np.asarray(api.class_sums(_state(ta, w, cfg), lits,
+                                    backend="coalesced"))
+    for backend in COALESCED_BACKENDS:
+        packed = "packed" in backend
+        got = np.asarray(api.class_sums(_state(ta, w, cfg, packed=packed),
+                                        lits, backend=backend))
+        np.testing.assert_array_equal(got, ref, err_msg=backend)
 
 
 def test_weights_specialize_by_class(xor_clean):
@@ -52,22 +91,94 @@ def test_state_and_weight_bounds(xor_clean):
     assert int(jnp.abs(w).max()) <= cfg.max_weight
 
 
-def test_forward_is_weighted_clause_sum(xor_clean):
+@pytest.mark.parametrize("backend", COALESCED_BACKENDS)
+def test_forward_is_weighted_clause_sum(xor_clean, backend):
+    """Every backend's sums == fired clauses @ W, computed from first
+    principles — through ``api.class_sums``, not ``core.coalesced``."""
     xtr, *_ = xor_clean
     cfg = co.CoalescedConfig(n_classes=3, n_clauses=6, n_features=12)
     ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
     w = w.at[:, 1].set(-2)
-    from repro.core.tm import literals
-    cls = co.clause_outputs(ta, literals(xtr[:16]), cfg)
-    want = cls.astype(jnp.int32) @ w
-    got = co.forward(ta, w, xtr[:16], cfg)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    cls = co.clause_outputs(ta, tm.literals(xtr[:16]), cfg)
+    want = np.asarray(cls.astype(jnp.int32) @ w)
+    state = _state(ta, w, cfg, packed="packed" in backend)
+    got = api.class_sums(state, tm.literals(xtr[:16]), backend=backend)
+    np.testing.assert_array_equal(np.asarray(got), want)
 
 
-def test_empty_clauses_masked_at_inference():
+@pytest.mark.parametrize("backend", COALESCED_BACKENDS)
+def test_empty_clauses_masked_at_inference(backend):
     cfg = co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4)
     ta = jnp.full((4, 8), cfg.n_states, jnp.int16)   # all exclude
     w = jnp.ones((4, 2), jnp.int32)
-    x = jnp.ones((3, 4), jnp.uint8)
-    sums = co.forward(ta, w, x, cfg)
+    lits = tm.literals(jnp.ones((3, 4), jnp.uint8))
+    state = _state(ta, w, cfg, packed="packed" in backend)
+    sums = api.class_sums(state, lits, backend=backend)
     np.testing.assert_array_equal(np.asarray(sums), 0)
+
+
+# ------------------------------------------------- selection + gating
+
+def test_selection_ladder_for_coalesced_states():
+    """Priority order: packed state -> packed kernel; unpacked state ->
+    fused kernel; the packed backend is predicate-gated exactly like the
+    analog packed backends (never offered an unpacked state)."""
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(0), cfg)
+    state = _state(ta, w, cfg)
+    sel = api.select_backend(state)
+    assert sel.backend.name == "coalesced-pallas" and not sel.fell_back
+    sel_p = api.select_backend(state.pack())
+    assert sel_p.backend.name == "coalesced-pallas-packed"
+    assert not sel_p.fell_back
+    # explicit preference for the packed kernel on an UNPACKED state
+    # falls back loudly instead of crashing in the kernel
+    sel_bad = api.select_backend(state, prefer="coalesced-pallas-packed")
+    assert sel_bad.fell_back
+    assert "coalesced-pallas-packed" in sel_bad.fallback_reason
+
+
+def test_required_capabilities_gate_analog_backends_out():
+    """A coalesced state requires CAP_COALESCED, so none of the
+    digital/analog backends can be selected for it, even by name."""
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(0), cfg)
+    state = _state(ta, w, cfg)
+    assert api.CAP_COALESCED in api.required_capabilities(state)
+    sel = api.select_backend(state, prefer="analog-pallas")
+    assert sel.fell_back and sel.backend.name.startswith("coalesced")
+
+
+# -------------------------------------------------- config validation
+
+def test_config_rejects_single_class():
+    with pytest.raises(ValueError, match="n_classes must be >= 2"):
+        co.CoalescedConfig(n_classes=1, n_clauses=4, n_features=4)
+
+
+def test_config_rejects_max_weight_overflowing_state_dtype():
+    with pytest.raises(ValueError, match="does not fit state_dtype"):
+        co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4,
+                           state_dtype=jnp.int8, n_states=10,
+                           max_weight=1000)
+
+
+def test_config_rejects_states_overflowing_state_dtype():
+    with pytest.raises(ValueError, match="TA states span"):
+        co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4,
+                           state_dtype=jnp.int8, n_states=127)
+
+
+def test_config_rejects_degenerate_sizes():
+    with pytest.raises(ValueError, match="must both be >= 1"):
+        co.CoalescedConfig(n_classes=2, n_clauses=0, n_features=4)
+    with pytest.raises(ValueError, match="max_weight must be >= 1"):
+        co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4,
+                           max_weight=0)
+
+
+def test_valid_config_still_constructs():
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=4, n_features=4,
+                             state_dtype=jnp.int8, n_states=50,
+                             max_weight=100)
+    assert cfg.n_ta == 4 * 8

@@ -5,9 +5,14 @@ to ``tm.forward`` — but if the *reference itself* drifted (a semantics
 change in ``core/tm.py``, a jax upgrade changing a kernel's rounding,
 all backends drifting together), the matrix would stay green while
 every committed result silently changed.  This suite closes that hole:
-``tests/golden/backends_v1.json`` carries the class sums + preds of a
+``tests/golden/backends_v2.json`` carries the class sums + preds of a
 fixed seed/model/batch, and EVERY registered backend must reproduce
-them bit-for-bit at ``VariationConfig.nominal()``.
+them bit-for-bit at ``VariationConfig.nominal()``.  v2 (ISSUE 6) adds
+the coalesced family (``coalesced-pallas``/``coalesced-pallas-packed``
+and the packed coalesced state) and a ``backend_coverage`` map —
+{backend name: [golden states it accepts]} — that the registry-coverage
+meta-test (``test_registry_coverage.py``) checks against the live
+registry, so registering a backend without golden coverage fails CI.
 
 The golden inputs (include mask, request batch) are recreated from
 seeds and guarded by committed SHA-256 digests, so a failure is
@@ -18,6 +23,12 @@ really drifted.
 Regenerate (deliberately, in a PR that explains why):
 
   PYTHONPATH=src python tests/test_golden.py --regen
+
+Regeneration recomputes the sums from the seeded model AND rebuilds the
+``backend_coverage`` map from the registry at regen time; bump the
+filename version (v1 -> v2 -> ...) when the *schema* or the covered
+backend set changes, so a stale checkout fails loudly instead of
+validating against the wrong bar.
 """
 
 import hashlib
@@ -38,7 +49,7 @@ from repro.core.variations import VariationConfig
 from repro.kernels import ops
 
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                           "golden", "backends_v1.json")
+                           "golden", "backends_v2.json")
 
 # Fixed golden workload.  Changing ANY of these constants invalidates
 # the committed file — regenerate in the same commit.
@@ -84,7 +95,16 @@ def golden_states(cfg, inc, ta):
     states["digital_packed"] = states["digital"].pack()
     states["crossbar_packed"] = states["crossbar"].pack()
     states["stack_packed"] = states["stack"].pack()
+    states["coalesced_packed"] = states["coalesced"].pack()
     return states
+
+
+def backend_coverage(states):
+    """{backend name: sorted golden-state names it accepts} over the
+    LIVE registry — committed into the golden file so the coverage
+    meta-test can diff it against a future registry."""
+    return {b.name: sorted(n for n, s in states.items() if b.accepts(s))
+            for b in api.list_backends()}
 
 
 def compute_golden():
@@ -99,6 +119,7 @@ def compute_golden():
         "batch_sha256": _sha(np.asarray(x)),
         "class_sums": sums.astype(int).tolist(),
         "preds": np.argmax(sums, axis=-1).astype(int).tolist(),
+        "backend_coverage": backend_coverage(golden_states(cfg, inc, ta)),
     }
 
 
@@ -167,7 +188,9 @@ def test_every_registered_backend_reproduces_golden(golden):
                         np.argmax(stacked[r], axis=-1), want_preds,
                         err_msg=f"{backend.name}/{name}")
             checked += 1
-    assert checked >= 16, f"only {checked} (backend, state) cells ran"
+    # digital family 5 + analog family 10 + coalesced family 5 cells
+    # (see test_api.py's parity-matrix census).
+    assert checked >= 20, f"only {checked} (backend, state) cells ran"
 
 
 def test_predict_entrypoint_matches_golden(golden):
@@ -177,7 +200,7 @@ def test_predict_entrypoint_matches_golden(golden):
     states = golden_states(cfg, inc, ta)
     want = np.asarray(golden["preds"])
     for name in ("digital", "crossbar", "stack", "coalesced",
-                 "stack_packed"):
+                 "stack_packed", "coalesced_packed"):
         got = np.asarray(api.predict(states[name], x))
         np.testing.assert_array_equal(got, want, err_msg=name)
 

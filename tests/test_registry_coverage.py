@@ -1,0 +1,96 @@
+"""Registry-coverage meta-test (ISSUE 6): every registered backend is
+locked by BOTH regression bars, with zero exemptions.
+
+The golden suite (``test_golden.py``) and the parity matrix
+(``test_api.py``) each iterate the registry — but iteration only covers
+backends that *accept some state the fixtures build*.  A backend
+registered with a brand-new state type would be skipped by both loops
+and ship completely untested, with every suite green.  This module
+closes that hole:
+
+* every ``api.list_backends()`` entry must appear in the committed
+  golden file's ``backend_coverage`` map with at least one covered
+  state (golden bar), and
+* must accept at least one state of the canonical parity fixture
+  rebuilt from the live code (parity bar), and the accepted set must
+  match what the golden file recorded — a coverage *change* (state
+  gained or lost) forces a deliberate golden regen.
+
+There is no exemption list on purpose.  If a backend genuinely cannot
+be golden-tested, that is a design problem to fix in the fixture, not
+to waive here.
+"""
+
+import json
+import os
+
+import pytest
+
+import test_golden
+from repro import api
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(test_golden.GOLDEN_PATH), (
+        f"missing {test_golden.GOLDEN_PATH} — regenerate with "
+        "`PYTHONPATH=src python tests/test_golden.py --regen`")
+    with open(test_golden.GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def golden_states():
+    cfg, inc, ta, _ = test_golden.golden_model()
+    return test_golden.golden_states(cfg, inc, ta)
+
+
+def test_golden_file_carries_coverage_map(golden):
+    """Schema guard: v2 golden files commit the coverage map."""
+    cov = golden.get("backend_coverage")
+    assert isinstance(cov, dict) and cov, (
+        "golden file has no backend_coverage map — regenerate "
+        "(`python tests/test_golden.py --regen`)")
+
+
+def test_every_backend_has_golden_coverage(golden):
+    """FAIL if any registered backend lacks a golden entry.  No
+    exemptions: registering a backend obligates covering it."""
+    cov = golden["backend_coverage"]
+    missing = [b.name for b in api.list_backends()
+               if not cov.get(b.name)]
+    assert not missing, (
+        f"backends registered without golden coverage: {missing}; "
+        "extend test_golden.golden_states so they accept a golden "
+        "state, then regenerate the golden file")
+
+
+def test_every_backend_has_parity_row(golden_states):
+    """FAIL if any registered backend accepts none of the canonical
+    parity-fixture states — it would silently drop out of BOTH
+    registry-iterating suites."""
+    uncovered = [b.name for b in api.list_backends()
+                 if not any(b.accepts(s) for s in golden_states.values())]
+    assert not uncovered, (
+        f"backends with no parity-matrix row: {uncovered}")
+
+
+def test_committed_coverage_matches_live_registry(golden, golden_states):
+    """The committed map and the live registry must agree exactly —
+    both a NEW backend (absent from the file) and a coverage change on
+    an existing one (a predicate or state_types edit) force a
+    deliberate golden regeneration in the same PR."""
+    live = test_golden.backend_coverage(golden_states)
+    assert live == golden["backend_coverage"], (
+        "live registry coverage diverged from the committed golden "
+        "map; regenerate deliberately: "
+        "`PYTHONPATH=src python tests/test_golden.py --regen`")
+
+
+def test_no_stale_backends_in_golden(golden):
+    """The committed map must not name backends that no longer exist
+    (a rename would otherwise leave the old bar dangling forever)."""
+    registered = {b.name for b in api.list_backends()}
+    stale = sorted(set(golden["backend_coverage"]) - registered)
+    assert not stale, (f"golden coverage names unregistered backends: "
+                       f"{stale}; regenerate the golden file")

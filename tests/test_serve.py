@@ -5,6 +5,7 @@ The digital TM (``core/tm.py``) is the oracle throughout: with
 bit-for-bit (the paper's zero-variation equivalence).
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -431,3 +432,88 @@ def test_metrics_accounting(small_cfg, random_ta, keys):
     hw = s["hardware"]
     assert hw["latency_ns"] == pytest.approx(60.0)
     assert hw["energy_nj_per_dp"] > 0 and hw["top_j_inv"] > 0
+
+
+# -------------------------------------------- coalesced pools (ISSUE 6)
+
+def _coalesced_model(m=4, c=24, f=32):
+    from repro.core.coalesced import CoalescedConfig
+    cfg = CoalescedConfig(n_classes=m, n_clauses=c, n_features=f,
+                          n_states=100)
+    key = jax.random.PRNGKey(11)
+    inc = jax.random.bernoulli(key, 0.08, (c, cfg.n_literals))
+    ta = jnp.where(inc, cfg.n_states + 1, cfg.n_states).astype(
+        cfg.state_dtype)
+    w = jax.random.randint(jax.random.PRNGKey(12), (c, m), -5, 6,
+                           jnp.int32)
+    return cfg, ta, w
+
+
+@pytest.mark.parametrize("engine_cls", [ServeEngine, AsyncServeEngine])
+def test_coalesced_engine_matches_offline_forward(engine_cls):
+    """A coalesced engine serves bit-exactly the offline weighted
+    forward, on the packed fused kernel by default, with no fallback."""
+    import warnings
+    from repro.core import coalesced as co
+    cfg, ta, w = _coalesced_model()
+    x = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(13), 0.4, (20, cfg.n_features)), dtype=np.uint8)
+    ref = np.asarray(co.forward(ta, w, jnp.asarray(x), cfg))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")           # any fallback = failure
+        eng = engine_cls.from_coalesced(ta, w, cfg)
+    eng.submit_many(list(x))
+    resps = eng.drain()
+    np.testing.assert_array_equal(
+        np.stack([r.class_sums for r in resps]), ref)
+    assert [r.pred for r in resps] == list(np.argmax(ref, axis=-1))
+    s = eng.summary()
+    assert s["backend"] == "coalesced-pallas-packed"
+    assert s["packed_io"] and s["forward_fallbacks"] == []
+    assert s["n_replicas"] == 1
+    assert s["hardware"]["energy_nj_per_dp"] > 0
+
+
+def test_coalesced_engine_unpacked_and_ensemble_routing():
+    """packed=False lands on the unpacked fused kernel; 'ensemble'
+    routing over the single shared chip degenerates to the argmax."""
+    from repro.core import coalesced as co
+    cfg, ta, w = _coalesced_model()
+    x = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(14), 0.4, (12, cfg.n_features)), dtype=np.uint8)
+    ref = np.asarray(co.forward(ta, w, jnp.asarray(x), cfg))
+    eng = ServeEngine.from_coalesced(
+        ta, w, cfg, ecfg=EngineConfig(routing="ensemble", packed=False))
+    eng.submit_many(list(x))
+    resps = eng.drain()
+    assert eng.summary()["backend"] == "coalesced-pallas"
+    assert [r.pred for r in resps] == list(np.argmax(ref, axis=-1))
+
+
+def test_coalesced_pool_surface_and_pytree():
+    """CoalescedPool presents the ReplicaPool duck-type the engine
+    drives, and survives tree_map with its config intact."""
+    from repro.serve import CoalescedPool
+    cfg, ta, w = _coalesced_model()
+    pool = CoalescedPool(ta_state=ta, weights=w, cfg=cfg)
+    assert pool.n_replicas == 1
+    assert not (pool.vcfg.c2c or pool.vcfg.csa_offset or pool.vcfg.d2d)
+    assert pool.include.shape == (cfg.n_clauses, cfg.n_literals)
+    assert pool.router().n_replicas == 1
+    st = pool.state()
+    assert st.cfg == cfg and st.n_classes == cfg.n_classes
+    pool2 = jax.tree_util.tree_map(lambda a: a, pool)
+    assert type(pool2) is CoalescedPool and pool2.cfg == cfg
+    with pytest.raises(ValueError, match="must match"):
+        import dataclasses as _dc
+        pool.state(_dc.replace(cfg, n_states=50))
+
+
+def test_coalesced_engine_explicit_jnp_backend_no_fallback():
+    """Pinning the GSPMD jnp path by name is honoured (it satisfies the
+    capability floor), and the wire format follows the selection."""
+    cfg, ta, w = _coalesced_model()
+    eng = ServeEngine.from_coalesced(
+        ta, w, cfg, ecfg=EngineConfig(backend="coalesced"))
+    assert eng.backend.name == "coalesced"
+    assert not eng.selection.fell_back and not eng.packed_io

@@ -244,3 +244,58 @@ def test_async_overlap_metrics_on_mesh():
         print("OK async mesh", max(seen))
     """)
     assert "OK async mesh" in out
+
+
+def test_coalesced_sharded_engine_class_parallel():
+    """Coalesced GSPMD (ISSUE 6): a CoalescedPool sharded over the
+    replica mesh axis splits the [C, M] weight plane class-parallel,
+    replicates the shared TA plane, requires CAP_SHARDED (so the jnp
+    ``coalesced`` backend is the quiet default), and serves sums
+    bit-identical to the single-device engine."""
+    out = run_devices("""
+        from repro.core.coalesced import CoalescedConfig
+        from repro.serve import CoalescedPool
+
+        ccfg = CoalescedConfig(n_classes=8, n_clauses=32, n_features=32,
+                               n_states=100)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+        cinc = jax.random.bernoulli(
+            k1, 0.1, (ccfg.n_clauses, ccfg.n_literals))
+        cta = jnp.where(cinc, ccfg.n_states + 1,
+                        ccfg.n_states).astype(ccfg.state_dtype)
+        w = jax.random.randint(
+            k2, (ccfg.n_clauses, ccfg.n_classes), -ccfg.max_weight,
+            ccfg.max_weight + 1, jnp.int32)
+        mesh = make_replica_mesh(8, 1)
+        pool = CoalescedPool(ta_state=cta, weights=w, cfg=ccfg)
+        sh = pool.shard(mesh, None)
+        assert sh.is_sharded and not pool.is_sharded
+        # class-parallel: the M axis of [C, M] splits over the mesh
+        assert tuple(sh.weights.sharding.spec) == (None, "replica")
+        assert sh.ta_state.sharding.is_fully_replicated
+        # a sharded coalesced state needs CAP_SHARDED -> jnp GSPMD path
+        state = sh.state()
+        assert api.CAP_SHARDED in api.required_capabilities(state)
+        sel = api.select_backend(state)
+        assert sel.backend.name == "coalesced" and not sel.fell_back
+
+        def cserved(mesh_=None):
+            eng = ServeEngine.from_coalesced(
+                cta, w, ccfg,
+                ecfg=EngineConfig(batcher=BCFG), mesh=mesh_)
+            eng.submit_many(list(xs))
+            rs = eng.drain()
+            return (eng, np.array([r.pred for r in rs]),
+                    np.stack([r.class_sums for r in rs]))
+
+        e0, p0, s0 = cserved()
+        e1, p1, s1 = cserved(mesh)
+        assert e1.state.is_sharded and e1.summary()["sharded"] is True
+        assert e1.backend.name == "coalesced"
+        assert not e1.selection.fell_back
+        assert e1.summary()["forward_fallbacks"] == []
+        np.testing.assert_array_equal(s1, s0)
+        np.testing.assert_array_equal(p1, p0)
+        print("OK coalesced sharded")
+    """)
+    assert "OK coalesced sharded" in out

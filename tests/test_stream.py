@@ -161,6 +161,41 @@ def test_streamed_equals_offline_batched(kws, engine_cls, routing):
     np.testing.assert_array_equal(streamed, digital)
 
 
+def test_coalesced_engine_streams_bit_exact(kws):
+    """A coalesced engine serves KWS-6 streaming UNCHANGED (ISSUE 6):
+    StreamServer/StreamSession are state-agnostic, so per-window
+    streamed predictions == offline ``co.predict`` over the same
+    windows, on the packed fused kernel with zero fallbacks."""
+    from repro.core import coalesced as co
+    ccfg = co.CoalescedConfig(n_classes=6, n_clauses=18,
+                              n_features=WINDOW * MELS * BITS,
+                              n_states=100)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    inc = jax.random.bernoulli(k1, 0.1, (ccfg.n_clauses, ccfg.n_literals))
+    ta = jnp.where(inc, ccfg.n_states + 1,
+                   ccfg.n_states).astype(ccfg.state_dtype)
+    w = jax.random.randint(k2, (ccfg.n_clauses, ccfg.n_classes),
+                           -ccfg.max_weight, ccfg.max_weight + 1,
+                           jnp.int32)
+    eng = ServeEngine.from_coalesced(
+        ta, w, ccfg, ecfg=EngineConfig(batcher=BatcherConfig(
+            max_batch=16, bucket_sizes=(8, 16))))
+    assert eng.backend.name == "coalesced-pallas-packed"
+    assert not eng.selection.fell_back
+    server = StreamServer(eng, kws["booleanizer"],
+                          StreamConfig(window=WINDOW, hop=HOP, vote=VOTE))
+    stream = kws["frames"].reshape(-1, MELS)[:60]
+    feed_stream(server, "u", stream, chunk=5)
+    streamed = np.array([d.pred
+                         for d in server.sessions["u"].decisions])
+    sb = StreamingBooleanizer(kws["booleanizer"], WINDOW, HOP)
+    rows = sb.transform_offline(stream)
+    assert len(streamed) == len(rows)
+    offline = np.asarray(co.predict(ta, w, jnp.asarray(rows), ccfg))
+    np.testing.assert_array_equal(streamed, offline)
+    assert eng.summary()["forward_fallbacks"] == []
+
+
 def test_sessions_share_engine_without_crosstalk(kws):
     """Three interleaved sessions on ONE engine: each session's stream
     reproduces its own offline predictions (no cross-wiring inside the
