@@ -1,0 +1,103 @@
+"""Hot-swap quickstart: retrain a live model and promote it through a
+canary — zero downtime, ~30 seconds.
+
+  PYTHONPATH=src python examples/swap_quickstart.py
+
+The deployment story (ISSUE 7): a serving engine is "program once, read
+forever" — until the model drifts.  This demo stands up a live engine
+on a weak model, keeps traffic flowing, then:
+
+1. re-fits incrementally on newly labeled data
+   (``repro.train.OnlineTrainer`` — warm start, a few epochs, seconds);
+2. snapshots the serving pool and arms a canary: one chip programmed
+   from the candidate model rides beside the stable pool and serves a
+   deterministic fraction of LIVE traffic, shadow-scored against the
+   stable pool (``repro.serve.HotSwapper``);
+3. promotes when agreement clears the bar — an atomic between-dispatch
+   pool install; nothing queued or in flight is dropped, every response
+   records which pool version served it.  (Had the canary disagreed,
+   ``rollback()`` restores the snapshot bit-for-bit.)
+
+For the CI-checked version with bit-equality assertions, async serving
+and rollback, see ``repro.launch.retrain`` (``--smoke``).
+"""
+
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.data.tm_datasets import noisy_xor
+from repro.serve import (BatcherConfig, EngineConfig, HotSwapper,
+                         ServeEngine, SwapConfig)
+from repro.train import OnlineTrainer, OnlineTrainerConfig
+
+
+def main():
+    cfg = TMConfig(n_classes=2, clauses_per_class=12, n_features=12,
+                   n_states=100, threshold=15, specificity=3.9)
+    xtr, ytr, xte, yte = noisy_xor(jax.random.PRNGKey(0), 3000, 400)
+    xte_np = np.asarray(xte, np.uint8)
+    yte_np = np.asarray(yte).astype(int)
+
+    # v1: a deliberately under-trained model (few examples, few epochs).
+    trainer = OnlineTrainer(cfg, jax.random.PRNGKey(1),
+                            cfg=OnlineTrainerConfig(epochs=20, batch_size=500))
+    trainer.ingest(np.asarray(xtr[:150], np.uint8), np.asarray(ytr[:150]))
+    v1 = trainer.refit()
+    print(f"trained v{v1.version} on {v1.n_examples} examples "
+          f"(train acc {v1.accuracy:.3f} — 40% of labels are flipped, "
+          "so ~0.6 is the ceiling)")
+
+    # Live engine: 2 chips, d2d variation (per-chip programming draws),
+    # deterministic reads.
+    engine = ServeEngine.from_ta_state(
+        v1.ta_state, cfg, n_replicas=2, key=jax.random.PRNGKey(3),
+        vcfg=VariationConfig(c2c=False, csa_offset=False),
+        ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(32)))
+
+    def serve(n):
+        idx = np.random.default_rng(0).integers(0, len(xte_np), n)
+        rids = [engine.submit(xte_np[i]) for i in idx]
+        engine.pump(force=True)
+        resps = [engine.take(r) for r in rids]
+        acc = float(np.mean([r.pred == yte_np[i]
+                             for r, i in zip(resps, idx)]))
+        vers = sorted({r.version for r in resps})
+        print(f"  served {n} requests at pool version(s) {vers}, "
+              f"accuracy {acc:.3f}")
+
+    print(f"live engine up (pool v{engine.version}):")
+    serve(200)
+
+    # More labeled data arrives; re-fit warm — this is the "seconds, not
+    # a redeploy" path.
+    trainer.ingest(np.asarray(xtr, np.uint8), np.asarray(ytr))
+    v2 = trainer.refit()
+    print(f"retrained -> v{v2.version} on {v2.n_examples} examples "
+          f"(train acc {v2.accuracy:.3f})")
+
+    # Canary rollout on LIVE traffic: snapshot, arm, observe, promote.
+    swapper = HotSwapper(engine, tempfile.mkdtemp(prefix="imbue-swap-"),
+                         SwapConfig(canary_fraction=0.5,
+                                    min_canary_rows=64,
+                                    min_agreement=0.5))
+    swapper.begin(v2.ta_state, jax.random.PRNGKey(9))
+    print(f"canary armed (candidate pool v{engine.pool.version + 1}):")
+    while swapper.decision() == "wait":
+        serve(100)
+    print(f"canary verdict after {swapper.rows()} rows: agreement "
+          f"{swapper.agreement():.3f} -> {swapper.decision()}")
+    if swapper.decision() == "promote":
+        swapper.promote()
+    else:
+        swapper.rollback()        # restores the snapshot bit-for-bit
+    print(f"serving pool is now v{engine.version}:")
+    serve(200)
+    print("swap audit trail:", engine.metrics.swap_events)
+
+
+if __name__ == "__main__":
+    main()

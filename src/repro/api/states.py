@@ -163,6 +163,22 @@ class CrossbarState(_PackedMixin):
     def n_classes(self) -> int:
         return self.tm_cfg.n_classes
 
+    def reprogram(self, include: jax.Array,
+                  key: jax.Array) -> "CrossbarState":
+        """This chip re-programmed with NEW TA actions (ISSUE 7): fresh
+        D2D resistance draws under the same electrical/noise configs.
+        The stale packed include plane is dropped — callers re-``pack()``
+        if they carry the packed wire format."""
+        include = jnp.asarray(include, bool)
+        if include.shape != self.include.shape:
+            raise ValueError(
+                f"reprogram include shape {include.shape} != chip shape "
+                f"{self.include.shape} — hot re-programming keeps the "
+                "crossbar geometry")
+        r_mem = var.sample_device_resistance(key, include, self.vcfg)
+        return dataclasses.replace(self, r_mem=r_mem, include=include,
+                                   include_packed=None)
+
 
 @dataclasses.dataclass(frozen=True)
 class ReplicaStackState(_PackedMixin):
@@ -233,6 +249,26 @@ class ReplicaStackState(_PackedMixin):
                              tm_cfg=self.tm_cfg, icfg=self.icfg,
                              vcfg=self.vcfg)
 
+    def reprogram(self, include: jax.Array,
+                  key: jax.Array) -> "ReplicaStackState":
+        """All R chips re-programmed with NEW TA actions (ISSUE 7):
+        independent fresh D2D draws per chip — identical key-splitting to
+        :meth:`program`, so re-programming with key K is bit-equal to
+        programming a fresh stack with key K (the hot-swap bit-equality
+        bar leans on this).  The stale packed plane is dropped."""
+        include = jnp.asarray(include, bool)
+        if include.shape != self.include.shape:
+            raise ValueError(
+                f"reprogram include shape {include.shape} != stack shape "
+                f"{self.include.shape} — hot re-programming keeps the "
+                "crossbar geometry")
+        keys = jax.random.split(key, self.n_replicas)
+        r_stack = jax.vmap(
+            lambda k: var.sample_device_resistance(k, include, self.vcfg)
+        )(keys)
+        return dataclasses.replace(self, r_stack=r_stack, include=include,
+                                   include_packed=None)
+
 
 @dataclasses.dataclass(frozen=True)
 class CoalescedState(_PackedMixin):
@@ -281,6 +317,22 @@ class CoalescedState(_PackedMixin):
         defaults to ``distributed.sharding.replica_rules(mesh)``."""
         from repro.distributed.sharding import shard_tree
         return shard_tree(self, mesh, rules)
+
+    def reprogram(self, ta_state: jax.Array,
+                  weights: jax.Array) -> "CoalescedState":
+        """This model re-programmed with freshly trained TA states and
+        class weights (ISSUE 7).  The coalesced tail is digital, so
+        re-programming is deterministic (no D2D draws); the stale packed
+        include plane is dropped."""
+        ta_state = jnp.asarray(ta_state)
+        weights = jnp.asarray(weights)
+        if (ta_state.shape != self.ta_state.shape
+                or weights.shape != self.weights.shape):
+            raise ValueError(
+                f"reprogram shapes {ta_state.shape}/{weights.shape} != "
+                f"model shapes {self.ta_state.shape}/{self.weights.shape}")
+        return dataclasses.replace(self, ta_state=ta_state,
+                                   weights=weights, include_packed=None)
 
 
 _register(DigitalState, ("include", "ta_state", "include_packed"),

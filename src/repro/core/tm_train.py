@@ -196,6 +196,36 @@ def train_step_batch(
     return _clip_state(ta_state.astype(jnp.int32) + total, cfg)
 
 
+def train_epoch(
+    ta_state: jax.Array,
+    key: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    cfg: TMConfig,
+    *,
+    batch_size: int = 0,
+    parallel: bool = False,
+) -> jax.Array:
+    """One shuffled epoch over ``(x, y)``; the unit the host loops on.
+
+    Split out of :func:`fit` (ISSUE 7) so incremental trainers —
+    ``repro.train.online.OnlineTrainer`` re-fits a live model between
+    hot-swaps — can drive epochs with their own stopping/versioning
+    policy while sharing the exact shuffle/step semantics of offline
+    ``fit``.  ``batch_size`` is clamped to the dataset so a small replay
+    buffer still trains (a full-data batch, not a silent no-op)."""
+    n = x.shape[0]
+    bs = min(batch_size, n) if batch_size else n
+    step = train_step_batch if parallel else train_step
+    key, kperm, kstep = jax.random.split(key, 3)
+    perm = jax.random.permutation(kperm, n)
+    xs, ys = x[perm], y[perm]
+    for i in range(0, n - bs + 1, bs):
+        kstep, kb = jax.random.split(kstep)
+        ta_state = step(ta_state, kb, xs[i:i + bs], ys[i:i + bs], cfg)
+    return ta_state
+
+
 def fit(
     ta_state: jax.Array,
     key: jax.Array,
@@ -208,14 +238,8 @@ def fit(
     parallel: bool = False,
 ) -> jax.Array:
     """Convenience host-loop trainer (shuffles every epoch)."""
-    n = x.shape[0]
-    bs = batch_size or n
-    step = train_step_batch if parallel else train_step
     for _ in range(epochs):
-        key, kperm, kstep = jax.random.split(key, 3)
-        perm = jax.random.permutation(kperm, n)
-        xs, ys = x[perm], y[perm]
-        for i in range(0, n - bs + 1, bs):
-            kstep, kb = jax.random.split(kstep)
-            ta_state = step(ta_state, kb, xs[i:i + bs], ys[i:i + bs], cfg)
+        key, kepoch = jax.random.split(key)
+        ta_state = train_epoch(ta_state, kepoch, x, y, cfg,
+                               batch_size=batch_size, parallel=parallel)
     return ta_state

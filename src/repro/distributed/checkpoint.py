@@ -13,19 +13,44 @@ so a crash mid-write can't corrupt the restore point (restart resumes
 from the previous step — the data pipeline is step-indexed, so the replay
 is exact).
 
+Integrity (ISSUE 7): ``save`` records a sha256 content digest over every
+leaf (path + dtype + shape + bytes, in sorted path order) in the
+manifest's ``extra`` block, and ``restore`` re-computes and verifies it.
+A rollback that loads a truncated, bit-rotted, or hand-edited snapshot
+therefore fails LOUDLY instead of silently serving a corrupted pool —
+the live hot-swap path (``serve/swap.py``) leans on this.  Checkpoints
+written before the digest existed still restore (nothing to verify).
+
 On a real multi-host pod each host would write its shard files
 (`process_index` suffix) — single-process here, noted in DESIGN.md.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+DIGEST_KEY = "content_digest"
+
+
+def content_digest(arrays: Dict[str, np.ndarray]) -> str:
+    """sha256 over the flattened leaves: path, dtype, shape and raw bytes
+    in sorted path order — any dropped/reordered/bit-flipped leaf changes
+    the digest."""
+    h = hashlib.sha256()
+    for k in sorted(arrays):
+        a = np.ascontiguousarray(arrays[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 def _flatten(tree) -> dict:
@@ -77,7 +102,9 @@ def save(ckpt_dir: str, step: int, tree: Any, *, extra: dict = None,
     flat = _flatten(tree)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
     np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
-    manifest = {"step": step, "extra": extra or {},
+    extra = dict(extra or {})
+    extra[DIGEST_KEY] = content_digest(arrays)
+    manifest = {"step": step, "extra": extra,
                 "leaves": {k: str(v.dtype) for k, v in arrays.items()}}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -112,6 +139,15 @@ def restore(ckpt_dir: str, step: int, like: Any,
         flat = {k: z[k] for k in z.files}
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
+    expected = manifest.get("extra", {}).get(DIGEST_KEY)
+    if expected is not None:
+        actual = content_digest(flat)
+        if actual != expected:
+            raise ValueError(
+                f"checkpoint {path} failed content-digest verification "
+                f"(manifest {expected[:12]}…, leaves {actual[:12]}…): "
+                "the snapshot is truncated or corrupted — refusing to "
+                "restore it")
     tree = _unflatten_into(like, flat)
     if shardings is not None:
         tree = jax.tree.map(

@@ -83,6 +83,13 @@ def main(argv=None):
     ap.add_argument("--max-in-flight", type=int, default=2,
                     help="async depth: un-collected dispatches allowed")
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot the programmed pool here at startup "
+                         "(digest-verified restore point for live "
+                         "hot-swap rollback — repro.launch.retrain / "
+                         "serve.swap); without it the engine serves "
+                         "exactly as before, just without a rollback "
+                         "point")
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--nominal", action="store_true",
                     help="disable D2D/C2C/CSA variation")
@@ -110,9 +117,14 @@ def main(argv=None):
 
     engine = build_engine(args, cfg, ta)
     bcfg = engine.batcher.cfg
-    print(f"[serve] pool of {args.replicas} crossbars programmed, "
+    print(f"[serve] pool of {args.replicas} crossbars programmed "
+          f"(pool version {engine.version}), "
           f"routing={args.routing}, backend={engine.backend.name}, "
           f"packed_io={engine.packed_io}")
+    if args.checkpoint_dir:
+        from repro.serve import snapshot_pool
+        path = snapshot_pool(engine.pool, args.checkpoint_dir)
+        print(f"[serve] pool v{engine.version} snapshot -> {path}")
     if engine.mesh is not None:
         print(f"[serve] pool sharded over mesh {dict(engine.mesh.shape)} "
               f"({jax.device_count()} devices visible); "

@@ -71,6 +71,10 @@ def main(argv=None):
                     help="force N CPU host devices before jax init")
     ap.add_argument("--async-serve", action="store_true")
     ap.add_argument("--max-in-flight", type=int, default=2)
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot the programmed pool here at startup "
+                         "(rollback point for live hot-swaps; absent = "
+                         "identical serving behavior, no restore point)")
     ap.add_argument("--nominal", action="store_true",
                     help="disable D2D/C2C/CSA variation")
     ap.add_argument("--json", action="store_true")
@@ -113,11 +117,16 @@ def main(argv=None):
     engine = cls.from_ta_state(ta, cfg, n_replicas=args.replicas,
                                key=jax.random.PRNGKey(4), vcfg=vcfg,
                                ecfg=ecfg, mesh=mesh)
-    print(f"[stream] pool of {args.replicas} crossbars, "
+    print(f"[stream] pool of {args.replicas} crossbars "
+          f"(pool version {engine.version}), "
           f"routing={args.routing}, backend={engine.backend.name}, "
           f"shape bucket {engine.shape_key} "
           f"(tiles {(engine.tuning or {}).get('tiles') or 'default'}"
           f"{', lazily measured' if (engine.tuning or {}).get('lazy') else ''})")
+    if args.checkpoint_dir:
+        from repro.serve import snapshot_pool
+        path = snapshot_pool(engine.pool, args.checkpoint_dir)
+        print(f"[stream] pool v{engine.version} snapshot -> {path}")
     if engine.selection.fell_back:
         print(f"[stream] BACKEND FALLBACK: "
               f"{engine.selection.fallback_reason}")

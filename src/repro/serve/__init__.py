@@ -14,11 +14,15 @@ Layers (see each module's docstring):
   figures of merit;
 * ``stream``    — per-session streaming front-end (ISSUE 5): sliding
   windows per client multiplexed onto one shared engine, with
-  majority-vote posterior smoothing and per-session metrics.
+  majority-vote posterior smoothing and per-session metrics;
+* ``swap``      — live retraining hand-off (ISSUE 7): versioned pool
+  snapshots, canary rollout over live traffic, and atomic
+  promote/rollback on a running engine.
 """
 
 from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
-from repro.serve.engine import (DEFAULT_BACKEND, DEFAULT_COALESCED_BACKEND,
+from repro.serve.engine import (CANARY, DEFAULT_BACKEND,
+                                DEFAULT_COALESCED_BACKEND,
                                 DEFAULT_SHARDED_BACKEND, ENSEMBLE,
                                 AsyncServeEngine, EngineConfig, InFlight,
                                 Response, ServeEngine)
@@ -28,10 +32,13 @@ from repro.serve.replica import (CoalescedPool, ReplicaPool, RouterState,
                                  ensemble_vote, program_replica_pool)
 from repro.serve.stream import (Decision, StreamConfig, StreamServer,
                                 StreamSession, majority_vote)
+from repro.serve.swap import (HotSwapper, SwapConfig, hot_swap,
+                              reprogrammed_pool, restore_pool,
+                              snapshot_pool)
 
 __all__ = [
     "Batch", "BatcherConfig", "DynamicBatcher", "Request",
-    "DEFAULT_BACKEND", "DEFAULT_COALESCED_BACKEND",
+    "CANARY", "DEFAULT_BACKEND", "DEFAULT_COALESCED_BACKEND",
     "DEFAULT_SHARDED_BACKEND", "ENSEMBLE",
     "AsyncServeEngine", "EngineConfig", "InFlight", "Response",
     "ServeEngine",
@@ -40,4 +47,6 @@ __all__ = [
     "program_replica_pool",
     "Decision", "StreamConfig", "StreamServer", "StreamSession",
     "majority_vote",
+    "HotSwapper", "SwapConfig", "hot_swap", "reprogrammed_pool",
+    "restore_pool", "snapshot_pool",
 ]

@@ -47,6 +47,32 @@ ISSUE 4 makes the engine device-parallel and latency-hiding:
   blocked-device-wait split and the resulting ``overlap_fraction``.
   The synchronous ``ServeEngine`` collects immediately (single-device
   behavior is unchanged by default).
+
+ISSUE 7 makes the pool *live*: "program once, read forever" becomes
+"re-program live, keep reading".
+
+* **versioned pools** — the pool carries a monotonic model ``version``
+  (bumped by ``pool.reprogram``); every :class:`Response` and
+  :class:`RequestRecord` records the version that served it.  A batch's
+  version is captured once at issue, so no batch ever mixes versions by
+  construction.
+* **atomic install** — :meth:`ServeEngine.install_pool` swaps the
+  serving pool between dispatches: it first :meth:`quiesce`\\ s (waits
+  for in-flight async batches to collect), then replaces the state and
+  replica slices in one step.  Queued-but-undispatched requests are NOT
+  dropped — they serve at the new version.  Routing counters, metrics,
+  the PRNG stream, backend selection and every compiled kernel survive
+  (same shapes and static configs ⇒ jit cache hits), so a swap costs
+  one pipeline drain, not a recompile.
+* **canary dispatch** — :meth:`arm_canary` mounts a freshly programmed
+  candidate chip *beside* the stable pool (the include plane is shared
+  per pool, so a half-reprogrammed pool is not representable — the
+  canary rides as its own single-chip state addressed by the routing
+  override).  A deterministic accumulator routes ``fraction`` of
+  batches to it; each canary batch is additionally shadow-evaluated on
+  the stable pool with the SAME read key, and the argmax agreement
+  lands in ``ServeMetrics`` — the promote/rollback evidence
+  (``serve/swap.py`` orchestrates snapshot → canary → promote/rollback).
 """
 
 from __future__ import annotations
@@ -73,6 +99,7 @@ from repro.serve.replica import ReplicaPool, RouterState, ensemble_vote, \
     program_replica_pool
 
 ENSEMBLE = -1      # Response.replica value when every chip voted
+CANARY = -2        # Response.replica value when the canary chip served
 
 # The engine's default backend preferences: the fused Pallas kernel with
 # single-dispatch replica vmap — packed literal wire when the pool state
@@ -156,8 +183,9 @@ class Response:
     rid: int
     pred: int
     class_sums: np.ndarray           # [M] (summed over chips in ensemble)
-    replica: int                     # serving chip, or ENSEMBLE
+    replica: int                     # serving chip, ENSEMBLE, or CANARY
     latency_s: float
+    version: int = 0                 # pool model generation that served it
 
 
 @dataclasses.dataclass
@@ -178,6 +206,24 @@ class InFlight:
     # from this batch's in-flight window, so overlap_fraction only
     # counts time the host spent doing productive work.
     blocked_snapshot: float = 0.0
+    # Pool model generation serving this batch, captured at issue — a
+    # later install_pool cannot retroactively change it, so no batch
+    # ever mixes versions.
+    version: int = 0
+    # Canary batches only: the stable pool's predictions on the SAME
+    # rows with the SAME read key (device future), for the agreement
+    # comparison at collect time.
+    shadow_preds: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class _Canary:
+    """One armed canary: a dispatchable single-chip state riding beside
+    the stable pool, its candidate version, and its traffic share."""
+
+    state: object                    # [1, C, L]-shaped dispatchable state
+    version: int
+    fraction: float
 
 
 class ServeEngine:
@@ -287,6 +333,10 @@ class ServeEngine:
         self._taken: set = set()
         self._discard: set = set()
         self._blocked_s = 0.0           # cumulative block_until_ready time
+        # Live hot-swap state (ISSUE 7): the armed canary (None when
+        # plain serving) and its deterministic traffic accumulator.
+        self._canary: Optional[_Canary] = None
+        self._canary_acc = 0.0
 
     def _build_forward(self):
         """One jit'd callable per engine: backend forward + prediction.
@@ -504,6 +554,30 @@ class ServeEngine:
         if self.selection.fell_back:
             self.metrics.note_forward_fallback(
                 self.selection.fallback_reason)
+        canary = self._take_canary_turn()
+        if canary is not None:
+            # Canary dispatch: the candidate chip SERVES this batch, and
+            # the stable pool shadow-evaluates the same rows with the
+            # same read key — so argmax disagreement measures the model
+            # change, not a different noise draw.  The stable chip did a
+            # real read, so its router load counter still advances.
+            sums, preds = self._fwd(canary.state, lits, key,
+                                    bt=batch.bucket)
+            if self.ecfg.routing == "ensemble":
+                _, shadow = self._fwd(self.state, lits, key,
+                                      bt=batch.bucket)
+                for i in range(self.pool.n_replicas):
+                    self.router.note_dispatch(i, batch.bucket)
+            else:
+                stable = self.router.pick(self.ecfg.routing)
+                _, shadow = self._fwd(self._slices[stable], lits, key,
+                                      bt=batch.bucket)
+                self.router.note_dispatch(stable, batch.bucket)
+            return InFlight(batch=batch, sums=sums, preds=preds,
+                            replica=CANARY, t_dispatch=t_dispatch,
+                            t_issue=self.clock(),
+                            blocked_snapshot=self._blocked_s,
+                            version=canary.version, shadow_preds=shadow)
         if self.ecfg.routing == "ensemble":
             sums, preds = self._fwd(self.state, lits, key, bt=batch.bucket)
             replica = ENSEMBLE
@@ -517,7 +591,20 @@ class ServeEngine:
         return InFlight(batch=batch, sums=sums, preds=preds,
                         replica=replica, t_dispatch=t_dispatch,
                         t_issue=self.clock(),
-                        blocked_snapshot=self._blocked_s)
+                        blocked_snapshot=self._blocked_s,
+                        version=self.pool.version)
+
+    def _take_canary_turn(self) -> Optional[_Canary]:
+        """Deterministic traffic split: an accumulator hands ~fraction
+        of batches to the armed canary.  No RNG — a fixed request trace
+        replays to the identical canary/stable schedule."""
+        if self._canary is None:
+            return None
+        self._canary_acc += self._canary.fraction
+        if self._canary_acc >= 1.0 - 1e-9:
+            self._canary_acc -= 1.0
+            return self._canary
+        return None
 
     def _collect(self, fl: InFlight) -> None:
         """Block on one in-flight dispatch and materialize Responses.
@@ -530,7 +617,9 @@ class ServeEngine:
         neighbours' blocked waits as overlap.  The remainder of this
         batch's device time shows up as its own blocked wait."""
         t_wait0 = self.clock()
-        jax.block_until_ready((fl.sums, fl.preds))
+        waits = (fl.sums, fl.preds) if fl.shadow_preds is None \
+            else (fl.sums, fl.preds, fl.shadow_preds)
+        jax.block_until_ready(waits)
         t_done = self.clock()
         blocked_elsewhere = self._blocked_s - fl.blocked_snapshot
         overlapped = max(0.0, (t_wait0 - fl.t_issue) - blocked_elsewhere)
@@ -538,6 +627,11 @@ class ServeEngine:
         preds = np.asarray(fl.preds)
         sums = np.asarray(fl.sums)
         batch = fl.batch
+        if fl.shadow_preds is not None:       # canary batch: score the
+            shadow = np.asarray(fl.shadow_preds)  # stable pool's argmax
+            agree = int((preds[:batch.n_valid]       # on the valid rows
+                         == shadow[:batch.n_valid]).sum())
+            self.metrics.note_canary(batch.n_valid, agree)
 
         records = []
         for row, req in enumerate(batch.requests):
@@ -547,12 +641,13 @@ class ServeEngine:
                 self._results[req.rid] = Response(
                     rid=req.rid, pred=int(preds[row]),
                     class_sums=sums[row], replica=fl.replica,
-                    latency_s=t_done - req.t_enqueue)
+                    latency_s=t_done - req.t_enqueue,
+                    version=fl.version)
             records.append(RequestRecord(
                 rid=req.rid, t_enqueue=req.t_enqueue,
                 t_dispatch=fl.t_dispatch, t_done=t_done,
                 bucket=batch.bucket, n_valid=batch.n_valid,
-                replica=fl.replica))
+                replica=fl.replica, version=fl.version))
         # Pad rows (batch.n_padding of them) are dropped here by
         # construction: only batch.requests rows produce Responses.
         assert len(records) == batch.n_valid
@@ -561,6 +656,116 @@ class ServeEngine:
             pack_s=batch.pack_s, wait_s=t_done - t_wait0,
             overlapped_s=overlapped)
 
+    # ------------------------------------------------------------ hot swap
+
+    @property
+    def version(self) -> int:
+        """Monotonic model generation of the serving pool."""
+        return self.pool.version
+
+    @property
+    def canary_active(self) -> bool:
+        return self._canary is not None
+
+    def quiesce(self) -> None:
+        """Wait until no dispatch is in flight (collects async futures).
+
+        Queued-but-undispatched requests stay queued — quiescing is a
+        barrier between dispatches, not a drain."""
+        self._collect_pending()
+
+    def install_pool(self, pool, *, kind: str = "swap") -> None:
+        """Atomically install a new pool version between dispatches.
+
+        The swap is atomic at batch granularity: in-flight dispatches
+        are collected first (they complete at the version captured when
+        they were issued), then the state, replica slices, and pool
+        reference are replaced in one step — the next ``_issue`` serves
+        entirely from the new version.  Nothing queued is dropped:
+        undispatched requests serve post-swap at the new version.
+
+        The new pool must be *hot-compatible* with the serving one —
+        same pool type, replica count, model shape, and static noise /
+        crossbar configs — because backend selection, tuning, and the
+        compiled forward were chosen once at construction and are
+        deliberately KEPT (same shapes + static configs ⇒ every kernel
+        is a jit cache hit; a swap costs one pipeline drain, not a
+        recompile).  Routing counters, metrics, and the engine PRNG
+        stream also survive.  An armed canary is disarmed: its
+        comparison was against the pre-swap stable pool.
+
+        ``kind`` labels the ServeMetrics swap event ("swap" | "promote"
+        | "rollback"); ``serve/swap.py`` passes the latter two."""
+        old = self.pool
+        if type(pool) is not type(old):
+            raise ValueError(
+                f"install_pool: pool type changed "
+                f"({type(old).__name__} -> {type(pool).__name__}); "
+                "build a new engine instead")
+        if pool.n_replicas != old.n_replicas:
+            raise ValueError(
+                f"install_pool: n_replicas changed ({old.n_replicas} -> "
+                f"{pool.n_replicas}); the compiled forward and router "
+                "are sized to the pool — build a new engine instead")
+        if isinstance(pool, ReplicaPool):
+            if pool.include.shape != old.include.shape:
+                raise ValueError(
+                    f"install_pool: model shape changed "
+                    f"({tuple(old.include.shape)} -> "
+                    f"{tuple(pool.include.shape)})")
+            if (pool.icfg, pool.vcfg) != (old.icfg, old.vcfg):
+                raise ValueError(
+                    "install_pool: crossbar/noise config changed; "
+                    "backend selection is static per engine — build a "
+                    "new engine instead")
+        else:                        # CoalescedPool (single shared chip)
+            if pool.cfg != old.cfg:
+                raise ValueError(
+                    "install_pool: coalesced config changed; build a "
+                    "new engine instead")
+            if pool.ta_state.shape != old.ta_state.shape or \
+                    pool.weights.shape != old.weights.shape:
+                raise ValueError("install_pool: model shape changed")
+        self.quiesce()
+        if self.mesh is not None:
+            pool = pool.shard(self.mesh, self.rules)
+        state = pool.state(self.tm_cfg)
+        if self.ecfg.packed:
+            state = state.pack()
+        self.pool = pool
+        self.state = state
+        if hasattr(state, "replica_slice"):
+            self._slices = [state.replica_slice(i)
+                            for i in range(pool.n_replicas)]
+        else:
+            self._slices = [state] * pool.n_replicas
+        self.disarm_canary()
+        self.metrics.note_swap(old.version, pool.version, kind)
+
+    def arm_canary(self, state, version: int, fraction: float) -> None:
+        """Mount a candidate single-chip state beside the stable pool.
+
+        While armed, a deterministic ``fraction`` of batches are served
+        by ``state`` (Response.replica == CANARY, Response.version ==
+        ``version``) and shadow-scored against the stable pool; the
+        agreement tally lands in ``ServeMetrics``.  ``state`` must be
+        dispatchable by this engine's compiled forward — in practice a
+        ``replica_slice``/full state of a pool built with the same
+        shapes and configs (``serve/swap.py`` constructs it)."""
+        if not (0.0 < fraction <= 1.0):
+            raise ValueError(f"canary fraction must be in (0, 1], "
+                             f"got {fraction}")
+        if getattr(self.state, "packed", False) and \
+                not getattr(state, "packed", False):
+            state = state.pack()     # match the serving wire format
+        self._canary = _Canary(state=state, version=int(version),
+                               fraction=float(fraction))
+        self._canary_acc = 0.0
+
+    def disarm_canary(self) -> None:
+        self._canary = None
+        self._canary_acc = 0.0
+
     # ------------------------------------------------------------- metrics
 
     def summary(self, includes: Optional[int] = None) -> Dict:
@@ -568,6 +773,8 @@ class ServeEngine:
         out = self.metrics.summary()
         out["replica_load_rows"] = list(self.router.rows_dispatched)
         out["routing"] = self.ecfg.routing
+        out["pool_version"] = self.version
+        out["canary_active"] = self.canary_active
         out["n_replicas"] = self.pool.n_replicas
         out["backend"] = self.backend.name
         out["backend_preferred"] = self.selection.preferred
@@ -636,7 +843,10 @@ class AsyncServeEngine(ServeEngine):
     @staticmethod
     def _is_ready(fl: InFlight) -> bool:
         try:
-            return bool(fl.preds.is_ready() and fl.sums.is_ready())
+            ready = bool(fl.preds.is_ready() and fl.sums.is_ready())
+            if ready and fl.shadow_preds is not None:
+                ready = bool(fl.shadow_preds.is_ready())
+            return ready
         except AttributeError:      # non-jax arrays (test doubles)
             return True
 

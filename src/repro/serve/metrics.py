@@ -36,6 +36,7 @@ class RequestRecord:
     bucket: int
     n_valid: int
     replica: int
+    version: int = 0        # pool model generation that served it (ISSUE 7)
 
     @property
     def latency_s(self) -> float:
@@ -86,6 +87,18 @@ class ServeMetrics:
         self.host_pack_s = 0.0
         self.device_wait_s = 0.0
         self.overlapped_s = 0.0
+        # Live hot-swap accounting (ISSUE 7): which pool model
+        # generation served each request, every swap/promote/rollback
+        # event, and the canary comparison tallies.  ``canary_rows``
+        # counts requests SERVED by the canary chip; each one is also
+        # shadow-evaluated on the stable pool (same read key), and
+        # ``canary_agree_rows`` counts argmax agreement — the promote /
+        # roll-back evidence.
+        self.requests_by_version: Dict[int, int] = {}
+        self.swap_events: List[dict] = []
+        self.canary_batches = 0
+        self.canary_rows = 0
+        self.canary_agree_rows = 0
         # Streaming sessions (ISSUE 5): per-session keyword-decision
         # aggregates — count, first/last decision clock time, and a
         # BOUNDED window of recent latencies (always-on sessions must
@@ -100,6 +113,30 @@ class ServeMetrics:
         self.fallback_dispatches += 1
         if reason not in self.forward_fallbacks:
             self.forward_fallbacks.append(reason)
+
+    def note_swap(self, from_version: int, to_version: int,
+                  kind: str = "swap") -> None:
+        """Record one pool transition (``kind``: swap | promote |
+        rollback).  The event list is the audit trail a deployment reads
+        back after an incident — bounded by the number of swaps, which
+        is operator-driven, not traffic-driven."""
+        self.swap_events.append({"from_version": int(from_version),
+                                 "to_version": int(to_version),
+                                 "kind": str(kind)})
+
+    def note_canary(self, rows: int, agree_rows: int) -> None:
+        """Account one canary-served batch: ``rows`` valid requests, of
+        which ``agree_rows`` matched the stable pool's argmax."""
+        self.canary_batches += 1
+        self.canary_rows += int(rows)
+        self.canary_agree_rows += int(agree_rows)
+
+    def canary_agreement(self) -> Optional[float]:
+        """Canary-vs-stable argmax agreement so far (None before any
+        canary traffic)."""
+        if not self.canary_rows:
+            return None
+        return self.canary_agree_rows / self.canary_rows
 
     def note_dispatch_timing(self, pack_s: float, wait_s: float,
                              overlapped_s: float) -> None:
@@ -160,6 +197,9 @@ class ServeMetrics:
         self.valid_rows += len(records)
         self.padded_rows += bucket - len(records)
         self.bytes_moved += int(nbytes)
+        for r in records:
+            self.requests_by_version[r.version] = \
+                self.requests_by_version.get(r.version, 0) + 1
         t0 = min(r.t_enqueue for r in records)
         t1 = max(r.t_done for r in records)
         self.t_first = t0 if self.t_first is None else min(self.t_first, t0)
@@ -202,6 +242,18 @@ class ServeMetrics:
         sessions = self.sessions_summary()
         if sessions:                    # streaming only — keep plain
             out["sessions"] = sessions  # serving summaries noise-free
+        # Hot-swap blocks appear only once a swap or canary actually
+        # happened — a plain always-v0 deployment keeps its summary
+        # unchanged (and strictly JSON-serializable: int keys stringify).
+        if self.swap_events or len(self.requests_by_version) > 1:
+            out["requests_by_version"] = {
+                str(v): n for v, n in sorted(
+                    self.requests_by_version.items())}
+            out["swaps"] = list(self.swap_events)
+        if self.canary_batches:
+            out["canary"] = {"batches": self.canary_batches,
+                             "rows": self.canary_rows,
+                             "agreement": self.canary_agreement()}
         out.update(self.latency_ms())
         return out
 

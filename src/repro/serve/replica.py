@@ -86,26 +86,37 @@ class RouterState:
 @dataclasses.dataclass(frozen=True)
 class ReplicaPool:
     """R programmed crossbars sharing one set of TA actions (device state
-    only — routing counters live in ``RouterState``)."""
+    only — routing counters live in ``RouterState``).
+
+    ``version`` (ISSUE 7) is the monotonic model generation of the
+    programmed stack: 0 at first programming, bumped by every
+    :meth:`reprogram`.  It rides as pytree aux_data so placement
+    (``shard``), ``tree_map`` and checkpoint round-trips preserve it —
+    and because only the *pool* carries it (never the dispatchable
+    ``ReplicaStackState``), bumping it can't invalidate the engine's jit
+    cache: a hot-swap re-uses every compiled kernel."""
 
     r_stack: jax.Array              # [R, C, L] programmed resistances (Ω)
     include: jax.Array              # [C, L] bool TA actions
     icfg: IMBUEConfig
     vcfg: var.VariationConfig
+    version: int = 0                # monotonic model generation
 
     def tree_flatten(self):
-        return (self.r_stack, self.include), (self.icfg, self.vcfg)
+        return ((self.r_stack, self.include),
+                (self.icfg, self.vcfg, self.version))
 
     def tree_flatten_with_keys(self):
         return (((jax.tree_util.GetAttrKey("r_stack"), self.r_stack),
                  (jax.tree_util.GetAttrKey("include"), self.include)),
-                (self.icfg, self.vcfg))
+                (self.icfg, self.vcfg, self.version))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         r_stack, include = children
-        icfg, vcfg = aux
-        return cls(r_stack=r_stack, include=include, icfg=icfg, vcfg=vcfg)
+        icfg, vcfg, version = aux
+        return cls(r_stack=r_stack, include=include, icfg=icfg, vcfg=vcfg,
+                   version=version)
 
     @property
     def n_replicas(self) -> int:
@@ -152,6 +163,28 @@ class ReplicaPool:
                                   include=self.include,
                                   mapping=self.mapping, cfg=self.icfg)
 
+    def reprogram(self, include: jax.Array, key: jax.Array) -> "ReplicaPool":
+        """The pool re-programmed with NEW TA actions: all R chips get
+        fresh, independent D2D draws at the same electrical/noise
+        configs, and ``version`` bumps by one (ISSUE 7).
+
+        Routing state is untouched by construction — the router lives in
+        ``RouterState``, outside the pool pytree — and the key-splitting
+        matches :func:`program_replica_pool`, so re-programming with key
+        K yields a stack bit-identical to freshly programming with K
+        (the hot-swap bit-equality bar)."""
+        from repro.core import imbue
+        include = jnp.asarray(include, bool)
+        if include.shape != self.include.shape:
+            raise ValueError(
+                f"reprogram include shape {include.shape} != pool shape "
+                f"{self.include.shape} — hot re-programming keeps the "
+                "crossbar geometry")
+        r_stack = imbue.program_replica_stack(include, key,
+                                              self.n_replicas, self.vcfg)
+        return dataclasses.replace(self, r_stack=r_stack, include=include,
+                                   version=self.version + 1)
+
 
 jax.tree_util.register_pytree_with_keys(
     ReplicaPool, ReplicaPool.tree_flatten_with_keys,
@@ -182,19 +215,22 @@ class CoalescedPool:
     ta_state: jax.Array             # [C, L] trained TA states
     weights: jax.Array              # [C, M] per-(clause, class) weights
     cfg: CoalescedConfig
+    version: int = 0                # monotonic model generation (ISSUE 7)
 
     def tree_flatten(self):
-        return (self.ta_state, self.weights), (self.cfg,)
+        return (self.ta_state, self.weights), (self.cfg, self.version)
 
     def tree_flatten_with_keys(self):
         return (((jax.tree_util.GetAttrKey("ta_state"), self.ta_state),
                  (jax.tree_util.GetAttrKey("weights"), self.weights)),
-                (self.cfg,))
+                (self.cfg, self.version))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         ta_state, weights = children
-        return cls(ta_state=ta_state, weights=weights, cfg=aux[0])
+        cfg, version = aux
+        return cls(ta_state=ta_state, weights=weights, cfg=cfg,
+                   version=version)
 
     @property
     def n_replicas(self) -> int:
@@ -229,6 +265,23 @@ class CoalescedPool:
 
     def router(self) -> RouterState:
         return RouterState.create(self.n_replicas)
+
+    def reprogram(self, ta_state: jax.Array,
+                  weights: jax.Array) -> "CoalescedPool":
+        """The pool re-programmed with freshly trained TA states and
+        class weights; ``version`` bumps by one (ISSUE 7).  The weighted
+        tail is digital, so re-programming is deterministic — no D2D
+        draws, no key."""
+        ta_state = jnp.asarray(ta_state)
+        weights = jnp.asarray(weights)
+        if (ta_state.shape != self.ta_state.shape
+                or weights.shape != self.weights.shape):
+            raise ValueError(
+                f"reprogram shapes {ta_state.shape}/{weights.shape} != "
+                f"pool shapes {self.ta_state.shape}/{self.weights.shape}")
+        return dataclasses.replace(self, ta_state=ta_state,
+                                   weights=weights,
+                                   version=self.version + 1)
 
 
 jax.tree_util.register_pytree_with_keys(

@@ -84,6 +84,10 @@ class Decision:
     keyword: int             # majority vote over the last ``votes`` windows
     votes: int               # how many windows voted (<= StreamConfig.vote)
     latency_s: float         # window enqueue -> served (includes queue wait)
+    version: int = 0         # pool model generation that served the window
+                             # (ISSUE 7: sessions ride through hot-swaps
+                             # with zero dropped windows; this is the
+                             # per-decision evidence of which model read)
 
 
 class StreamSession:
@@ -149,7 +153,8 @@ class StreamSession:
                          pred=int(resp.pred),
                          keyword=majority_vote(self._votes),
                          votes=len(self._votes),
-                         latency_s=resp.latency_s)
+                         latency_s=resp.latency_s,
+                         version=resp.version)
             self._n_decided += 1
             self.decisions.append(d)
             self.engine.metrics.note_decision(self.sid, resp.latency_s,

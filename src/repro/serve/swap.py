@@ -1,0 +1,260 @@
+"""Zero-downtime hot-swap: snapshot → canary → promote / rollback.
+
+ISSUE 7's orchestration layer.  The pieces live elsewhere — versioned
+pools (``serve/replica.py``), canary dispatch + atomic ``install_pool``
+(``serve/engine.py``), digest-verified snapshots
+(``distributed/checkpoint.py``), the incremental trainer
+(``train/online.py``) — this module wires them into the deployment
+story:
+
+  swapper = HotSwapper(engine, ckpt_dir)
+  swapper.begin(trained.ta_state, key)   # snapshot the serving pool,
+                                         # build the candidate pool in
+                                         # FULL, arm one chip of it as
+                                         # the canary
+  ... keep pumping the engine: a deterministic fraction of live
+      batches serve from the canary, shadow-scored against the stable
+      pool in ServeMetrics ...
+  if swapper.decision() == "promote": swapper.promote()
+  else:                               swapper.rollback()
+
+Two invariants the tests hold this module to:
+
+* **bit-equality on promote** — ``begin`` builds the ENTIRE candidate
+  pool up front (the canary chip is a slice of it, not a separate
+  programming), with the same key-split discipline as
+  ``ServeEngine.from_ta_state``.  ``promote`` installs that pre-built
+  pool, so the promoted engine's predictions are bit-identical to a
+  fresh engine built from the same TA state and key.
+* **bit-equality on rollback** — ``begin`` snapshots the serving pool
+  through ``distributed/checkpoint.py`` (sha256 content digest in the
+  manifest); ``rollback`` restores it with digest verification and
+  re-installs, so the rolled-back pool is bit-for-bit the pre-swap
+  pool — never a re-programmed approximation of it.
+
+``hot_swap`` is the one-call variant (no canary): snapshot, re-program,
+install.  Everything here is between-dispatch atomic and drops nothing:
+in-flight batches complete at their issue-time version, queued requests
+serve post-swap at the new one, and streaming sessions ride through
+with zero dropped windows (``tests/test_swap.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tm
+from repro.distributed import checkpoint
+from repro.serve.engine import ServeEngine
+from repro.serve.replica import CoalescedPool, ReplicaPool
+
+# Manifest-extra keys for pool snapshots.  ``version`` is pytree
+# aux_data (deliberately — see ReplicaPool), so the checkpoint tree
+# holds only the array leaves and the version travels in the manifest.
+POOL_VERSION_KEY = "pool_version"
+POOL_KIND_KEY = "pool_kind"
+
+
+def _pool_leaves(pool) -> dict:
+    """The pool's array leaves as a plain checkpoint tree."""
+    if isinstance(pool, ReplicaPool):
+        return {"r_stack": pool.r_stack, "include": pool.include}
+    return {"ta_state": pool.ta_state, "weights": pool.weights}
+
+
+def snapshot_pool(pool, ckpt_dir: str, *, keep: int = 8) -> str:
+    """Save ``pool`` (leaves + version + digest) under ``ckpt_dir``.
+
+    The checkpoint step IS the pool version, so a rollback addresses its
+    restore point by the version it wants back."""
+    kind = "replica" if isinstance(pool, ReplicaPool) else "coalesced"
+    return checkpoint.save(
+        ckpt_dir, pool.version, _pool_leaves(pool),
+        extra={POOL_VERSION_KEY: int(pool.version), POOL_KIND_KEY: kind},
+        keep=keep)
+
+
+def restore_pool(like_pool, ckpt_dir: str, version: int):
+    """The pool saved at ``version``, digest-verified, rebuilt with the
+    static configs of ``like_pool`` (configs are aux_data and must match
+    the serving engine anyway — ``install_pool`` re-validates)."""
+    tree, manifest = checkpoint.restore(ckpt_dir, version,
+                                        _pool_leaves(like_pool))
+    extra = manifest.get("extra", {})
+    saved_version = int(extra.get(POOL_VERSION_KEY, version))
+    if isinstance(like_pool, ReplicaPool):
+        return dataclasses.replace(
+            like_pool, r_stack=tree["r_stack"],
+            include=jnp.asarray(tree["include"], bool),
+            version=saved_version)
+    return dataclasses.replace(
+        like_pool, ta_state=tree["ta_state"], weights=tree["weights"],
+        version=saved_version)
+
+
+def reprogrammed_pool(engine: ServeEngine, ta_state: jax.Array,
+                      key: Optional[jax.Array] = None, *,
+                      weights: Optional[jax.Array] = None):
+    """The engine's pool re-programmed from freshly trained ``ta_state``.
+
+    Key discipline mirrors ``ServeEngine.from_ta_state`` (program key =
+    first half of the split), so the re-programmed pool is bit-identical
+    to the pool a FRESH engine would program from the same state and
+    key — the hot-swap bit-equality bar."""
+    pool = engine.pool
+    if isinstance(pool, CoalescedPool):
+        if weights is None:
+            raise ValueError("a coalesced pool re-programs from "
+                             "(ta_state, weights); pass weights=")
+        return pool.reprogram(ta_state, weights)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k_prog, _ = jax.random.split(key)
+    include = tm.include_mask(jnp.asarray(ta_state), engine.tm_cfg)
+    return pool.reprogram(include, k_prog)
+
+
+def hot_swap(engine: ServeEngine, ta_state: jax.Array,
+             key: Optional[jax.Array] = None, *,
+             weights: Optional[jax.Array] = None,
+             ckpt_dir: Optional[str] = None) -> int:
+    """One-call swap (no canary): optionally snapshot the serving pool,
+    re-program from ``ta_state``, install atomically.  Returns the new
+    pool version.  Use :class:`HotSwapper` when traffic should gate the
+    promotion."""
+    if ckpt_dir is not None:
+        snapshot_pool(engine.pool, ckpt_dir)
+    pool = reprogrammed_pool(engine, ta_state, key, weights=weights)
+    engine.install_pool(pool, kind="swap")
+    return engine.version
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapConfig:
+    """Canary rollout policy."""
+
+    canary_fraction: float = 0.25   # share of live batches the canary
+                                    # serves while armed
+    min_canary_rows: int = 64       # evidence floor before a decision
+    min_agreement: float = 0.9      # promote iff canary-vs-stable argmax
+                                    # agreement >= this
+    keep_snapshots: int = 8         # checkpoint GC depth (rollback window)
+
+    def __post_init__(self):
+        if not (0.0 < self.canary_fraction <= 1.0):
+            raise ValueError(f"canary_fraction must be in (0, 1], got "
+                             f"{self.canary_fraction}")
+        if not (0.0 <= self.min_agreement <= 1.0):
+            raise ValueError(f"min_agreement must be in [0, 1], got "
+                             f"{self.min_agreement}")
+        if self.min_canary_rows < 1:
+            raise ValueError(f"min_canary_rows must be >= 1, got "
+                             f"{self.min_canary_rows}")
+
+
+class HotSwapper:
+    """Snapshot → canary → promote/rollback over one live engine.
+
+    One rollout at a time: :meth:`begin` arms it, live traffic produces
+    the agreement evidence, :meth:`promote` / :meth:`rollback` settle it.
+    The swapper only reads engine metrics and calls the engine's public
+    swap API — it owns no dispatch state, so it composes with sync,
+    async, and streaming serving unchanged."""
+
+    def __init__(self, engine: ServeEngine, ckpt_dir: str,
+                 scfg: SwapConfig = SwapConfig()):
+        self.engine = engine
+        self.ckpt_dir = ckpt_dir
+        self.scfg = scfg
+        self.candidate = None           # pre-built candidate pool
+        self._snapshot_version: Optional[int] = None
+        self._rows0 = 0                 # canary tallies at begin(), so
+        self._agree0 = 0                # agreement scores THIS rollout
+
+    @property
+    def active(self) -> bool:
+        return self.candidate is not None
+
+    def begin(self, ta_state: jax.Array,
+              key: Optional[jax.Array] = None, *,
+              weights: Optional[jax.Array] = None) -> int:
+        """Snapshot the serving pool, build the full candidate pool, arm
+        one chip of it as the canary.  Returns the candidate version."""
+        if self.active:
+            raise RuntimeError(
+                "a canary rollout is already active (candidate version "
+                f"{self.candidate.version}); promote or rollback first")
+        snapshot_pool(self.engine.pool, self.ckpt_dir,
+                      keep=self.scfg.keep_snapshots)
+        self._snapshot_version = self.engine.pool.version
+        self.candidate = reprogrammed_pool(self.engine, ta_state, key,
+                                           weights=weights)
+        # The canary chip is a SLICE of the pre-built candidate (shared
+        # include plane ⇒ a half-reprogrammed pool isn't representable;
+        # and promote() installing the same pre-built pool is what makes
+        # promoted == fresh-built bit-equality structural).
+        cand_state = self.candidate.state(self.engine.tm_cfg)
+        if hasattr(cand_state, "replica_slice"):
+            cand_state = cand_state.replica_slice(0)
+        m = self.engine.metrics
+        self._rows0, self._agree0 = m.canary_rows, m.canary_agree_rows
+        self.engine.arm_canary(cand_state, self.candidate.version,
+                               self.scfg.canary_fraction)
+        return self.candidate.version
+
+    # ------------------------------------------------------------ evidence
+
+    def rows(self) -> int:
+        return self.engine.metrics.canary_rows - self._rows0
+
+    def agreement(self) -> Optional[float]:
+        rows = self.rows()
+        if not rows:
+            return None
+        agree = self.engine.metrics.canary_agree_rows - self._agree0
+        return agree / rows
+
+    def status(self) -> dict:
+        return {"active": self.active,
+                "candidate_version": (self.candidate.version
+                                      if self.active else None),
+                "stable_version": self.engine.version,
+                "rows": self.rows(),
+                "agreement": self.agreement(),
+                "decision": self.decision()}
+
+    def decision(self) -> str:
+        """``"wait"`` until ``min_canary_rows`` of evidence, then
+        ``"promote"`` or ``"rollback"`` by the agreement threshold."""
+        if not self.active:
+            return "idle"
+        if self.rows() < self.scfg.min_canary_rows:
+            return "wait"
+        agreement = self.agreement()
+        return ("promote" if agreement >= self.scfg.min_agreement
+                else "rollback")
+
+    # ------------------------------------------------------------- settle
+
+    def promote(self) -> int:
+        """Install the pre-built candidate pool; returns its version."""
+        if not self.active:
+            raise RuntimeError("no active rollout to promote")
+        pool, self.candidate = self.candidate, None
+        self.engine.install_pool(pool, kind="promote")
+        return self.engine.version
+
+    def rollback(self) -> int:
+        """Restore the pre-swap pool bit-for-bit from its digest-verified
+        snapshot and re-install it; returns its version."""
+        if not self.active:
+            raise RuntimeError("no active rollout to roll back")
+        self.candidate = None
+        self.engine.disarm_canary()
+        pool = restore_pool(self.engine.pool, self.ckpt_dir,
+                            self._snapshot_version)
+        self.engine.install_pool(pool, kind="rollback")
+        return self.engine.version

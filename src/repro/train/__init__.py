@@ -1,0 +1,13 @@
+"""Training drivers.
+
+* ``train_step``  — the transformer LM train step (value_and_grad +
+  optimizer; see ``launch/train.py``);
+* ``online``      — the TM incremental trainer (ISSUE 7): a replay
+  buffer + re-fit loop that emits versioned TA states for live pool
+  hot-swaps (``serve/swap.py``).
+"""
+
+from repro.train.online import (OnlineTrainer, OnlineTrainerConfig,
+                                TrainedVersion)
+
+__all__ = ["OnlineTrainer", "OnlineTrainerConfig", "TrainedVersion"]

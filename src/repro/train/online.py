@@ -1,0 +1,167 @@
+"""Incremental TM trainer: labeled frames in, versioned TA states out.
+
+The live-retraining half of ISSUE 7 ("re-program live, keep reading").
+A deployment that streams KWS-6 audio also accumulates labeled frames —
+corrections, new speakers, drifted noise conditions.  This module turns
+that stream into fresh TA states fast enough to matter:
+
+  trainer.ingest(x, y)   -> bounded replay buffer (newest-wins ring:
+                            an always-on feed must not grow host memory)
+  trainer.refit()        -> a few shuffled epochs of the exact
+                            ``core/tm_train.fit`` semantics over the
+                            buffer (batch-parallel ``train_step_batch``
+                            by default — the variant that re-fits the
+                            paper's KWS-6 model in seconds), starting
+                            WARM from the last trained state
+                         -> a :class:`TrainedVersion`: monotonic version
+                            number + TA state + training evidence
+
+``TrainedVersion.ta_state`` is exactly what ``serve/swap.py`` consumes:
+``HotSwapper.begin`` programs it into a candidate pool, canaries it on
+live traffic, and promotes or rolls back.  The trainer never touches the
+engine — versioning here is about *models*; pool/serving versions are
+owned by the pool (``ReplicaPool.version``).
+
+The PRNG discipline matches offline training: one trainer-owned key,
+split per refit, so a fixed seed plus a fixed ingest trace reproduces
+every emitted state bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import tm, tm_train
+from repro.core.tm import TMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineTrainerConfig:
+    """Re-fit policy knobs."""
+
+    epochs: int = 3           # shuffled epochs per refit (warm start makes
+                              # a few enough; offline-from-scratch uses ~10)
+    batch_size: int = 200     # examples per train step (clamped to buffer)
+    parallel: bool = True     # train_step_batch (fast) vs train_step (exact
+                              # sequential reference semantics)
+    buffer_cap: int = 65536   # replay-buffer rows retained (newest win)
+    min_examples: int = 8     # refuse to refit on fewer buffered rows
+
+    def __post_init__(self):
+        if self.epochs < 1:
+            raise ValueError(f"epochs must be >= 1, got {self.epochs}")
+        if self.buffer_cap < 1:
+            raise ValueError(
+                f"buffer_cap must be >= 1, got {self.buffer_cap}")
+        if self.min_examples < 1:
+            raise ValueError(
+                f"min_examples must be >= 1, got {self.min_examples}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainedVersion:
+    """One emitted model: the hand-off unit trainer -> hot-swap."""
+
+    version: int              # trainer-monotonic (1, 2, ...)
+    ta_state: jax.Array       # [C, L] trained TA states
+    n_examples: int           # buffered rows this refit trained on
+    epochs: int               # epochs run
+    accuracy: float           # train accuracy on the buffer (evidence,
+                              # not a holdout — the canary is the real
+                              # gate before any traffic shifts)
+
+
+class OnlineTrainer:
+    """Replay-buffer re-fit loop emitting versioned TA states.
+
+    >>> trainer = OnlineTrainer(cfg, key)        # cold start, or
+    >>> trainer = OnlineTrainer(cfg, key, init_state=ta)   # warm start
+    >>> trainer.ingest(x_frames, y_labels)
+    >>> tv = trainer.refit()                     # TrainedVersion(1, ...)
+    """
+
+    def __init__(self, tm_cfg: TMConfig, key: jax.Array, *,
+                 init_state: Optional[jax.Array] = None,
+                 cfg: OnlineTrainerConfig = OnlineTrainerConfig()):
+        self.tm_cfg = tm_cfg
+        self.cfg = cfg
+        self._key, k_init = jax.random.split(key)
+        self.ta_state = (jax.numpy.asarray(init_state)
+                         if init_state is not None
+                         else tm.init_ta_state(k_init, tm_cfg))
+        self.version = 0          # last emitted TrainedVersion number
+        self._x: List[np.ndarray] = []     # buffered chunks (concatenated
+        self._y: List[np.ndarray] = []     # lazily at refit)
+        self._n = 0
+
+    # --------------------------------------------------------------- intake
+
+    @property
+    def n_buffered(self) -> int:
+        return self._n
+
+    def ingest(self, x, y) -> int:
+        """Buffer labeled examples (``[B, F]`` Boolean features, ``[B]``
+        int labels); returns the buffered-row count after eviction."""
+        x = np.asarray(x, dtype=np.uint8)
+        y = np.asarray(y, dtype=np.int32)
+        if x.ndim != 2 or y.ndim != 1 or x.shape[0] != y.shape[0]:
+            raise ValueError(
+                f"ingest expects x [B, F] with y [B], got {x.shape} "
+                f"and {y.shape}")
+        self._x.append(x)
+        self._y.append(y)
+        self._n += x.shape[0]
+        # Newest-wins eviction: drop whole oldest chunks, then trim the
+        # boundary chunk, so the buffer never exceeds cap.
+        while self._n > self.cfg.buffer_cap:
+            over = self._n - self.cfg.buffer_cap
+            head = self._x[0].shape[0]
+            if head <= over:
+                self._x.pop(0)
+                self._y.pop(0)
+                self._n -= head
+            else:
+                self._x[0] = self._x[0][over:]
+                self._y[0] = self._y[0][over:]
+                self._n -= over
+        return self._n
+
+    def buffer(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The current replay buffer as two arrays (oldest first)."""
+        if not self._x:
+            f = 0
+            return (np.zeros((0, f), np.uint8), np.zeros((0,), np.int32))
+        if len(self._x) > 1:     # compact so repeated refits don't re-cat
+            self._x = [np.concatenate(self._x)]
+            self._y = [np.concatenate(self._y)]
+        return self._x[0], self._y[0]
+
+    # ---------------------------------------------------------------- refit
+
+    def refit(self) -> TrainedVersion:
+        """Re-fit on the buffer, warm from the last state; emit the next
+        :class:`TrainedVersion`.  Raises if the buffer is too small to
+        train on (``cfg.min_examples``) — an empty-buffer refit would
+        silently emit the old model under a new version number."""
+        if self._n < self.cfg.min_examples:
+            raise ValueError(
+                f"refit needs >= {self.cfg.min_examples} buffered "
+                f"examples, have {self._n}")
+        x, y = self.buffer()
+        self._key, k_fit = jax.random.split(self._key)
+        self.ta_state = tm_train.fit(
+            self.ta_state, k_fit, x, y, self.tm_cfg,
+            epochs=self.cfg.epochs, batch_size=self.cfg.batch_size,
+            parallel=self.cfg.parallel)
+        self.version += 1
+        acc = float(tm.accuracy(self.ta_state, x, y, self.tm_cfg))
+        return TrainedVersion(version=self.version,
+                              ta_state=self.ta_state,
+                              n_examples=int(self._n),
+                              epochs=int(self.cfg.epochs),
+                              accuracy=acc)

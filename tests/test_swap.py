@@ -1,0 +1,457 @@
+"""Live retraining + hot-swap acceptance suite (ISSUE 7).
+
+The bars a zero-downtime re-programming path must clear, asserted on
+REAL engines (sync, async, streaming) rather than mocks:
+
+* **zero drops** — every request submitted before, during, or after a
+  swap gets a Response; streaming sessions ride through with zero
+  dropped windows;
+* **no mixed-version batch** — a batch's pool version is captured at
+  issue, so every batch's Responses carry exactly one version;
+* **bit-equality on promote** — post-swap predictions equal a FRESH
+  engine built from the same TA state and key (d2d-only noise:
+  per-chip programming draws differ, reads are deterministic);
+* **bit-equality on rollback** — the restored pool equals the pre-swap
+  pool array-for-array, via its digest-verified snapshot;
+* **loud corruption** — a tampered snapshot refuses to restore.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tm
+from repro.core.booleanize import fit_quantile
+from repro.core.variations import VariationConfig
+from repro.serve import (CANARY, AsyncServeEngine, BatcherConfig,
+                         CoalescedPool, EngineConfig, HotSwapper,
+                         ServeEngine, StreamConfig, StreamServer,
+                         SwapConfig, hot_swap, program_replica_pool,
+                         restore_pool, snapshot_pool)
+from repro.train import OnlineTrainer, OnlineTrainerConfig
+
+# Per-chip programming (D2D) draws stay on; reads are deterministic —
+# the configuration under which prediction bit-equality is assertable.
+D2D_ONLY = VariationConfig(c2c=False, csa_offset=False)
+
+
+def _ta_like(cfg, key, density=0.12):
+    """A second (distinct) training-free TA state at realistic density."""
+    inc = jax.random.bernoulli(key, density,
+                               (cfg.n_clauses, cfg.n_literals))
+    state = jnp.where(inc, cfg.n_states + 1, cfg.n_states)
+    return state.astype(cfg.state_dtype)
+
+
+def _engine(ta, cfg, *, cls=ServeEngine, n_replicas=2,
+            key=None, routing="round_robin"):
+    ecfg = EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                              bucket_sizes=(8, 16)),
+                        routing=routing)
+    return cls.from_ta_state(
+        ta, cfg, n_replicas=n_replicas,
+        key=key if key is not None else jax.random.PRNGKey(7),
+        vcfg=D2D_ONLY, ecfg=ecfg)
+
+
+def _spy_batches(engine):
+    """Record the set of Response versions per dispatched batch."""
+    seen = []
+    orig = engine.metrics.record_batch
+
+    def spy(records, bucket, nbytes=0):
+        seen.append({r.version for r in records})
+        orig(records, bucket, nbytes)
+
+    engine.metrics.record_batch = spy
+    return seen
+
+
+# ------------------------------------------------------ versioned pools
+
+def test_reprogram_bumps_version_and_matches_fresh_programming(
+        small_cfg, random_ta, keys):
+    inc2 = tm.include_mask(_ta_like(small_cfg, keys["init"]), small_cfg)
+    pool = program_replica_pool(tm.include_mask(random_ta, small_cfg),
+                                keys["program"], 3, D2D_ONLY)
+    assert pool.version == 0
+    new = pool.reprogram(inc2, keys["read"])
+    assert new.version == 1 and pool.version == 0     # frozen original
+    fresh = program_replica_pool(inc2, keys["read"], 3, D2D_ONLY)
+    np.testing.assert_array_equal(np.asarray(new.r_stack),
+                                  np.asarray(fresh.r_stack))
+    np.testing.assert_array_equal(np.asarray(new.include),
+                                  np.asarray(fresh.include))
+    # chaining keeps counting
+    assert new.reprogram(inc2, keys["read"]).version == 2
+
+
+def test_reprogram_rejects_shape_change(small_cfg, random_ta, keys):
+    pool = program_replica_pool(tm.include_mask(random_ta, small_cfg),
+                                keys["program"], 2, D2D_ONLY)
+    bad = jnp.zeros((small_cfg.n_clauses, small_cfg.n_literals + 2), bool)
+    with pytest.raises(ValueError, match="geometry"):
+        pool.reprogram(bad, keys["read"])
+
+
+def test_coalesced_reprogram_versions():
+    from repro.core import coalesced as co
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=8, n_features=12,
+                             n_states=100)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    ta2, w2 = co.init_coalesced(jax.random.PRNGKey(2), cfg)
+    pool = CoalescedPool(ta_state=ta, weights=w, cfg=cfg)
+    new = pool.reprogram(ta2, w2)
+    assert new.version == 1
+    np.testing.assert_array_equal(np.asarray(new.ta_state),
+                                  np.asarray(ta2))
+    with pytest.raises(ValueError, match="shapes"):
+        pool.reprogram(ta2[:, :4], w2)
+
+
+# ------------------------------------------- snapshots (digest-verified)
+
+def test_snapshot_restore_roundtrip_preserves_versions(
+        small_cfg, random_ta, keys, tmp_path):
+    inc = tm.include_mask(random_ta, small_cfg)
+    pool = program_replica_pool(inc, keys["program"], 2, D2D_ONLY)
+    snapshot_pool(pool, str(tmp_path))
+    inc2 = tm.include_mask(_ta_like(small_cfg, keys["init"]), small_cfg)
+    pool1 = pool.reprogram(inc2, keys["read"])
+    snapshot_pool(pool1, str(tmp_path))
+    for want in (pool, pool1):
+        got = restore_pool(pool1, str(tmp_path), want.version)
+        assert got.version == want.version
+        np.testing.assert_array_equal(np.asarray(got.r_stack),
+                                      np.asarray(want.r_stack))
+        np.testing.assert_array_equal(np.asarray(got.include),
+                                      np.asarray(want.include))
+
+
+def test_corrupted_snapshot_refuses_to_restore(small_cfg, random_ta,
+                                               keys, tmp_path):
+    pool = program_replica_pool(tm.include_mask(random_ta, small_cfg),
+                                keys["program"], 2, D2D_ONLY)
+    path = snapshot_pool(pool, str(tmp_path))
+    npz = os.path.join(path, "leaves.npz")
+    with np.load(npz) as z:
+        arrays = {k: np.array(z[k]) for k in z.files}
+    flat = arrays["r_stack"].reshape(-1)
+    flat[0] += 1.0                            # one bit-rotted cell
+    np.savez(npz, **arrays)
+    with pytest.raises(ValueError, match="digest"):
+        restore_pool(pool, str(tmp_path), pool.version)
+
+
+# --------------------------------------------------- engine atomic swap
+
+def test_hot_swap_sync_zero_drops_and_unmixed_batches(small_cfg,
+                                                      random_ta,
+                                                      boolean_batch,
+                                                      keys):
+    engine = _engine(random_ta, small_cfg)
+    batches = _spy_batches(engine)
+    xs = np.asarray(boolean_batch)
+    rids_pre = engine.submit_many(list(xs[:20]))
+    engine.pump(force=True)                   # served at v0
+    rids_queued = engine.submit_many(list(xs[20:32]))   # still queued
+    ta2 = _ta_like(small_cfg, keys["init"])
+    new_v = hot_swap(engine, ta2, keys["read"])
+    assert new_v == engine.version == 1
+    engine.drain()
+    # zero drops: every rid — pre-swap, queued-at-swap — has a Response
+    pre = [engine.result(r) for r in rids_pre]
+    queued = [engine.result(r) for r in rids_queued]
+    assert all(r is not None for r in pre + queued)
+    assert {r.version for r in pre} == {0}
+    # queued-but-undispatched requests serve POST-swap at the new version
+    assert {r.version for r in queued} == {1}
+    # no batch mixed versions
+    assert batches and all(len(s) == 1 for s in batches)
+    summary = engine.summary()
+    assert summary["pool_version"] == 1
+    assert summary["requests_by_version"] == {"0": 20, "1": 12}
+    assert summary["swaps"] == [
+        {"from_version": 0, "to_version": 1, "kind": "swap"}]
+
+
+def test_hot_swap_predictions_bit_equal_fresh_engine(small_cfg,
+                                                     random_ta,
+                                                     boolean_batch,
+                                                     keys):
+    engine = _engine(random_ta, small_cfg)
+    # Two pre-swap batches: the round-robin cursor returns to replica 0,
+    # so live and fresh engines route the probe batches identically.
+    for _ in range(2):
+        engine.submit_many(list(np.asarray(boolean_batch[:8])))
+        engine.drain()
+    ta2 = _ta_like(small_cfg, keys["init"])
+    hot_swap(engine, ta2, keys["read"])
+    fresh = _engine(ta2, small_cfg, key=keys["read"])
+    np.testing.assert_array_equal(np.asarray(engine.pool.r_stack),
+                                  np.asarray(fresh.pool.r_stack))
+    xs = list(np.asarray(boolean_batch))
+
+    def probe(e):
+        rids = e.submit_many(xs)
+        e.drain()
+        return [(e.result(r).pred, e.result(r).replica) for r in rids]
+
+    assert probe(engine) == probe(fresh)
+
+
+def test_async_swap_quiesces_in_flight_then_serves_new_version(
+        small_cfg, random_ta, boolean_batch, keys):
+    engine = _engine(random_ta, small_cfg, cls=AsyncServeEngine)
+    batches = _spy_batches(engine)
+    xs = np.asarray(boolean_batch)
+    rids_a = engine.submit_many(list(xs[:16]))
+    engine.pump(force=True)                   # issued (possibly in flight)
+    rids_b = engine.submit_many(list(xs[16:28]))
+    ta2 = _ta_like(small_cfg, keys["init"])
+    hot_swap(engine, ta2, keys["read"])       # quiesces, installs
+    assert engine.in_flight == 0
+    engine.drain()
+    a = [engine.result(r) for r in rids_a]
+    b = [engine.result(r) for r in rids_b]
+    assert all(r is not None for r in a + b)
+    assert {r.version for r in a} == {0}      # completed at issue version
+    assert {r.version for r in b} == {1}
+    assert all(len(s) == 1 for s in batches)
+
+
+def test_install_pool_rejects_incompatible_pools(small_cfg, random_ta,
+                                                 keys):
+    engine = _engine(random_ta, small_cfg, n_replicas=2)
+    inc = tm.include_mask(random_ta, small_cfg)
+    with pytest.raises(ValueError, match="n_replicas"):
+        engine.install_pool(program_replica_pool(inc, keys["read"], 3,
+                                                 D2D_ONLY))
+    with pytest.raises(ValueError, match="noise config"):
+        engine.install_pool(program_replica_pool(
+            inc, keys["read"], 2, VariationConfig.nominal()))
+    with pytest.raises(ValueError, match="shape"):
+        engine.install_pool(program_replica_pool(
+            inc[:, :-2], keys["read"], 2, D2D_ONLY))
+    from repro.core import coalesced as co
+    ccfg = co.CoalescedConfig(n_classes=2, n_clauses=8, n_features=12,
+                              n_states=100)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), ccfg)
+    with pytest.raises(ValueError, match="type"):
+        engine.install_pool(CoalescedPool(ta_state=ta, weights=w,
+                                          cfg=ccfg))
+
+
+def test_arm_canary_validates_fraction(small_cfg, random_ta):
+    engine = _engine(random_ta, small_cfg)
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError, match="fraction"):
+            engine.arm_canary(engine._slices[0], 1, bad)
+
+
+# -------------------------------------------------------- canary rollout
+
+def test_canary_promote_flow(small_cfg, random_ta, boolean_batch, keys,
+                             tmp_path):
+    engine = _engine(random_ta, small_cfg)
+    batches = _spy_batches(engine)
+    swapper = HotSwapper(engine, str(tmp_path),
+                         SwapConfig(canary_fraction=0.5,
+                                    min_canary_rows=8,
+                                    min_agreement=0.0))
+    ta2 = _ta_like(small_cfg, keys["init"])
+    cand_v = swapper.begin(ta2, keys["read"])
+    assert cand_v == 1 and engine.canary_active
+    assert engine.version == 0                # stable pool still serves
+    xs = np.asarray(boolean_batch)
+    rng = np.random.default_rng(0)
+    resps = []
+    while swapper.decision() == "wait":
+        idx = rng.integers(0, len(xs), 8)
+        rids = engine.submit_many(list(xs[idx]))
+        engine.pump(force=True)
+        resps += [engine.result(r) for r in rids]
+    # the canary SERVED a deterministic share of live traffic
+    canary = [r for r in resps if r.replica == CANARY]
+    stable = [r for r in resps if r.replica != CANARY]
+    assert canary and stable
+    assert {r.version for r in canary} == {cand_v}
+    assert {r.version for r in stable} == {0}
+    assert all(len(s) == 1 for s in batches)  # never mixed in one batch
+    assert swapper.rows() >= 8
+    assert swapper.agreement() is not None
+    assert swapper.decision() == "promote"    # min_agreement=0 always
+    assert swapper.promote() == engine.version == cand_v
+    assert not engine.canary_active and not swapper.active
+    # promoted pool == the pool a fresh engine would program (bit-equal)
+    fresh = _engine(ta2, small_cfg, key=keys["read"])
+    np.testing.assert_array_equal(np.asarray(engine.pool.r_stack),
+                                  np.asarray(fresh.pool.r_stack))
+    summary = engine.summary()
+    assert summary["canary"]["rows"] >= 8
+    assert summary["canary"]["agreement"] == swapper.agreement()
+    assert summary["swaps"][-1]["kind"] == "promote"
+    # post-promote traffic serves at the new version
+    rids = engine.submit_many(list(xs[:8]))
+    engine.drain()
+    assert {engine.result(r).version for r in rids} == {cand_v}
+
+
+def test_canary_rollback_restores_pool_bit_for_bit(small_cfg, random_ta,
+                                                   boolean_batch, keys,
+                                                   tmp_path):
+    engine = _engine(random_ta, small_cfg)
+    stack0 = np.asarray(engine.pool.r_stack).copy()
+    swapper = HotSwapper(engine, str(tmp_path),
+                         SwapConfig(canary_fraction=0.5,
+                                    min_canary_rows=4))
+    swapper.begin(_ta_like(small_cfg, keys["init"]), keys["read"])
+    engine.submit_many(list(np.asarray(boolean_batch[:16])))
+    engine.drain()
+    assert swapper.rollback() == engine.version == 0
+    assert not engine.canary_active and not swapper.active
+    np.testing.assert_array_equal(np.asarray(engine.pool.r_stack), stack0)
+    assert engine.summary()["swaps"][-1]["kind"] == "rollback"
+    # post-rollback traffic serves at the restored version
+    rids = engine.submit_many(list(np.asarray(boolean_batch[:8])))
+    engine.drain()
+    assert {engine.result(r).version for r in rids} == {0}
+
+
+def test_swapper_state_machine(small_cfg, random_ta, keys, tmp_path):
+    engine = _engine(random_ta, small_cfg)
+    swapper = HotSwapper(engine, str(tmp_path))
+    assert swapper.decision() == "idle" and not swapper.active
+    with pytest.raises(RuntimeError, match="promote"):
+        swapper.promote()
+    with pytest.raises(RuntimeError, match="roll back"):
+        swapper.rollback()
+    swapper.begin(_ta_like(small_cfg, keys["init"]), keys["read"])
+    with pytest.raises(RuntimeError, match="already active"):
+        swapper.begin(_ta_like(small_cfg, keys["data"]), keys["read"])
+    status = swapper.status()
+    assert status["active"] and status["candidate_version"] == 1
+    assert status["decision"] == "wait"       # no canary traffic yet
+    swapper.rollback()
+
+
+def test_swap_config_validation():
+    with pytest.raises(ValueError, match="canary_fraction"):
+        SwapConfig(canary_fraction=0.0)
+    with pytest.raises(ValueError, match="min_agreement"):
+        SwapConfig(min_agreement=1.5)
+    with pytest.raises(ValueError, match="min_canary_rows"):
+        SwapConfig(min_canary_rows=0)
+
+
+# ------------------------------------------------- coalesced + streaming
+
+def test_coalesced_engine_hot_swap():
+    from repro.core import coalesced as co
+    cfg = co.CoalescedConfig(n_classes=2, n_clauses=8, n_features=12,
+                             n_states=100)
+    ta, w = co.init_coalesced(jax.random.PRNGKey(1), cfg)
+    ta2, w2 = co.init_coalesced(jax.random.PRNGKey(2), cfg)
+    engine = ServeEngine.from_coalesced(ta, w, cfg)
+    with pytest.raises(ValueError, match="weights"):
+        hot_swap(engine, ta2)                 # coalesced needs weights=
+    assert hot_swap(engine, ta2, weights=w2) == engine.version == 1
+    xs = list(np.asarray(
+        jax.random.bernoulli(jax.random.PRNGKey(3), 0.4, (16, 12)),
+        np.uint8))
+    fresh = ServeEngine.from_coalesced(ta2, w2, cfg)
+    live = [r.pred for r in (engine.submit_many(xs) and engine.drain())]
+    ref = [r.pred for r in (fresh.submit_many(xs) and fresh.drain())]
+    assert live == ref
+
+
+def test_stream_sessions_ride_through_swap(small_cfg, random_ta, keys):
+    """Two live KWS-style sessions keep streaming across a hot swap:
+    zero dropped windows, per-Decision versions step 0 -> 1 exactly
+    once, in stream order."""
+    mels, bits, window, hop = 4, 2, 4, 2
+    assert window * mels * bits == small_cfg.n_features
+    rng = np.random.default_rng(0)
+    booleanizer = fit_quantile(rng.normal(size=(256, mels)), bits=bits)
+    engine = _engine(random_ta, small_cfg)
+    server = StreamServer(engine, booleanizer,
+                          StreamConfig(window=window, hop=hop, vote=3))
+    frames = {s: rng.normal(size=(40, mels)) for s in ("a", "b")}
+    n_windows = 1 + (40 - window) // hop
+
+    def feed_span(lo, hi):
+        for s, f in frames.items():
+            for at in range(lo, hi, hop):
+                server.feed(s, f[at:at + hop])
+            server.pump()
+
+    feed_span(0, 20)
+    server.drain()                            # first half decided at v0
+    hot_swap(engine, _ta_like(small_cfg, keys["init"]), keys["read"])
+    feed_span(20, 40)
+    server.drain()
+    for s in frames:
+        decisions = list(server.sessions[s].decisions)
+        # zero dropped windows: every completed window became a decision
+        assert len(decisions) == n_windows
+        assert [d.index for d in decisions] == list(range(n_windows))
+        versions = [d.version for d in decisions]
+        assert versions == sorted(versions)   # monotonic across the swap
+        assert set(versions) == {0, 1}        # both models actually read
+    assert engine.summary()["swaps"] == [
+        {"from_version": 0, "to_version": 1, "kind": "swap"}]
+
+
+# -------------------------------------------------------- online trainer
+
+def test_online_trainer_versions_and_buffer(small_cfg):
+    x = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(0), 0.4, (48, small_cfg.n_features)), np.uint8)
+    y = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (48,), 0, small_cfg.n_classes), np.int32)
+    trainer = OnlineTrainer(small_cfg, jax.random.PRNGKey(2),
+                            cfg=OnlineTrainerConfig(epochs=1,
+                                                    batch_size=16))
+    with pytest.raises(ValueError, match="refit needs"):
+        trainer.refit()                       # empty buffer
+    with pytest.raises(ValueError, match="ingest expects"):
+        trainer.ingest(x[0], y[:1])           # 1-D features
+    assert trainer.ingest(x, y) == 48
+    tv1 = trainer.refit()
+    assert (tv1.version, tv1.n_examples) == (1, 48)
+    assert tv1.ta_state.shape == (small_cfg.n_clauses,
+                                  small_cfg.n_literals)
+    assert 0.0 <= tv1.accuracy <= 1.0
+    tv2 = trainer.refit()                     # warm start, next version
+    assert tv2.version == 2
+
+
+def test_online_trainer_buffer_evicts_oldest(small_cfg):
+    trainer = OnlineTrainer(small_cfg, jax.random.PRNGKey(0),
+                            cfg=OnlineTrainerConfig(buffer_cap=32))
+    x = np.arange(48, dtype=np.uint8)[:, None].repeat(
+        small_cfg.n_features, axis=1) % 2
+    tags = np.arange(48, dtype=np.int32) % small_cfg.n_classes
+    for lo in range(0, 48, 16):
+        trainer.ingest(x[lo:lo + 16], tags[lo:lo + 16])
+    assert trainer.n_buffered == 32
+    _, ybuf = trainer.buffer()
+    np.testing.assert_array_equal(ybuf, tags[16:])    # newest 32 win
+
+
+def test_online_trainer_seeds_reproduce_states(small_cfg):
+    x = np.asarray(jax.random.bernoulli(
+        jax.random.PRNGKey(0), 0.4, (32, small_cfg.n_features)), np.uint8)
+    y = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(1), (32,), 0, small_cfg.n_classes), np.int32)
+    states = []
+    for _ in range(2):
+        t = OnlineTrainer(small_cfg, jax.random.PRNGKey(5),
+                          cfg=OnlineTrainerConfig(epochs=2,
+                                                  batch_size=16))
+        t.ingest(x, y)
+        states.append(np.asarray(t.refit().ta_state))
+    np.testing.assert_array_equal(states[0], states[1])

@@ -1,10 +1,14 @@
 """End-to-end trainer integration: sharded training with checkpoint /
 crash / auto-resume on an 8-device CPU mesh (the fault-tolerance story
-of launch/train.py, exercised exactly as a pod restart would).
+of launch/train.py, exercised exactly as a pod restart would), plus the
+ISSUE 7 versioned-pool snapshot cycle riding on the same checkpoint
+machinery.
 
-Marked ``slow`` (ISSUE 5 audit): ~2 minutes of subprocess training —
-the CI matrix's fast lane deselects it; the dedicated ``slow`` job and
-the minimal-deps leg still run it on every PR."""
+The subprocess training tests are marked ``slow`` (~2 minutes): the CI
+matrix's fast lane deselects them; the dedicated ``slow`` job and the
+minimal-deps leg still run them on every PR.  The hot-swap smoke at the
+bottom is deliberately NOT slow — the fast lane keeps one end-to-end
+swap-under-serving check."""
 
 import os
 import subprocess
@@ -12,8 +16,6 @@ import sys
 import tempfile
 
 import pytest
-
-pytestmark = pytest.mark.slow
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -29,6 +31,7 @@ def _run_train(args, n_dev=8):
     return out.stdout
 
 
+@pytest.mark.slow
 def test_sharded_train_checkpoint_resume_cycle():
     with tempfile.TemporaryDirectory() as ckpt:
         base = ["--arch", "qwen2-0.5b", "--batch", "8", "--seq", "64",
@@ -50,9 +53,118 @@ def test_sharded_train_checkpoint_resume_cycle():
         assert losses[-1] < losses[0]
 
 
+@pytest.mark.slow
 def test_trainer_single_device_microbatched():
     out = _run_train(["--arch", "zamba2-1.2b", "--steps", "4",
                       "--batch", "4", "--seq", "64",
                       "--microbatches", "2", "--mesh", "none",
                       "--log-every", "1"], n_dev=1)
     assert "step     3" in out
+
+
+@pytest.mark.slow
+def test_pool_snapshot_cycle_across_many_versions():
+    """The serving-pool analogue of the trainer's checkpoint/resume
+    cycle (ISSUE 7): a pool re-programmed through several model
+    generations, snapshotted at each, survives a "restart" — any
+    retained generation restores bit-for-bit with its version, and
+    ``restore_latest`` resumes from the newest like the trainer does."""
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.core.tm import TMConfig
+    from repro.core.variations import VariationConfig
+    from repro.distributed import checkpoint
+    from repro.serve import program_replica_pool, restore_pool, \
+        snapshot_pool
+    from repro.serve.swap import POOL_VERSION_KEY
+
+    cfg = TMConfig(n_classes=4, clauses_per_class=8, n_features=32,
+                   n_states=100)
+    vcfg = VariationConfig(c2c=False, csa_offset=False)
+    keys = jax.random.split(jax.random.PRNGKey(0), 8)
+    inc = np.asarray(jax.random.bernoulli(
+        keys[0], 0.1, (cfg.n_clauses, cfg.n_literals)))
+    with tempfile.TemporaryDirectory() as ckpt:
+        pool = program_replica_pool(inc, keys[1], 2, vcfg)
+        generations = [pool]
+        snapshot_pool(pool, ckpt, keep=4)
+        for gen in range(1, 4):
+            inc = np.asarray(jax.random.bernoulli(
+                keys[2 * gen], 0.1, (cfg.n_clauses, cfg.n_literals)))
+            pool = pool.reprogram(inc, keys[2 * gen + 1])
+            assert pool.version == gen
+            generations.append(pool)
+            snapshot_pool(pool, ckpt, keep=4)
+        # "restart": every retained generation restores bit-for-bit,
+        # version included (version travels in the manifest extra —
+        # it is pytree aux, not a leaf)
+        for want in generations:
+            got = restore_pool(pool, ckpt, want.version)
+            assert got.version == want.version
+            np.testing.assert_array_equal(np.asarray(got.r_stack),
+                                          np.asarray(want.r_stack))
+            np.testing.assert_array_equal(np.asarray(got.include),
+                                          np.asarray(want.include))
+        # resume-from-latest picks the newest generation, like the
+        # trainer's auto-resume
+        assert checkpoint.latest_step(ckpt) == generations[-1].version
+        with open(os.path.join(
+                ckpt, f"step-{pool.version:09d}", "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["extra"][POOL_VERSION_KEY] == pool.version
+        assert "content_digest" in manifest["extra"]
+
+
+def test_live_engine_hot_swap_fast():
+    """Fast-lane swap smoke: a live engine hot-swaps a new model and a
+    rollback restores the old one — the end-to-end path in seconds (the
+    exhaustive bars live in tests/test_swap.py)."""
+    import jax
+    import numpy as np
+
+    from repro.core.tm import TMConfig
+    from repro.core.variations import VariationConfig
+    from repro.serve import BatcherConfig, EngineConfig, HotSwapper, \
+        ServeEngine, SwapConfig
+
+    cfg = TMConfig(n_classes=2, clauses_per_class=4, n_features=16,
+                   n_states=100)
+    keys = jax.random.split(jax.random.PRNGKey(3), 4)
+
+    def ta(key):
+        inc = jax.random.bernoulli(key, 0.15,
+                                   (cfg.n_clauses, cfg.n_literals))
+        return jax.numpy.where(inc, cfg.n_states + 1,
+                               cfg.n_states).astype(cfg.state_dtype)
+
+    engine = ServeEngine.from_ta_state(
+        ta(keys[0]), cfg, n_replicas=2, key=keys[1],
+        vcfg=VariationConfig(c2c=False, csa_offset=False),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=8,
+                                                bucket_sizes=(8,))))
+    xs = list(np.asarray(jax.random.bernoulli(
+        keys[2], 0.4, (16, cfg.n_features)), np.uint8))
+    with tempfile.TemporaryDirectory() as ckpt:
+        swapper = HotSwapper(engine, ckpt,
+                             SwapConfig(canary_fraction=1.0,
+                                        min_canary_rows=8,
+                                        min_agreement=0.0))
+        stack0 = np.asarray(engine.pool.r_stack).copy()
+        swapper.begin(ta(keys[3]))
+        while swapper.decision() == "wait":
+            engine.submit_many(xs[:8])
+            engine.pump(force=True)
+        assert swapper.promote() == engine.version == 1
+        rids = engine.submit_many(xs)
+        engine.drain()
+        assert {engine.result(r).version for r in rids} == {1}
+        # second rollout, rolled back: the v1 pool returns bit-for-bit
+        swapper.begin(ta(keys[2]))
+        stack1 = np.asarray(engine.pool.r_stack).copy()
+        assert swapper.rollback() == engine.version == 1
+        np.testing.assert_array_equal(np.asarray(engine.pool.r_stack),
+                                      stack1)
+        assert not np.array_equal(stack0, stack1)

@@ -1,0 +1,77 @@
+"""Hypothesis property tests for TM training (ISSUE 7).
+
+Follows the repo convention: property tests live in ``*_properties.py``
+modules that ``importorskip`` hypothesis, so tier-1 stays green when it
+is absent (CI installs it; both paths must pass).
+
+The load-bearing property: at batch size 1 the batch-parallel update
+(``train_step_batch`` — deltas vs start-of-batch state, summed) IS the
+sequential reference (``train_step`` — ``lax.scan``), because a single
+example leaves nothing to sequence over.  This is what lets the online
+trainer (``train/online.py``) pick ``parallel=True`` for speed without
+changing single-example semantics, and it pins the two drivers to the
+same per-example feedback math for arbitrary seeds and model shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import tm, tm_train  # noqa: E402
+from repro.core.tm import TMConfig  # noqa: E402
+
+
+def _cfg(n_classes, clauses_per_class, n_features, threshold, specificity):
+    return TMConfig(n_classes=n_classes,
+                    clauses_per_class=clauses_per_class,
+                    n_features=n_features, n_states=16,
+                    threshold=threshold, specificity=specificity)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1),
+       n_classes=st.integers(2, 4),
+       clauses_per_class=st.sampled_from([2, 4, 10]),
+       n_features=st.integers(2, 24),
+       threshold=st.integers(1, 15),
+       specificity=st.floats(1.5, 8.0))
+def test_train_step_batch_equals_sequential_at_batch_one(
+        seed, n_classes, clauses_per_class, n_features, threshold,
+        specificity):
+    """``train_step_batch == train_step`` exactly at B=1, for arbitrary
+    seeds, shapes, and feedback hyperparameters — same key, same
+    example, bit-identical TA states out."""
+    cfg = _cfg(n_classes, clauses_per_class, n_features, threshold,
+               specificity)
+    k_init, k_x, k_step = jax.random.split(jax.random.PRNGKey(seed), 3)
+    state = tm.init_ta_state(k_init, cfg)
+    x = jax.random.bernoulli(k_x, 0.5, (1, n_features)).astype(jnp.uint8)
+    y = jnp.asarray([seed % n_classes], jnp.int32)
+    seq = tm_train.train_step(state, k_step, x, y, cfg)
+    par = tm_train.train_step_batch(state, k_step, x, y, cfg)
+    np.testing.assert_array_equal(np.asarray(seq), np.asarray(par))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), b=st.integers(1, 6))
+def test_train_steps_respect_state_bounds(seed, b):
+    """Both drivers keep TA states inside [1, 2N] and on the configured
+    dtype for arbitrary batches — the clip is part of the update, not a
+    caller obligation."""
+    cfg = _cfg(2, 4, 6, 5, 3.0)
+    k_init, k_x, k_y, k_step = jax.random.split(jax.random.PRNGKey(seed), 4)
+    # Start AT the boundary so one feedback step would overflow unclipped.
+    state = jnp.where(jax.random.bernoulli(k_init, 0.5, (cfg.n_clauses,
+                                                         cfg.n_literals)),
+                      2 * cfg.n_states, 1).astype(cfg.state_dtype)
+    x = jax.random.bernoulli(k_x, 0.5, (b, 6)).astype(jnp.uint8)
+    y = jax.random.randint(k_y, (b,), 0, 2)
+    for step in (tm_train.train_step, tm_train.train_step_batch):
+        out = step(state, k_step, x, y, cfg)
+        assert out.dtype == state.dtype
+        assert int(out.min()) >= 1
+        assert int(out.max()) <= 2 * cfg.n_states
