@@ -288,6 +288,67 @@ def run_before_unpacked_static(cfg, ta, xs, *, repeats=3):
         api.restore_tuning(saved)
 
 
+def run_degraded(cfg, ta, xs, *, max_batch, n_replicas=4, packed=True,
+                 repeats=3):
+    """ISSUE 8 leg: ensemble throughput with one replica injured and
+    quarantined, next to the same engine's healthy figure.
+
+    Builds an R-replica ensemble engine with health probing enabled
+    (d2d-only noise so probe scores are deterministic), times a healthy
+    pass, injects stuck-at faults into replica 1, probes (which
+    quarantines the chip), times a degraded pass over the healthy
+    majority, then auto-repairs via ``RepairPolicy`` and re-probes.  The
+    interesting number is ``degraded_vs_healthy``: the ensemble keeps
+    serving while a chip is down, paying only the lost replica's share
+    of vote diversity — dispatch shape (and hence throughput) is
+    unchanged because the vote mask is a traced argument."""
+    from repro.core.variations import FaultConfig
+    from repro.serve import HealthConfig, RepairConfig, RepairPolicy
+    ecfg = EngineConfig(batcher=BatcherConfig.for_max_batch(max_batch),
+                        routing="ensemble", packed=packed,
+                        health=HealthConfig(n_probes=64, seed=5))
+    engine = ServeEngine.from_ta_state(
+        ta, cfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
+        vcfg=VariationConfig(c2c=False, csa_offset=False), ecfg=ecfg)
+    engine.submit_many([xs[0]] * max_batch)    # warm the kernel cache
+    engine.drain()
+
+    def timed_pass():
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            engine.metrics = type(engine.metrics)()
+            t0 = time.monotonic()
+            engine.submit_many(list(xs))
+            engine.drain()
+            best = min(best, time.monotonic() - t0)
+        return len(xs) / best
+
+    healthy_rps = timed_pass()
+    baseline_health = engine.probe()
+    engine.inject_faults(
+        jax.random.PRNGKey(99),
+        FaultConfig(stuck_lrs_rate=0.15, stuck_hrs_rate=0.15),
+        replicas=[1])
+    injured_health = engine.probe()            # quarantines replica 1
+    quarantined = sorted(engine.quarantined)
+    degraded_rps = timed_pass()                # healthy-majority serving
+    tick = RepairPolicy(engine, RepairConfig()).check()
+    row = engine.summary()
+    row.update({
+        "max_batch": max_batch,
+        "healthy_rps": healthy_rps,
+        "degraded_rps": degraded_rps,
+        "degraded_vs_healthy": degraded_rps / healthy_rps,
+        "baseline_health": baseline_health,
+        "injured_health": injured_health,
+        "quarantined_during_degraded": quarantined,
+        "repairs": tick["repairs"],
+        "post_repair_health": tick["health"],
+        "recovered": not engine.quarantined,
+    })
+    return row
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=192,
@@ -424,19 +485,35 @@ def main(argv=None):
               "visible (pass --host-devices 8)")
 
     if args.smoke:
+        # Degraded-serving leg (ISSUE 8): one replica injured, probed,
+        # quarantined, served around, repaired — smoke-only so the
+        # committed BENCH_serve.json schema is untouched.
+        deg = run_degraded(cfg, ta, xs, max_batch=64, n_replicas=4,
+                           packed=args.packed, repeats=args.repeats)
+        print(f"[serve_bench]   degraded R=4 batch=64: "
+              f"{deg['degraded_rps']:.1f} req/s with "
+              f"{deg['quarantined_during_degraded']} quarantined = "
+              f"{deg['degraded_vs_healthy']:.2f}x healthy "
+              f"({deg['healthy_rps']:.1f} req/s), "
+              f"recovered={deg['recovered']}")
         row = sweep[0]
         coalesced_ok = (
             cap_coalesced["backend"].startswith("coalesced")
             and cap_coalesced["forward_fallbacks"] == [])
+        degraded_ok = (deg["quarantined_during_degraded"] == [1]
+                       and deg["recovered"]
+                       and deg["forward_fallbacks"] == [])
         ok = (row["speedup_vs_serial"] >= 1.5
               and row["forward_fallbacks"] == []
               and async_row["forward_fallbacks"] == []
-              and coalesced_ok)
+              and coalesced_ok
+              and degraded_ok)
         print(f"[serve_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
               f"{row['speedup_vs_serial']:.1f}x serial on "
               f"{row['backend']}, async {async_speedup:.2f}x sync, "
               f"coalesced leg on {cap_coalesced['backend']} "
-              f"({'clean' if coalesced_ok else 'FALLBACK'}) "
+              f"({'clean' if coalesced_ok else 'FALLBACK'}), "
+              f"degraded leg {'healed' if degraded_ok else 'FAILED'} "
               f"(committed baseline untouched)")
         if args.smoke_out:
             with open(args.smoke_out, "w") as f:
@@ -446,7 +523,8 @@ def main(argv=None):
                            "async_speedup_vs_sync": async_speedup,
                            "capacity_analog_r4_b64": cap_analog,
                            "capacity_coalesced_b64": cap_coalesced,
-                           "capacity_coalesced_vs_analog": cap_ratio},
+                           "capacity_coalesced_vs_analog": cap_ratio,
+                           "degraded_ensemble_r4_b64": deg},
                           f, indent=2, default=str)
             print(f"[serve_bench] wrote smoke report to {args.smoke_out}")
         if not ok:

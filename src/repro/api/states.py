@@ -134,6 +134,7 @@ class CrossbarState(_PackedMixin):
     icfg: IMBUEConfig = IMBUEConfig()       # static (electrical)
     vcfg: var.VariationConfig = var.VariationConfig()   # static (noise)
     include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
+    fault_mask: Optional[jax.Array] = None       # [C, L] int8 fault codes
 
     @classmethod
     def program(cls, include: jax.Array, key: jax.Array, tm_cfg: TMConfig,
@@ -177,7 +178,30 @@ class CrossbarState(_PackedMixin):
                 "crossbar geometry")
         r_mem = var.sample_device_resistance(key, include, self.vcfg)
         return dataclasses.replace(self, r_mem=r_mem, include=include,
-                                   include_packed=None)
+                                   include_packed=None, fault_mask=None)
+
+    def inject_faults(self, key: jax.Array,
+                      fcfg: Optional[var.FaultConfig] = None
+                      ) -> "CrossbarState":
+        """This chip with persistent device faults baked in (ISSUE 8).
+
+        Stuck cells are overwritten to the nominal LRS/HRS resistance
+        and every healthy cell ages by the retention drift; the drawn
+        ``fault_mask`` rides along as an int8 pytree child for
+        diagnostics.  The ``include`` plane is unchanged — it records
+        the *intended* actions, which faulty cells now deviate from.
+        ``fcfg`` defaults to ``vcfg.fault``; a missing/nominal config
+        returns ``self`` untouched (the bit-exactness guarantee).
+        Re-injection compounds: masks merge (new codes win) and drift
+        stacks, like a chip aging further."""
+        fcfg = fcfg if fcfg is not None else self.vcfg.fault
+        if fcfg is None or fcfg.is_nominal:
+            return self
+        mask = var.sample_fault_mask(key, self.include.shape, fcfg)
+        r_mem = var.apply_fault_overlay(self.r_mem, mask, fcfg)
+        if self.fault_mask is not None:
+            mask = jnp.where(mask != 0, mask, self.fault_mask)
+        return dataclasses.replace(self, r_mem=r_mem, fault_mask=mask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -193,6 +217,7 @@ class ReplicaStackState(_PackedMixin):
     icfg: IMBUEConfig = IMBUEConfig()       # static
     vcfg: var.VariationConfig = var.VariationConfig()   # static
     include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
+    fault_mask: Optional[jax.Array] = None       # [R, C, L] int8 fault codes
 
     @classmethod
     def program(cls, include: jax.Array, key: jax.Array, n_replicas: int,
@@ -224,7 +249,10 @@ class ReplicaStackState(_PackedMixin):
     def replica_slice(self, i: int) -> "ReplicaStackState":
         """Single-chip view ``[1, C, L]`` — shape is replica-independent,
         so routed dispatch reuses one compiled kernel for every chip."""
-        return dataclasses.replace(self, r_stack=self.r_stack[i:i + 1])
+        fm = (None if self.fault_mask is None
+              else self.fault_mask[i:i + 1])
+        return dataclasses.replace(self, r_stack=self.r_stack[i:i + 1],
+                                   fault_mask=fm)
 
     @property
     def is_sharded(self) -> bool:
@@ -245,9 +273,10 @@ class ReplicaStackState(_PackedMixin):
 
     def replica(self, i: int) -> CrossbarState:
         """Chip ``i`` as a standalone ``CrossbarState``."""
+        fm = None if self.fault_mask is None else self.fault_mask[i]
         return CrossbarState(r_mem=self.r_stack[i], include=self.include,
                              tm_cfg=self.tm_cfg, icfg=self.icfg,
-                             vcfg=self.vcfg)
+                             vcfg=self.vcfg, fault_mask=fm)
 
     def reprogram(self, include: jax.Array,
                   key: jax.Array) -> "ReplicaStackState":
@@ -267,7 +296,36 @@ class ReplicaStackState(_PackedMixin):
             lambda k: var.sample_device_resistance(k, include, self.vcfg)
         )(keys)
         return dataclasses.replace(self, r_stack=r_stack, include=include,
-                                   include_packed=None)
+                                   include_packed=None, fault_mask=None)
+
+    def inject_faults(self, key: jax.Array,
+                      fcfg: Optional[var.FaultConfig] = None,
+                      replicas=None) -> "ReplicaStackState":
+        """The stack with persistent faults baked into selected chips.
+
+        Independent per-replica mask draws (one key split per chip, so
+        chip ``i``'s defect pattern is reproducible regardless of which
+        chips are targeted); ``replicas`` — an iterable of stack indices
+        — restricts the injury, leaving the other chips bit-untouched.
+        Semantics per chip match :meth:`CrossbarState.inject_faults`."""
+        fcfg = fcfg if fcfg is not None else self.vcfg.fault
+        if fcfg is None or fcfg.is_nominal:
+            return self
+        keys = jax.random.split(key, self.n_replicas)
+        mask = jax.vmap(
+            lambda k: var.sample_fault_mask(k, self.include.shape, fcfg)
+        )(keys)
+        injured = jax.vmap(
+            lambda r, m: var.apply_fault_overlay(r, m, fcfg)
+        )(self.r_stack, mask)
+        if replicas is not None:
+            sel = jnp.zeros(self.n_replicas, bool)
+            sel = sel.at[jnp.asarray(list(replicas))].set(True)
+            mask = jnp.where(sel[:, None, None], mask, jnp.int8(0))
+            injured = jnp.where(sel[:, None, None], injured, self.r_stack)
+        if self.fault_mask is not None:
+            mask = jnp.where(mask != 0, mask, self.fault_mask)
+        return dataclasses.replace(self, r_stack=injured, fault_mask=mask)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -284,6 +342,7 @@ class CoalescedState(_PackedMixin):
     weights: jax.Array                      # [C, M] int per-class weights
     cfg: CoalescedConfig                    # static
     include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
+    fault_mask: Optional[jax.Array] = None       # [C, L] int8 fault codes
 
     @property
     def include(self) -> jax.Array:
@@ -332,16 +391,42 @@ class CoalescedState(_PackedMixin):
                 f"reprogram shapes {ta_state.shape}/{weights.shape} != "
                 f"model shapes {self.ta_state.shape}/{self.weights.shape}")
         return dataclasses.replace(self, ta_state=ta_state,
-                                   weights=weights, include_packed=None)
+                                   weights=weights, include_packed=None,
+                                   fault_mask=None)
+
+    def inject_faults(self, key: jax.Array,
+                      fcfg: Optional[var.FaultConfig] = None
+                      ) -> "CoalescedState":
+        """Stuck-at faults baked into the TA plane (ISSUE 8).
+
+        The coalesced tail is digital, so the fault model maps to the
+        Boolean domain: a stuck-at-LRS cell reads as a hard *include*
+        (TA pinned at the top state), stuck-at-HRS as a hard *exclude*
+        (TA pinned at 1).  Retention drift has no digital analogue and
+        is ignored here.  The packed include plane is dropped — faults
+        change the include actions."""
+        if fcfg is None or fcfg.is_nominal:
+            return self
+        mask = var.sample_fault_mask(key, self.ta_state.shape, fcfg)
+        ta = jnp.where(mask == var.FAULT_STUCK_LRS, 2 * self.cfg.n_states,
+                       jnp.where(mask == var.FAULT_STUCK_HRS, 1,
+                                 self.ta_state)).astype(self.ta_state.dtype)
+        if self.fault_mask is not None:
+            mask = jnp.where(mask != 0, mask, self.fault_mask)
+        return dataclasses.replace(self, ta_state=ta, fault_mask=mask,
+                                   include_packed=None)
 
 
 _register(DigitalState, ("include", "ta_state", "include_packed"),
           ("tm_cfg",))
-_register(CrossbarState, ("r_mem", "include", "include_packed"),
+_register(CrossbarState, ("r_mem", "include", "include_packed",
+                          "fault_mask"),
           ("tm_cfg", "icfg", "vcfg"))
-_register(ReplicaStackState, ("r_stack", "include", "include_packed"),
+_register(ReplicaStackState, ("r_stack", "include", "include_packed",
+                              "fault_mask"),
           ("tm_cfg", "icfg", "vcfg"))
-_register(CoalescedState, ("ta_state", "weights", "include_packed"),
+_register(CoalescedState, ("ta_state", "weights", "include_packed",
+                           "fault_mask"),
           ("cfg",))
 
 STATE_TYPES = (DigitalState, CrossbarState, ReplicaStackState,

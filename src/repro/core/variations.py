@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +47,57 @@ C2C_LRS_FRAC = 0.01             # +-1% per cycle
 CSA_OFFSET_SIGMA_V = 0.3e-3     # input-referred CSA offset (V)
 
 
+# --- fault model (ISSUE 8) -------------------------------------------------
+# The "program once, read forever" premise assumes cells hold state; real
+# ReRAM suffers stuck-at faults (forming/endurance failures that pin a
+# cell at one resistance regardless of programming) and retention drift
+# (conductance decays with read-age).  These are the device
+# non-idealities the Y-Flash coalesced follow-ups (IMPACT,
+# arXiv:2412.05327; In-Memory Learning Automata, arXiv:2408.09456)
+# motivate — modeled here as a *persistent* per-cell overlay, distinct
+# from the per-read C2C excursion above.
+
+FAULT_NONE = 0           # cell holds its programmed state
+FAULT_STUCK_LRS = 1      # cell pinned at LRS (reads as "include")
+FAULT_STUCK_HRS = 2      # cell pinned at HRS (reads as "exclude")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Persistent device-fault knobs (stuck-at + retention drift).
+
+    ``stuck_lrs_rate`` / ``stuck_hrs_rate`` are independent per-cell
+    probabilities (drawn disjointly from one uniform, so their sum must
+    stay <= 1).  ``drift_rate`` models retention as a conductance decay
+    ``G -> G * exp(-drift_rate * read_age)`` (equivalently resistance
+    inflation) applied to every non-stuck cell at the simulated
+    ``read_age``.  The all-zero default is the identity overlay —
+    :meth:`is_nominal` gates every apply path so a disabled fault model
+    is bit-identical to no fault model at all.
+    """
+
+    stuck_lrs_rate: float = 0.0
+    stuck_hrs_rate: float = 0.0
+    drift_rate: float = 0.0      # conductance decay per unit read-age
+    read_age: float = 0.0        # simulated age (reads) since programming
+
+    def __post_init__(self):
+        if not (0.0 <= self.stuck_lrs_rate <= 1.0
+                and 0.0 <= self.stuck_hrs_rate <= 1.0):
+            raise ValueError("stuck-at rates must be in [0, 1], got "
+                             f"{self.stuck_lrs_rate}/{self.stuck_hrs_rate}")
+        if self.stuck_lrs_rate + self.stuck_hrs_rate > 1.0:
+            raise ValueError("stuck_lrs_rate + stuck_hrs_rate must be <= 1")
+        if self.drift_rate < 0.0 or self.read_age < 0.0:
+            raise ValueError("drift_rate and read_age must be >= 0")
+
+    @property
+    def is_nominal(self) -> bool:
+        """True when this config is the identity overlay."""
+        return (self.stuck_lrs_rate == 0.0 and self.stuck_hrs_rate == 0.0
+                and self.drift_rate * self.read_age == 0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class VariationConfig:
     """Knobs for the Monte-Carlo variation studies."""
@@ -56,6 +108,14 @@ class VariationConfig:
     c2c_hrs_frac: float = C2C_HRS_FRAC
     c2c_lrs_frac: float = C2C_LRS_FRAC
     csa_sigma_v: float = CSA_OFFSET_SIGMA_V
+    # Persistent device-fault model (ISSUE 8).  None — the default, and
+    # what every pre-fault config deserializes to — means NO fault
+    # machinery runs anywhere: states carry no overlay children and the
+    # serving path is bit-identical to before the fault model existed.
+    # Faults are *injected* (``state.inject_faults``), never drawn at
+    # program time, so this field is the config that injection and the
+    # chaos harness (``launch/chaos.py``) thread through.
+    fault: Optional[FaultConfig] = None
 
     @staticmethod
     def nominal() -> "VariationConfig":
@@ -113,3 +173,39 @@ def csa_offset(key: jax.Array, shape, cfg: VariationConfig) -> jax.Array:
     if not cfg.csa_offset:
         return jnp.zeros(shape)
     return cfg.csa_sigma_v * jax.random.normal(key, shape)
+
+
+def sample_fault_mask(key: jax.Array, shape, fcfg: FaultConfig) -> jax.Array:
+    """Draw a persistent per-cell fault mask (int8 fault codes).
+
+    One uniform per cell partitioned disjointly: ``u < p_lrs`` is
+    stuck-at-LRS, ``p_lrs <= u < p_lrs + p_hrs`` is stuck-at-HRS, the
+    rest are healthy — so the two stuck populations never overlap and
+    their marginal rates are exact.
+    """
+    u = jax.random.uniform(key, shape)
+    p_lrs = fcfg.stuck_lrs_rate
+    p_hrs = fcfg.stuck_hrs_rate
+    mask = jnp.where(u < p_lrs, FAULT_STUCK_LRS,
+                     jnp.where(u < p_lrs + p_hrs, FAULT_STUCK_HRS,
+                               FAULT_NONE))
+    return mask.astype(jnp.int8)
+
+
+def apply_fault_overlay(r_mem: jax.Array, mask: jax.Array,
+                        fcfg: FaultConfig) -> jax.Array:
+    """Bake a fault mask into programmed resistances.
+
+    Stuck cells read at the nominal LRS/HRS mean regardless of what was
+    programmed (the defect, not the write, sets the state); healthy
+    cells drift: conductance decays by ``exp(-drift_rate * read_age)``,
+    i.e. resistance inflates by the reciprocal.  Identity when
+    ``fcfg.is_nominal`` — the bit-exactness guarantee.
+    """
+    if fcfg.is_nominal:
+        return r_mem
+    drift = math.exp(fcfg.drift_rate * fcfg.read_age)   # resistance factor
+    drifted = r_mem * drift
+    return jnp.where(mask == FAULT_STUCK_LRS, LRS_MEAN_OHM,
+                     jnp.where(mask == FAULT_STUCK_HRS, HRS_MEAN_OHM,
+                               drifted))

@@ -39,6 +39,27 @@ import numpy as np
 DIGEST_KEY = "content_digest"
 
 
+class CheckpointError(Exception):
+    """Base for restore failures (ISSUE 8): callers that only care that
+    *a* restore failed catch this; the subclasses distinguish the three
+    corruption modes.  Each subclass also inherits the builtin type the
+    pre-typed code raised (``FileNotFoundError`` / ``ValueError``), so
+    existing ``except`` clauses — including ``pytest.raises(ValueError,
+    match="digest")`` — keep working unchanged."""
+
+
+class CheckpointMissingError(CheckpointError, FileNotFoundError):
+    """A required checkpoint file (array blob or manifest) is absent."""
+
+
+class CheckpointManifestError(CheckpointError, ValueError):
+    """The manifest exists but cannot be parsed (truncated/garbled)."""
+
+
+class CheckpointDigestError(CheckpointError, ValueError):
+    """The leaves do not match the manifest's content digest."""
+
+
 def content_digest(arrays: Dict[str, np.ndarray]) -> str:
     """sha256 over the flattened leaves: path, dtype, shape and raw bytes
     in sorted path order — any dropped/reordered/bit-flipped leaf changes
@@ -135,15 +156,31 @@ def restore(ckpt_dir: str, step: int, like: Any,
     of NamedShardings matching ``like``) is given, leaves are placed
     sharded — this is the elastic path: any target mesh works."""
     path = os.path.join(ckpt_dir, f"step-{step:09d}")
-    with np.load(os.path.join(path, "leaves.npz")) as z:
-        flat = {k: z[k] for k in z.files}
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    leaves_path = os.path.join(path, "leaves.npz")
+    manifest_path = os.path.join(path, "manifest.json")
+    try:
+        with np.load(leaves_path) as z:
+            flat = {k: z[k] for k in z.files}
+    except FileNotFoundError as e:
+        raise CheckpointMissingError(
+            f"checkpoint {path} has no array blob ({leaves_path}): the "
+            "save was removed or never committed") from e
+    try:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+    except FileNotFoundError as e:
+        raise CheckpointMissingError(
+            f"checkpoint {path} has no manifest ({manifest_path}): the "
+            "save was removed or never committed") from e
+    except json.JSONDecodeError as e:
+        raise CheckpointManifestError(
+            f"checkpoint {path} manifest is unreadable ({e}): the file "
+            "is truncated or garbled — refusing to restore") from e
     expected = manifest.get("extra", {}).get(DIGEST_KEY)
     if expected is not None:
         actual = content_digest(flat)
         if actual != expected:
-            raise ValueError(
+            raise CheckpointDigestError(
                 f"checkpoint {path} failed content-digest verification "
                 f"(manifest {expected[:12]}…, leaves {actual[:12]}…): "
                 "the snapshot is truncated or corrupted — refusing to "

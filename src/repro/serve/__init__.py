@@ -17,36 +17,43 @@ Layers (see each module's docstring):
   majority-vote posterior smoothing and per-session metrics;
 * ``swap``      — live retraining hand-off (ISSUE 7): versioned pool
   snapshots, canary rollout over live traffic, and atomic
-  promote/rollback on a running engine.
+  promote/rollback on a running engine — plus the ``RepairPolicy``
+  auto-repair loop (ISSUE 8) that reprograms quarantined replicas;
+* ``health``    — fault detection (ISSUE 8): committed probe vectors
+  with digital-reference expected outputs, scored per replica into
+  quarantine/readmit decisions.
 """
 
-from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, Request
+from repro.serve.batching import (Batch, BatcherConfig, DynamicBatcher,
+                                  QueueFull, Request)
 from repro.serve.engine import (CANARY, DEFAULT_BACKEND,
                                 DEFAULT_COALESCED_BACKEND,
-                                DEFAULT_SHARDED_BACKEND, ENSEMBLE,
+                                DEFAULT_SHARDED_BACKEND, ENSEMBLE, EXPIRED,
                                 AsyncServeEngine, EngineConfig, InFlight,
                                 Response, ServeEngine)
+from repro.serve.health import HealthConfig, HealthProbe, probe_replicas
 from repro.serve.metrics import (RequestRecord, ServeMetrics,
                                  hardware_figures)
 from repro.serve.replica import (CoalescedPool, ReplicaPool, RouterState,
                                  ensemble_vote, program_replica_pool)
 from repro.serve.stream import (Decision, StreamConfig, StreamServer,
                                 StreamSession, majority_vote)
-from repro.serve.swap import (HotSwapper, SwapConfig, hot_swap,
-                              reprogrammed_pool, restore_pool,
-                              snapshot_pool)
+from repro.serve.swap import (HotSwapper, RepairConfig, RepairPolicy,
+                              SwapConfig, hot_swap, reprogrammed_pool,
+                              restore_pool, snapshot_pool)
 
 __all__ = [
-    "Batch", "BatcherConfig", "DynamicBatcher", "Request",
+    "Batch", "BatcherConfig", "DynamicBatcher", "QueueFull", "Request",
     "CANARY", "DEFAULT_BACKEND", "DEFAULT_COALESCED_BACKEND",
-    "DEFAULT_SHARDED_BACKEND", "ENSEMBLE",
+    "DEFAULT_SHARDED_BACKEND", "ENSEMBLE", "EXPIRED",
     "AsyncServeEngine", "EngineConfig", "InFlight", "Response",
     "ServeEngine",
+    "HealthConfig", "HealthProbe", "probe_replicas",
     "RequestRecord", "ServeMetrics", "hardware_figures",
     "CoalescedPool", "ReplicaPool", "RouterState", "ensemble_vote",
     "program_replica_pool",
     "Decision", "StreamConfig", "StreamServer", "StreamSession",
     "majority_vote",
-    "HotSwapper", "SwapConfig", "hot_swap", "reprogrammed_pool",
-    "restore_pool", "snapshot_pool",
+    "HotSwapper", "RepairConfig", "RepairPolicy", "SwapConfig",
+    "hot_swap", "reprogrammed_pool", "restore_pool", "snapshot_pool",
 ]

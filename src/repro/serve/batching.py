@@ -41,6 +41,14 @@ from repro.kernels.bitpack import WORD, words_for
 STATIC_BUCKETS = (8, 16, 32, 64, 128)     # pre-autotuning fallback ladder
 
 
+class QueueFull(RuntimeError):
+    """Typed admission-control rejection (ISSUE 8): raised by
+    ``ServeEngine.submit`` when ``EngineConfig.max_queue_depth`` queued
+    requests are already waiting.  Callers catch it to shed load or
+    retry after a ``pump()``; every raise is metered
+    (``summary()['rejected']``)."""
+
+
 def pack_request_np(x: np.ndarray) -> np.ndarray:
     """``[F]`` Boolean features -> ``[ceil(2F/32)]`` uint32 literal words.
 
@@ -122,6 +130,12 @@ class Request:
     x: np.ndarray
     t_enqueue: float
     deadline: float                     # absolute batching deadline
+    # Absolute REQUEST deadline (ISSUE 8): past this instant a
+    # still-queued request must not be dispatched — the engine reaps it
+    # into an ``expired=True`` Response.  None = never expires.  The
+    # batching ``deadline`` above shapes batch cutting; this one is a
+    # client SLO.
+    expiry: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -162,15 +176,34 @@ class DynamicBatcher:
     def __len__(self) -> int:
         return len(self._queue)
 
-    def submit(self, rid: int, x: np.ndarray, now: float) -> Request:
+    def submit(self, rid: int, x: np.ndarray, now: float,
+               deadline_s: Optional[float] = None) -> Request:
         """Queue one request; in packed mode the features are packed to
-        literal words HERE (once), not at dispatch."""
+        literal words HERE (once), not at dispatch.  ``deadline_s`` is
+        the request's expiry relative to ``now`` (see
+        :attr:`Request.expiry`)."""
         row = (pack_request_np(x) if self.packed
                else np.asarray(x, dtype=np.uint8))
         req = Request(rid=rid, x=row, t_enqueue=now,
-                      deadline=now + self.cfg.max_wait_s)
+                      deadline=now + self.cfg.max_wait_s,
+                      expiry=None if deadline_s is None
+                      else now + deadline_s)
         self._queue.append(req)
         return req
+
+    def reap_expired(self, now: float) -> List[Request]:
+        """Remove and return every queued request whose expiry has
+        passed.  Queue order of the survivors is preserved; a request
+        already cut into a batch can no longer expire (dispatch wins
+        races by design — the deadline guards *queue* time)."""
+        if not any(r.expiry is not None and now >= r.expiry
+                   for r in self._queue):
+            return []
+        expired = [r for r in self._queue
+                   if r.expiry is not None and now >= r.expiry]
+        self._queue = deque(r for r in self._queue
+                            if r.expiry is None or now < r.expiry)
+        return expired
 
     def ready(self, now: float) -> bool:
         """A batch should be cut: the largest bucket is full, or the

@@ -93,13 +93,16 @@ from repro.core import tm
 from repro.core.imbue import IMBUEConfig
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
-from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher
+from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, \
+    QueueFull, pack_request_np
+from repro.serve.health import HealthConfig, HealthProbe
 from repro.serve.metrics import RequestRecord, ServeMetrics, hardware_figures
 from repro.serve.replica import ReplicaPool, RouterState, ensemble_vote, \
     program_replica_pool
 
 ENSEMBLE = -1      # Response.replica value when every chip voted
 CANARY = -2        # Response.replica value when the canary chip served
+EXPIRED = -3       # Response.replica value when the deadline expired queued
 
 # The engine's default backend preferences: the fused Pallas kernel with
 # single-dispatch replica vmap — packed literal wire when the pool state
@@ -160,6 +163,16 @@ class EngineConfig:
     # short-lived engines shouldn't pay — streaming deployments
     # (``launch/stream.py``, ``benchmarks/stream_bench.py``) turn it on.
     lazy_tune: bool = False
+    # Admission control (ISSUE 8): queued-but-undispatched requests the
+    # engine will hold before ``submit()`` raises :class:`QueueFull`.
+    # None (default) keeps the unbounded legacy behavior.  Rejections
+    # are metered (``summary()['rejected']``).
+    max_queue_depth: Optional[int] = None
+    # Health probing (ISSUE 8): a HealthConfig here commits probe
+    # vectors at construction (``engine.health``) so ``probe()`` works
+    # immediately; None leaves probing opt-in via ``enable_health()``.
+    # Probing never happens spontaneously — ``pump()`` is pure serving.
+    health: Optional[HealthConfig] = None
 
     def backend_preference(self) -> Optional[str]:
         """The explicit preference, or None for the packed-aware default."""
@@ -183,9 +196,13 @@ class Response:
     rid: int
     pred: int
     class_sums: np.ndarray           # [M] (summed over chips in ensemble)
-    replica: int                     # serving chip, ENSEMBLE, or CANARY
+    replica: int                     # serving chip, ENSEMBLE/CANARY/EXPIRED
     latency_s: float
     version: int = 0                 # pool model generation that served it
+    # True when the request's deadline_s elapsed while still queued: it
+    # was never dispatched (pred == -1, zero sums) rather than silently
+    # served late (ISSUE 8).
+    expired: bool = False
 
 
 @dataclasses.dataclass
@@ -337,6 +354,19 @@ class ServeEngine:
         # plain serving) and its deterministic traffic accumulator.
         self._canary: Optional[_Canary] = None
         self._canary_acc = 0.0
+        # Health + quarantine (ISSUE 8).  The vote mask is a TRACED
+        # argument of the fused forward ([R] bool — all-True is
+        # bit-identical to the unmasked vote), so quarantining a chip
+        # never recompiles a kernel; the single-chip mask serves routed
+        # slice/canary dispatches.  The health PRNG stream is separate
+        # from the serving stream, so probing never perturbs the
+        # bit-reproducible serving noise trace.
+        self._healthy_mask = jnp.ones(pool.n_replicas, bool)
+        self._mask_one = jnp.ones(1, bool)
+        self.health: Optional[HealthProbe] = None
+        self._health_key = jax.random.PRNGKey(0)
+        if ecfg.health is not None:
+            self.enable_health(ecfg.health)
 
     def _build_forward(self):
         """One jit'd callable per engine: backend forward + prediction.
@@ -357,13 +387,19 @@ class ServeEngine:
         routing = self.ecfg.routing
         mode = self.ecfg.ensemble_mode
 
-        def fwd(state, lits, key, *, bt):
+        def fwd(state, lits, key, mask, *, bt):
+            # ``mask`` ([R] bool, traced) is the quarantine vote mask:
+            # all-True reproduces the unmasked path bit-for-bit (integer
+            # one-hot votes / exact sums), so a healthy engine is
+            # byte-stable vs pre-fault builds and flipping a chip out
+            # never recompiles.
             opts = dict(kernel_opts, bt=bt) if fused else {}
             sums = backend.fn(state, lits, key, **opts)  # [R,B,M] | [B,M]
             if sums.ndim == 3:                   # replica-stacked output
                 if routing == "ensemble":
-                    preds = ensemble_vote(sums, mode)
-                    sums = sums.sum(axis=0)
+                    preds = ensemble_vote(sums, mode, mask=mask)
+                    sums = jnp.where(mask[:, None, None], sums,
+                                     0).sum(axis=0)
                 else:
                     sums = sums[0]
                     preds = jnp.argmax(sums, axis=-1)
@@ -429,22 +465,59 @@ class ServeEngine:
 
     # --------------------------------------------------------------- intake
 
-    def submit(self, x: np.ndarray) -> int:
-        """Queue one request (``[F]`` Boolean features); returns its id."""
+    def submit(self, x: np.ndarray, *,
+               deadline_s: Optional[float] = None) -> int:
+        """Queue one request (``[F]`` Boolean features); returns its id.
+
+        ``deadline_s`` (ISSUE 8) is a *request* deadline relative to
+        now: if it elapses while the request is still queued, the
+        request is never dispatched and resolves to a ``Response`` with
+        ``expired=True`` (pred ``-1``) instead of silently serving
+        late.  (Distinct from the batcher's ``max_wait_s``, which only
+        shapes batch cutting.)  With ``EngineConfig.max_queue_depth``
+        set, a full queue raises :class:`QueueFull` — the typed
+        admission-control rejection — and the rejection is metered.
+        """
+        if (self.ecfg.max_queue_depth is not None
+                and len(self.batcher) >= self.ecfg.max_queue_depth):
+            self.metrics.note_rejected()
+            raise QueueFull(
+                f"queue depth {len(self.batcher)} is at "
+                f"max_queue_depth={self.ecfg.max_queue_depth}; retry "
+                "after pump() or raise the limit")
         rid = self._next_rid
         self._next_rid += 1
-        self.batcher.submit(rid, x, self.clock())
+        self.batcher.submit(rid, x, self.clock(), deadline_s=deadline_s)
         self._submitted.append(rid)
         return rid
 
-    def submit_many(self, xs: Sequence[np.ndarray]) -> List[int]:
-        return [self.submit(x) for x in xs]
+    def submit_many(self, xs: Sequence[np.ndarray], *,
+                    deadline_s: Optional[float] = None) -> List[int]:
+        return [self.submit(x, deadline_s=deadline_s) for x in xs]
 
     # ------------------------------------------------------------- serving
+
+    def _reap_expired(self) -> None:
+        """Resolve queued requests whose deadline has passed: each gets
+        an ``expired=True`` Response (never dispatched) and a metrics
+        tick.  Requests already abandoned via :meth:`discard` are
+        dropped without a retained Response, matching the served path."""
+        now = self.clock()
+        for req in self.batcher.reap_expired(now):
+            self.metrics.note_expired()
+            if req.rid in self._discard:
+                self._discard.discard(req.rid)
+                continue
+            self._results[req.rid] = Response(
+                rid=req.rid, pred=-1,
+                class_sums=np.zeros(self.tm_cfg.n_classes, np.int32),
+                replica=EXPIRED, latency_s=now - req.t_enqueue,
+                version=self.pool.version, expired=True)
 
     def pump(self, force: bool = False) -> int:
         """Cut and dispatch every due batch; returns #requests served."""
         self._prune_consumed()
+        self._reap_expired()
         served = 0
         while True:
             batch = self.batcher.cut(self.clock(), force=force)
@@ -562,16 +635,16 @@ class ServeEngine:
             # change, not a different noise draw.  The stable chip did a
             # real read, so its router load counter still advances.
             sums, preds = self._fwd(canary.state, lits, key,
-                                    bt=batch.bucket)
+                                    self._mask_one, bt=batch.bucket)
             if self.ecfg.routing == "ensemble":
                 _, shadow = self._fwd(self.state, lits, key,
-                                      bt=batch.bucket)
-                for i in range(self.pool.n_replicas):
+                                      self._healthy_mask, bt=batch.bucket)
+                for i in self.router.healthy_replicas():
                     self.router.note_dispatch(i, batch.bucket)
             else:
                 stable = self.router.pick(self.ecfg.routing)
                 _, shadow = self._fwd(self._slices[stable], lits, key,
-                                      bt=batch.bucket)
+                                      self._mask_one, bt=batch.bucket)
                 self.router.note_dispatch(stable, batch.bucket)
             return InFlight(batch=batch, sums=sums, preds=preds,
                             replica=CANARY, t_dispatch=t_dispatch,
@@ -579,14 +652,18 @@ class ServeEngine:
                             blocked_snapshot=self._blocked_s,
                             version=canary.version, shadow_preds=shadow)
         if self.ecfg.routing == "ensemble":
-            sums, preds = self._fwd(self.state, lits, key, bt=batch.bucket)
+            sums, preds = self._fwd(self.state, lits, key,
+                                    self._healthy_mask, bt=batch.bucket)
             replica = ENSEMBLE
-            for i in range(self.pool.n_replicas):
+            # Only voting chips count as load: a quarantined chip's
+            # sums are computed in the fused dispatch but masked out of
+            # the vote, so it did not *serve* the batch.
+            for i in self.router.healthy_replicas():
                 self.router.note_dispatch(i, batch.bucket)
         else:
             replica = self.router.pick(self.ecfg.routing)
             sums, preds = self._fwd(self._slices[replica], lits, key,
-                                    bt=batch.bucket)
+                                    self._mask_one, bt=batch.bucket)
             self.router.note_dispatch(replica, batch.bucket)
         return InFlight(batch=batch, sums=sums, preds=preds,
                         replica=replica, t_dispatch=t_dispatch,
@@ -727,6 +804,21 @@ class ServeEngine:
                     pool.weights.shape != old.weights.shape:
                 raise ValueError("install_pool: model shape changed")
         self.quiesce()
+        self._set_pool(pool)
+        self.disarm_canary()
+        if self.health is not None:
+            # Re-commit the probe reference against the (possibly new)
+            # clean model — deterministic, so a same-model install (e.g.
+            # kind="repair") recommits to identical expected answers.
+            self.health = HealthProbe.commit(self.pool, self.tm_cfg,
+                                             self.health.hcfg)
+        self.metrics.note_swap(old.version, pool.version, kind)
+
+    def _set_pool(self, pool) -> None:
+        """Replace the serving pool/state/slices in one step (callers
+        quiesce first).  Shared by :meth:`install_pool` and the fault
+        path (:meth:`inject_faults`, repair installs) — same shapes and
+        static configs, so every compiled kernel stays cache-hit."""
         if self.mesh is not None:
             pool = pool.shard(self.mesh, self.rules)
         state = pool.state(self.tm_cfg)
@@ -739,8 +831,6 @@ class ServeEngine:
                             for i in range(pool.n_replicas)]
         else:
             self._slices = [state] * pool.n_replicas
-        self.disarm_canary()
-        self.metrics.note_swap(old.version, pool.version, kind)
 
     def arm_canary(self, state, version: int, fraction: float) -> None:
         """Mount a candidate single-chip state beside the stable pool.
@@ -766,6 +856,125 @@ class ServeEngine:
         self._canary = None
         self._canary_acc = 0.0
 
+    # ------------------------------------------------- health + self-healing
+
+    @property
+    def quarantined(self) -> List[int]:
+        """Replica indices currently masked out of routing/voting."""
+        return sorted(self.router.quarantined)
+
+    def enable_health(self, hcfg: Optional[HealthConfig] = None) -> None:
+        """Commit probe vectors + known-good answers for this pool's
+        clean model, and seed the dedicated health PRNG stream."""
+        hcfg = hcfg if hcfg is not None else HealthConfig()
+        self.health = HealthProbe.commit(self.pool, self.tm_cfg, hcfg)
+        self._health_key = jax.random.PRNGKey(hcfg.seed + 1)
+
+    def _health_read_key(self) -> Optional[jax.Array]:
+        """Noise key for probe reads, from the health stream — probing
+        must not advance the serving stream (bit-reproducible traces)."""
+        if self._noise_free:
+            return None
+        self._health_key, k = jax.random.split(self._health_key)
+        return k
+
+    def inject_faults(self, key: jax.Array, fcfg=None,
+                      replicas=None) -> None:
+        """Chaos surface (ISSUE 8): bake persistent device faults into
+        the serving pool in place — stuck-at cells + retention drift per
+        ``fcfg`` (default: the pool's ``vcfg.fault``), restricted to
+        ``replicas`` when given.  Quiesces first (batch-atomic, like
+        :meth:`install_pool`), keeps the pool version (the model didn't
+        change), and meters the event.  Nominal/missing ``fcfg`` is a
+        no-op."""
+        pool = self.pool.inject_faults(key, fcfg, replicas=replicas)
+        if pool is self.pool:
+            return
+        self.quiesce()
+        self._set_pool(pool)
+        self.metrics.note_fault_injection(
+            None if replicas is None else sorted(int(r) for r in replicas))
+
+    def probe(self, probe: Optional[HealthProbe] = None) -> Dict[int, float]:
+        """Score every replica against the committed probe set and apply
+        quarantine/readmit (ISSUE 8).
+
+        Each chip evaluates the probe rows through the engine's own
+        compiled forward (same backend, same bucket shapes, the packed
+        wire format if serving uses it) under keys from the health PRNG
+        stream; row-exact agreement of its class sums with the digital
+        reference is its health.
+        Chips below ``quarantine_threshold`` are quarantined (routing
+        and ensemble votes skip them), quarantined chips at/above
+        ``readmit_threshold`` are readmitted — with the hysteresis band
+        between, and a hard floor: the last healthy chip is never
+        quarantined (serving degrades, it never halts).  Results land in
+        ``ServeMetrics`` (``summary()['replica_health']``)."""
+        if probe is None:
+            if self.health is None:
+                self.enable_health()
+            probe = self.health
+        self.quiesce()
+        mb = self.batcher.cfg.max_batch
+        sums = [[] for _ in range(self.pool.n_replicas)]
+        for start in range(0, probe.n_probes, mb):
+            chunk = probe.x[start:start + mb]
+            bucket = self.batcher.cfg.bucket_for(len(chunk))
+            if self.packed_io:
+                rows = np.stack([pack_request_np(r) for r in chunk])
+            else:
+                rows = np.asarray(chunk, np.uint8)
+            if bucket > len(chunk):
+                pad = np.zeros((bucket - len(chunk), rows.shape[1]),
+                               rows.dtype)
+                rows = np.concatenate([rows, pad], axis=0)
+            lits = jnp.asarray(rows)
+            if not self.packed_io:
+                lits = tm.literals(lits)
+            lits = self._shard_lits(lits)
+            # One key per chunk, shared across chips: the chips differ
+            # by their programmed arrays, not by the noise draw, so the
+            # comparison isolates device health.
+            key = self._health_read_key()
+            for i in range(self.pool.n_replicas):
+                s, _ = self._fwd(self._slices[i], lits, key,
+                                 self._mask_one, bt=bucket)
+                sums[i].append(np.asarray(s)[:len(chunk)])
+        health = {i: probe.score(np.concatenate(sums[i]))
+                  for i in range(self.pool.n_replicas)}
+        self._apply_health(health, probe)
+        return health
+
+    def _apply_health(self, health: Dict[int, float],
+                      probe: HealthProbe) -> None:
+        """Turn probe scores into quarantine/readmit transitions."""
+        self.metrics.note_health(health)
+        actions = probe.classify(health, self.router.quarantined)
+        for i, act in actions.items():
+            if act == "quarantine":
+                if self.router.healthy_replicas() == [i]:
+                    # Floor: degrading to zero chips would halt serving;
+                    # the held chip keeps serving (and the held state is
+                    # visible in the metrics event trail).
+                    self.metrics.note_quarantine(i, health[i],
+                                                 "held_last_healthy")
+                    continue
+                self.router.quarantine(i)
+                self.metrics.note_quarantine(i, health[i], "quarantine")
+            elif act == "readmit":
+                self.router.readmit(i)
+                self.metrics.note_quarantine(i, health[i], "readmit")
+        self._refresh_healthy_mask()
+
+    def _refresh_healthy_mask(self) -> None:
+        mask = np.ones(self.pool.n_replicas, bool)
+        for i in self.router.quarantined:
+            if 0 <= i < len(mask):
+                mask[i] = False
+        if not mask.any():          # same floor as RouterState
+            mask[:] = True
+        self._healthy_mask = jnp.asarray(mask)
+
     # ------------------------------------------------------------- metrics
 
     def summary(self, includes: Optional[int] = None) -> Dict:
@@ -776,6 +985,7 @@ class ServeEngine:
         out["pool_version"] = self.version
         out["canary_active"] = self.canary_active
         out["n_replicas"] = self.pool.n_replicas
+        out["quarantined"] = self.quarantined
         out["backend"] = self.backend.name
         out["backend_preferred"] = self.selection.preferred
         out["packed_io"] = self.packed_io

@@ -1,0 +1,172 @@
+"""Live replica health probing (ISSUE 8): committed probe vectors with
+known-good answers, scored per chip through the engine's own fused path.
+
+The probe design leans on a verified property of the noise model: a
+correctly programmed chip reproduces the digital TM's **class-sum
+vector row-exactly** (the sums are integer clause-vote counts; the
+analog read recovers each clause output exactly at the healthy
+operating point — under full C2C + CSA noise the rare marginal-clause
+flip costs the odd row, keeping healthy agreement far above both
+thresholds), while a chip with percent-level stuck-at faults
+silences/ghost-fires clauses and its sums diverge.  The committed reference is therefore the **digital
+forward of the pool's clean include plane** — not a per-chip snapshot —
+so it stays valid across repairs and reprogramming (a freshly re-drawn
+chip agrees with the digital model, not with its broken predecessor's
+reads).
+
+Two deliberate choices make the score discriminative on *sparse*
+models, where random inputs rarely fire any clause and the class sums
+degenerate to all-zero ties (a dead chip "agrees" with a tie):
+
+* **clause-targeting rows** — probe row ``i`` satisfies clause
+  ``i % n_clauses`` exactly (its positive includes set, its negated
+  includes cleared, background features random), the crossbar analogue
+  of ATPG test patterns: every clause is exercised in its firing state,
+  so a stuck-at cell in ANY clause row has a probe that observes it;
+* **exact-sum scoring** — a row agrees only when the chip's whole
+  ``[n_classes]`` sum vector equals the reference, so an all-zero
+  (silenced) chip cannot pass on argmax tie-breaks.
+
+Flow:
+
+* :meth:`HealthProbe.commit` — at enable time, draw ``n_probes`` random
+  Boolean probe rows and compute their digital reference predictions
+  from the pool's clean model (``DigitalState.from_include`` for
+  replica pools; the overlay-free ``CoalescedState`` for coalesced).
+* :meth:`ServeEngine.probe` (``serve/engine.py``) — dispatch the probe
+  rows per replica through the engine's compiled forward (same backend,
+  same bucket shapes, a dedicated health PRNG stream so serving noise
+  draws are untouched), score per-chip agreement with
+  :meth:`HealthProbe.score`, and apply the quarantine/readmit
+  thresholds below.
+
+Thresholds come from the measured separation: healthy chips sit at
+agreement ~1.0, visibly injured chips near chance (~1/M), so the
+defaults (quarantine below 0.75, readmit at 0.9+) leave a wide
+hysteresis band and neither flap nor miss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.api.states import DigitalState
+from repro.serve.replica import CoalescedPool, ReplicaPool
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Probing and quarantine policy knobs."""
+
+    n_probes: int = 32               # committed probe rows per probe round
+    quarantine_threshold: float = 0.75   # agreement below -> quarantine
+    readmit_threshold: float = 0.9       # agreement at/above -> readmit
+    seed: int = 0                    # probe-vector draw + health PRNG seed
+    # Probe cadence for self-healing drivers (launch/chaos.py,
+    # RepairPolicy.check): engines never probe spontaneously — pump()
+    # stays pure serving — but policy loops use this as their period.
+    probe_every_s: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.quarantine_threshold <= 1.0:
+            raise ValueError("quarantine_threshold must be in [0, 1]")
+        if self.readmit_threshold < self.quarantine_threshold:
+            raise ValueError(
+                "readmit_threshold must be >= quarantine_threshold "
+                "(the hysteresis band keeps quarantine from flapping)")
+        if self.n_probes < 1:
+            raise ValueError("need at least one probe row")
+
+
+@dataclasses.dataclass(frozen=True)
+class HealthProbe:
+    """A committed probe set: Boolean rows + their known-good answers.
+
+    ``expected`` comes from the clean digital model, so the probe
+    survives repairs (any correctly programmed chip agrees with it) and
+    never needs re-commitment until the *model* changes — engines
+    re-commit on :meth:`~repro.serve.engine.ServeEngine.install_pool`.
+    """
+
+    x: np.ndarray                    # [n_probes, F] uint8 Boolean rows
+    expected: np.ndarray             # [n_probes, M] known-good class sums
+    hcfg: HealthConfig
+
+    @property
+    def n_probes(self) -> int:
+        return int(self.x.shape[0])
+
+    @classmethod
+    def commit(cls, pool, tm_cfg, hcfg: HealthConfig = HealthConfig()
+               ) -> "HealthProbe":
+        """Build clause-targeting probe rows and compute their digital
+        reference class sums from ``pool``'s clean model (fault overlays
+        excluded)."""
+        key = jax.random.PRNGKey(hcfg.seed)
+        if isinstance(pool, CoalescedPool):
+            # Overlay-free state: the pool's ta_state is kept clean by
+            # design (CoalescedPool.state applies the mask on the fly).
+            include = np.asarray(pool.ta_state > pool.cfg.n_states)
+            ref = api.CoalescedState(ta_state=pool.ta_state,
+                                     weights=pool.weights, cfg=pool.cfg)
+        elif isinstance(pool, ReplicaPool):
+            include = np.asarray(pool.include)
+            ref = DigitalState.from_include(pool.include, tm_cfg)
+        else:
+            raise TypeError(f"cannot commit probes for {type(pool).__name__}")
+        n_clauses, n_lits = include.shape
+        n_feat = n_lits // 2
+        # ATPG-style rows: row i fires clause i % n_clauses in the clean
+        # model — positive includes forced 1, negated includes forced 0,
+        # everything else random background (density swept so the
+        # non-targeted clauses see varied inputs).  A stuck-LRS cell
+        # adds a literal the row doesn't satisfy (clause silenced), a
+        # stuck-HRS cell drops one (clause ghost-fires elsewhere):
+        # either way some probe row's sums move.
+        k_d, k_x = jax.random.split(key)
+        density = jax.random.uniform(k_d, (hcfg.n_probes, 1),
+                                     minval=0.2, maxval=0.95)
+        x = np.asarray(
+            jax.random.uniform(k_x, (hcfg.n_probes, n_feat)) < density,
+            np.uint8)
+        for i in range(hcfg.n_probes):
+            c = i % n_clauses
+            x[i, include[c, :n_feat]] = 1        # positive literals -> 1
+            x[i, include[c, n_feat:]] = 0        # negated literals  -> 0
+        from repro.core import tm
+        expected = np.asarray(api.class_sums(ref, tm.literals(x), None))
+        return cls(x=x, expected=expected, hcfg=hcfg)
+
+    def score(self, sums: np.ndarray) -> float:
+        """Agreement of one chip's probe class sums with the reference:
+        the fraction of rows whose whole sum vector matches exactly."""
+        sums = np.asarray(sums)[:self.n_probes]
+        return float((sums == self.expected).all(axis=-1).mean())
+
+    def classify(self, health: Dict[int, float],
+                 quarantined: set) -> Dict[int, str]:
+        """Map per-replica agreement to actions under the hysteresis
+        band: ``quarantine`` (healthy chip fell below the floor),
+        ``readmit`` (quarantined chip recovered past the ceiling), or
+        ``hold``."""
+        actions = {}
+        for i, h in health.items():
+            if i not in quarantined and h < self.hcfg.quarantine_threshold:
+                actions[i] = "quarantine"
+            elif i in quarantined and h >= self.hcfg.readmit_threshold:
+                actions[i] = "readmit"
+            else:
+                actions[i] = "hold"
+        return actions
+
+
+def probe_replicas(engine, probe: Optional[HealthProbe] = None
+                   ) -> Dict[int, float]:
+    """Convenience wrapper over ``engine.probe()`` (kept for callers
+    that hold a probe separate from the engine)."""
+    return engine.probe(probe)

@@ -99,6 +99,19 @@ class ServeMetrics:
         self.canary_batches = 0
         self.canary_rows = 0
         self.canary_agree_rows = 0
+        # Robustness accounting (ISSUE 8).  ``expired``/``rejected`` are
+        # lifetime counters and ALWAYS appear in the summary — a zero is
+        # the "nothing was dropped" evidence the chaos harness asserts
+        # on, so it must not be elided.  ``replica_health`` holds the
+        # latest probe round's per-chip agreement; quarantine/readmit
+        # transitions and fault injections are audit-trail event lists
+        # (bounded by operator/probe actions, not traffic).
+        self.expired_requests = 0
+        self.rejected_requests = 0
+        self.replica_health: Dict[int, float] = {}
+        self.probe_rounds = 0
+        self.quarantine_events: List[dict] = []
+        self.fault_injections: List[dict] = []
         # Streaming sessions (ISSUE 5): per-session keyword-decision
         # aggregates — count, first/last decision clock time, and a
         # BOUNDED window of recent latencies (always-on sessions must
@@ -138,6 +151,31 @@ class ServeMetrics:
             return None
         return self.canary_agree_rows / self.canary_rows
 
+    def note_expired(self, n: int = 1) -> None:
+        """Account ``n`` requests whose deadline elapsed while queued."""
+        self.expired_requests += int(n)
+
+    def note_rejected(self, n: int = 1) -> None:
+        """Account ``n`` submissions refused by admission control."""
+        self.rejected_requests += int(n)
+
+    def note_health(self, health: Dict[int, float]) -> None:
+        """Record one probe round's per-replica agreement scores."""
+        self.probe_rounds += 1
+        self.replica_health = {int(i): float(h) for i, h in health.items()}
+
+    def note_quarantine(self, replica: int, health: float,
+                        kind: str) -> None:
+        """Record one quarantine transition (``kind``: quarantine |
+        readmit | held_last_healthy)."""
+        self.quarantine_events.append({"replica": int(replica),
+                                       "health": float(health),
+                                       "kind": str(kind)})
+
+    def note_fault_injection(self, replicas: Optional[List[int]]) -> None:
+        """Record one chaos fault injection (``replicas`` None = all)."""
+        self.fault_injections.append({"replicas": replicas})
+
     def note_dispatch_timing(self, pack_s: float, wait_s: float,
                              overlapped_s: float) -> None:
         """Account one dispatch's host-pack time, blocked device wait,
@@ -176,6 +214,7 @@ class ServeMetrics:
                                     if rec["n"] > 1 and span > 0 else None),
                 "p50_ms": _percentile(lats, 0.50),
                 "p95_ms": _percentile(lats, 0.95),
+                "p99_ms": _percentile(lats, 0.99),
             }
         return out
 
@@ -214,6 +253,15 @@ class ServeMetrics:
                 "p95_ms": _percentile(lats, 0.95),
                 "p99_ms": _percentile(lats, 0.99)}
 
+    def queue_wait_ms(self) -> Dict[str, float]:
+        """Queue-wait percentiles (enqueue -> dispatch) over the
+        retained records — the tail that quarantine-induced degradation
+        shows up in first (fewer chips, same traffic)."""
+        waits = np.sort([r.queue_wait_s for r in self.records]) * 1e3
+        return {"queue_p50_ms": _percentile(waits, 0.50),
+                "queue_p95_ms": _percentile(waits, 0.95),
+                "queue_p99_ms": _percentile(waits, 0.99)}
+
     def throughput(self) -> float:
         """Served requests per second of simulation wall-clock."""
         if not self.n_requests or self.t_last == self.t_first:
@@ -238,7 +286,12 @@ class ServeMetrics:
                "fallback_dispatches": self.fallback_dispatches,
                "host_pack_s": self.host_pack_s,
                "device_wait_s": self.device_wait_s,
-               "overlap_fraction": self.overlap_fraction()}
+               "overlap_fraction": self.overlap_fraction(),
+               # Always present (zeros = the no-drop evidence chaos
+               # harnesses assert on), never elided like the optional
+               # blocks below.
+               "expired": self.expired_requests,
+               "rejected": self.rejected_requests}
         sessions = self.sessions_summary()
         if sessions:                    # streaming only — keep plain
             out["sessions"] = sessions  # serving summaries noise-free
@@ -254,7 +307,18 @@ class ServeMetrics:
             out["canary"] = {"batches": self.canary_batches,
                              "rows": self.canary_rows,
                              "agreement": self.canary_agreement()}
+        # Health/fault blocks appear once probing or chaos actually
+        # happened — a plain deployment's summary is unchanged.
+        if self.probe_rounds:
+            out["replica_health"] = {
+                str(i): h for i, h in sorted(self.replica_health.items())}
+            out["probe_rounds"] = self.probe_rounds
+        if self.quarantine_events:
+            out["quarantine_events"] = list(self.quarantine_events)
+        if self.fault_injections:
+            out["fault_injections"] = list(self.fault_injections)
         out.update(self.latency_ms())
+        out.update(self.queue_wait_ms())
         return out
 
 

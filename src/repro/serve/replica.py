@@ -34,7 +34,7 @@ identical and every path reproduces the digital TM bit-for-bit.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional, Set
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +58,7 @@ class RouterState:
     rows_dispatched: List[int]
     batches_dispatched: List[int]
     rr_next: int = 0
+    quarantined: Set[int] = dataclasses.field(default_factory=set)
 
     @classmethod
     def create(cls, n_replicas: int) -> "RouterState":
@@ -68,14 +69,31 @@ class RouterState:
     def n_replicas(self) -> int:
         return len(self.rows_dispatched)
 
+    def healthy_replicas(self) -> List[int]:
+        """Indices eligible for routing, with a floor of one: if every
+        chip is quarantined, all stay eligible — serving degrades, it
+        never halts (ISSUE 8)."""
+        h = [i for i in range(self.n_replicas) if i not in self.quarantined]
+        return h if h else list(range(self.n_replicas))
+
+    def quarantine(self, i: int) -> None:
+        self.quarantined.add(i)
+
+    def readmit(self, i: int) -> None:
+        self.quarantined.discard(i)
+
     def pick(self, policy: str) -> int:
+        healthy = self.healthy_replicas()
         if policy == "round_robin":
-            i = self.rr_next
+            # Advance the cursor past quarantined chips so the healthy
+            # subset still sees an even rotation.
+            i = self.rr_next % self.n_replicas
+            while i not in healthy:
+                i = (i + 1) % self.n_replicas
             self.rr_next = (i + 1) % self.n_replicas
             return i
         if policy == "least_loaded":
-            return min(range(self.n_replicas),
-                       key=lambda i: self.rows_dispatched[i])
+            return min(healthy, key=lambda i: self.rows_dispatched[i])
         raise ValueError(f"unknown routing policy {policy!r}")
 
     def note_dispatch(self, i: int, rows: int) -> None:
@@ -101,22 +119,24 @@ class ReplicaPool:
     icfg: IMBUEConfig
     vcfg: var.VariationConfig
     version: int = 0                # monotonic model generation
+    fault_mask: Optional[jax.Array] = None   # [R, C, L] int8 (ISSUE 8)
 
     def tree_flatten(self):
-        return ((self.r_stack, self.include),
+        return ((self.r_stack, self.include, self.fault_mask),
                 (self.icfg, self.vcfg, self.version))
 
     def tree_flatten_with_keys(self):
         return (((jax.tree_util.GetAttrKey("r_stack"), self.r_stack),
-                 (jax.tree_util.GetAttrKey("include"), self.include)),
+                 (jax.tree_util.GetAttrKey("include"), self.include),
+                 (jax.tree_util.GetAttrKey("fault_mask"), self.fault_mask)),
                 (self.icfg, self.vcfg, self.version))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        r_stack, include = children
+        r_stack, include, fault_mask = children
         icfg, vcfg, version = aux
         return cls(r_stack=r_stack, include=include, icfg=icfg, vcfg=vcfg,
-                   version=version)
+                   version=version, fault_mask=fault_mask)
 
     @property
     def n_replicas(self) -> int:
@@ -148,7 +168,14 @@ class ReplicaPool:
         return shard_tree(self, mesh, rules)
 
     def state(self, tm_cfg: TMConfig) -> ReplicaStackState:
-        """The pool as a unified-backend ``ReplicaStackState``."""
+        """The pool as a unified-backend ``ReplicaStackState``.
+
+        Faults are already *baked into* ``r_stack`` by
+        :meth:`inject_faults`, so the dispatch state deliberately does
+        NOT carry the ``fault_mask`` child: backends need no fault
+        plumbing, and the state's treedef (hence the engine's jit cache)
+        is identical injured or healthy.  The mask stays on the pool for
+        diagnostics and repair bookkeeping."""
         return ReplicaStackState(r_stack=self.r_stack, include=self.include,
                                  tm_cfg=tm_cfg, icfg=self.icfg,
                                  vcfg=self.vcfg)
@@ -183,7 +210,58 @@ class ReplicaPool:
         r_stack = imbue.program_replica_stack(include, key,
                                               self.n_replicas, self.vcfg)
         return dataclasses.replace(self, r_stack=r_stack, include=include,
-                                   version=self.version + 1)
+                                   version=self.version + 1,
+                                   fault_mask=None)
+
+    def inject_faults(self, key: jax.Array,
+                      fcfg: Optional[var.FaultConfig] = None,
+                      replicas=None) -> "ReplicaPool":
+        """The pool with persistent faults baked into selected chips
+        (ISSUE 8): stuck cells pinned at nominal LRS/HRS, healthy cells
+        aged by retention drift, the int8 mask attached for diagnostics.
+        ``replicas`` restricts the injury; per-replica key splits make
+        chip ``i``'s defect pattern target-independent.  ``version`` is
+        UNCHANGED — the model didn't change, the hardware got hurt.
+        ``fcfg`` defaults to ``vcfg.fault``; missing/nominal is the
+        identity."""
+        fcfg = fcfg if fcfg is not None else self.vcfg.fault
+        if fcfg is None or fcfg.is_nominal:
+            return self
+        keys = jax.random.split(key, self.n_replicas)
+        plane = self.include.shape
+        mask = jax.vmap(
+            lambda k: var.sample_fault_mask(k, plane, fcfg))(keys)
+        injured = jax.vmap(
+            lambda r, m: var.apply_fault_overlay(r, m, fcfg)
+        )(self.r_stack, mask)
+        if replicas is not None:
+            sel = jnp.zeros(self.n_replicas, bool)
+            sel = sel.at[jnp.asarray(list(replicas))].set(True)
+            mask = jnp.where(sel[:, None, None], mask, jnp.int8(0))
+            injured = jnp.where(sel[:, None, None], injured, self.r_stack)
+        if self.fault_mask is not None:
+            mask = jnp.where(mask != 0, mask, self.fault_mask)
+        return dataclasses.replace(self, r_stack=injured, fault_mask=mask)
+
+    def repair_replica(self, i: int, key: jax.Array) -> "ReplicaPool":
+        """Chip ``i`` re-programmed in place: fresh D2D draws at the
+        pool's noise config replace the injured resistances and clear
+        that chip's fault-mask rows (re-SET/RESET restores the simulated
+        overlay; the *other* chips are bit-untouched).  ``version`` is
+        UNCHANGED — repair fixes hardware, it doesn't change the model.
+        When the last injured chip is repaired the mask drops back to
+        ``None``, restoring the pool's pre-injury treedef."""
+        if not 0 <= i < self.n_replicas:
+            raise IndexError(f"replica {i} out of range "
+                             f"[0, {self.n_replicas})")
+        r_new = var.sample_device_resistance(key, self.include, self.vcfg)
+        r_stack = self.r_stack.at[i].set(r_new)
+        fm = self.fault_mask
+        if fm is not None:
+            fm = fm.at[i].set(jnp.int8(0))
+            if not bool(jnp.any(fm)):
+                fm = None
+        return dataclasses.replace(self, r_stack=r_stack, fault_mask=fm)
 
 
 jax.tree_util.register_pytree_with_keys(
@@ -216,21 +294,24 @@ class CoalescedPool:
     weights: jax.Array              # [C, M] per-(clause, class) weights
     cfg: CoalescedConfig
     version: int = 0                # monotonic model generation (ISSUE 7)
+    fault_mask: Optional[jax.Array] = None   # [C, L] int8 (ISSUE 8)
 
     def tree_flatten(self):
-        return (self.ta_state, self.weights), (self.cfg, self.version)
+        return ((self.ta_state, self.weights, self.fault_mask),
+                (self.cfg, self.version))
 
     def tree_flatten_with_keys(self):
         return (((jax.tree_util.GetAttrKey("ta_state"), self.ta_state),
-                 (jax.tree_util.GetAttrKey("weights"), self.weights)),
+                 (jax.tree_util.GetAttrKey("weights"), self.weights),
+                 (jax.tree_util.GetAttrKey("fault_mask"), self.fault_mask)),
                 (self.cfg, self.version))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        ta_state, weights = children
+        ta_state, weights, fault_mask = children
         cfg, version = aux
         return cls(ta_state=ta_state, weights=weights, cfg=cfg,
-                   version=version)
+                   version=version, fault_mask=fault_mask)
 
     @property
     def n_replicas(self) -> int:
@@ -256,11 +337,24 @@ class CoalescedPool:
         return shard_tree(self, mesh, rules)
 
     def state(self, cfg: CoalescedConfig | None = None) -> CoalescedState:
-        """The pool as a unified-backend ``CoalescedState``."""
+        """The pool as a unified-backend ``CoalescedState``.
+
+        Unlike the analog pools (faults baked into resistances at
+        injection), the coalesced pool keeps ``ta_state`` CLEAN and
+        applies the fault overlay here: stuck-at-LRS pins a cell to a
+        hard include (top TA state), stuck-at-HRS to a hard exclude.
+        Repair is therefore just clearing the mask — the trained TA
+        plane was never corrupted."""
         if cfg is not None and cfg != self.cfg:
             raise ValueError("CoalescedPool.state(cfg) must match the "
                              "pool's own CoalescedConfig")
-        return CoalescedState(ta_state=self.ta_state, weights=self.weights,
+        ta = self.ta_state
+        if self.fault_mask is not None:
+            ta = jnp.where(self.fault_mask == var.FAULT_STUCK_LRS,
+                           2 * self.cfg.n_states,
+                           jnp.where(self.fault_mask == var.FAULT_STUCK_HRS,
+                                     1, ta)).astype(ta.dtype)
+        return CoalescedState(ta_state=ta, weights=self.weights,
                               cfg=self.cfg)
 
     def router(self) -> RouterState:
@@ -281,7 +375,37 @@ class CoalescedPool:
                 f"pool shapes {self.ta_state.shape}/{self.weights.shape}")
         return dataclasses.replace(self, ta_state=ta_state,
                                    weights=weights,
-                                   version=self.version + 1)
+                                   version=self.version + 1,
+                                   fault_mask=None)
+
+    def inject_faults(self, key: jax.Array,
+                      fcfg: Optional[var.FaultConfig] = None,
+                      replicas=None) -> "CoalescedPool":
+        """Stuck-at faults on the single coalesced chip (ISSUE 8): the
+        mask is STORED (``ta_state`` stays clean) and applied on the fly
+        by :meth:`state`.  ``replicas`` keeps the duck-typed surface —
+        only chip 0 exists, so a selection excluding it is a no-op.
+        Retention drift has no digital analogue and is ignored."""
+        if fcfg is None or fcfg.is_nominal:
+            return self
+        if replicas is not None and 0 not in list(replicas):
+            return self
+        mask = var.sample_fault_mask(key, self.ta_state.shape, fcfg)
+        if self.fault_mask is not None:
+            mask = jnp.where(mask != 0, mask, self.fault_mask)
+        return dataclasses.replace(self, fault_mask=mask)
+
+    def repair_replica(self, i: int, key=None) -> "CoalescedPool":
+        """Chip ``i`` (== 0) repaired: digital re-programming is
+        deterministic, so repair just clears the stored overlay — the
+        clean trained TA plane serves again.  ``key`` is accepted for
+        surface parity with :meth:`ReplicaPool.repair_replica` and
+        unused; ``version`` is unchanged."""
+        del key
+        if not 0 <= i < self.n_replicas:
+            raise IndexError(f"replica {i} out of range "
+                             f"[0, {self.n_replicas})")
+        return dataclasses.replace(self, fault_mask=None)
 
 
 jax.tree_util.register_pytree_with_keys(
@@ -303,18 +427,30 @@ def program_replica_pool(
                        icfg=icfg, vcfg=vcfg)
 
 
-def ensemble_vote(sums: jax.Array, mode: str = "majority") -> jax.Array:
+def ensemble_vote(sums: jax.Array, mode: str = "majority",
+                  mask: Optional[jax.Array] = None) -> jax.Array:
     """Combine per-replica class sums ``[R, B, M]`` into predictions ``[B]``.
 
     ``majority`` — one vote per chip (its argmax), ties broken toward the
     lowest class index; deterministic given the sums.  ``sum`` — pool the
     analog class sums before the argmax (a soft vote).
+
+    ``mask`` (ISSUE 8) is an optional ``[R]`` bool of vote-eligible
+    chips: quarantined replicas are zeroed out of the vote (majority) or
+    the pooled sum, degrading the ensemble smoothly from R chips to 1.
+    ``None`` or all-``True`` is bit-identical to the unmasked vote (the
+    weights/sums are integer-exact), which is what keeps the golden
+    suite byte-stable when no chip is quarantined.
     """
     if mode == "sum":
+        if mask is not None:
+            sums = jnp.where(mask[:, None, None], sums, 0)
         return jnp.argmax(sums.sum(axis=0), axis=-1)
     if mode != "majority":
         raise ValueError(f"unknown ensemble mode {mode!r}")
     m = sums.shape[-1]
     per_chip = jnp.argmax(sums, axis=-1)                       # [R, B]
-    votes = jax.nn.one_hot(per_chip, m, dtype=jnp.int32).sum(axis=0)
-    return jnp.argmax(votes, axis=-1)
+    votes = jax.nn.one_hot(per_chip, m, dtype=jnp.int32)       # [R, B, M]
+    if mask is not None:
+        votes = votes * mask[:, None, None].astype(jnp.int32)
+    return jnp.argmax(votes.sum(axis=0), axis=-1)

@@ -86,14 +86,17 @@ def restore_pool(like_pool, ckpt_dir: str, version: int):
                                         _pool_leaves(like_pool))
     extra = manifest.get("extra", {})
     saved_version = int(extra.get(POOL_VERSION_KEY, version))
+    # Snapshots hold only the clean model leaves, so a restored pool is
+    # healthy hardware by construction: any fault overlay ``like_pool``
+    # carries must not leak into it.
     if isinstance(like_pool, ReplicaPool):
         return dataclasses.replace(
             like_pool, r_stack=tree["r_stack"],
             include=jnp.asarray(tree["include"], bool),
-            version=saved_version)
+            version=saved_version, fault_mask=None)
     return dataclasses.replace(
         like_pool, ta_state=tree["ta_state"], weights=tree["weights"],
-        version=saved_version)
+        version=saved_version, fault_mask=None)
 
 
 def reprogrammed_pool(engine: ServeEngine, ta_state: jax.Array,
@@ -258,3 +261,93 @@ class HotSwapper:
                             self._snapshot_version)
         self.engine.install_pool(pool, kind="rollback")
         return self.engine.version
+
+
+# --------------------------------------------------------------- auto-repair
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairConfig:
+    """Auto-repair policy knobs (ISSUE 8)."""
+
+    max_attempts: int = 2       # re-program + re-probe tries per chip
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+
+
+class RepairPolicy:
+    """Closed-loop self-healing over one live engine (ISSUE 8).
+
+    PR 7 built the repair primitives as operator-invoked tools; this
+    policy closes the loop: when :meth:`~repro.serve.engine.ServeEngine.
+    probe` quarantines a chip, :meth:`repair` re-programs exactly that
+    replica slice (``pool.repair_replica`` — fresh D2D draws clear the
+    fault overlay; the model and its version are untouched), installs it
+    through the same atomic ``install_pool`` path as a hot-swap (kind
+    ``"repair"``, so the audit trail shows it), re-probes, and lets the
+    readmit threshold return the chip to rotation.  Nothing queued or
+    in flight is dropped anywhere in the cycle — the repair install is
+    between-dispatch atomic exactly like a swap.
+
+    Like :class:`HotSwapper`, the policy owns no dispatch state: it
+    composes with sync, async, and streaming serving unchanged.  Repair
+    keys come from the policy's own PRNG stream so healing never
+    perturbs the engine's serving noise trace.
+    """
+
+    def __init__(self, engine: ServeEngine,
+                 rcfg: RepairConfig = RepairConfig(), *,
+                 key: Optional[jax.Array] = None):
+        self.engine = engine
+        self.rcfg = rcfg
+        self._key = key if key is not None else jax.random.PRNGKey(17)
+        self.events: list = []          # audit trail of repair outcomes
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def repair(self, health: Optional[dict] = None) -> dict:
+        """Repair every chip that needs it; returns per-chip outcomes
+        (``{replica: {"attempts", "readmitted", "health"}}``).
+
+        Targets are the quarantined chips plus — given the latest
+        ``health`` scores — any chip below the quarantine threshold that
+        the last-healthy floor kept in rotation (a single-chip engine's
+        only replica can break but never be quarantined; it still must
+        be repaired)."""
+        targets = set(self.engine.quarantined)
+        if health is not None and self.engine.health is not None:
+            floor = self.engine.health.hcfg.quarantine_threshold
+            targets |= {i for i, h in health.items() if h < floor}
+        return {i: self._repair_one(i) for i in sorted(targets)}
+
+    def _repair_one(self, i: int) -> dict:
+        hcfg = self.engine.health.hcfg if self.engine.health else None
+        health = None
+        for attempt in range(1, self.rcfg.max_attempts + 1):
+            pool = self.engine.pool.repair_replica(i, self._next_key())
+            self.engine.install_pool(pool, kind="repair")
+            health = self.engine.probe()
+            # Healed = back above the readmit ceiling AND out of
+            # quarantine (a floor-held chip was never in it).
+            if i not in self.engine.quarantined and (
+                    hcfg is None or health.get(i, 0.0)
+                    >= hcfg.readmit_threshold):
+                break
+        out = {"replica": int(i), "attempts": attempt,
+               "readmitted": i not in self.engine.quarantined,
+               "health": None if health is None else health.get(i)}
+        self.events.append(out)
+        return out
+
+    def check(self) -> dict:
+        """One self-healing tick: probe all chips, then repair whatever
+        the probe found unhealthy (quarantined or floor-held).  Drive
+        this from a serving loop at ``HealthConfig.probe_every_s``
+        cadence (``launch/chaos.py``)."""
+        health = self.engine.probe()
+        repairs = self.repair(health)
+        return {"health": health, "repairs": repairs}

@@ -1,0 +1,114 @@
+"""Checkpoint restore edge cases (ISSUE 8).
+
+``distributed/checkpoint.py``'s restore path distinguishes its three
+corruption modes with typed errors under one ``CheckpointError`` base,
+each also inheriting the builtin the pre-typed code raised — so both
+the new precise handlers and legacy ``except FileNotFoundError`` /
+``pytest.raises(ValueError, match="digest")`` call sites work.  (The
+mesh-dependent save/restore round-trips live in ``test_distributed.py``;
+these tests are single-process and run in tier 1.)
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import (CheckpointDigestError,
+                                          CheckpointError,
+                                          CheckpointManifestError,
+                                          CheckpointMissingError, restore,
+                                          save)
+
+TREE = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+        "b": np.ones(3, dtype=np.int32)}
+
+
+@pytest.fixture
+def ckpt(tmp_path):
+    d = str(tmp_path / "ckpt")
+    path = save(d, 3, TREE)
+    return d, path
+
+
+def test_clean_restore_roundtrip(ckpt):
+    d, _ = ckpt
+    tree, manifest = restore(d, 3, TREE)
+    np.testing.assert_array_equal(np.asarray(tree["w"]), TREE["w"])
+    assert manifest["step"] == 3
+
+
+def test_missing_array_blob(ckpt):
+    d, path = ckpt
+    os.remove(os.path.join(path, "leaves.npz"))
+    with pytest.raises(CheckpointMissingError, match="array blob"):
+        restore(d, 3, TREE)
+    with pytest.raises(FileNotFoundError):    # legacy except clauses
+        restore(d, 3, TREE)
+    with pytest.raises(CheckpointError):      # umbrella
+        restore(d, 3, TREE)
+
+
+def test_missing_manifest(ckpt):
+    d, path = ckpt
+    os.remove(os.path.join(path, "manifest.json"))
+    with pytest.raises(CheckpointMissingError, match="manifest"):
+        restore(d, 3, TREE)
+
+
+def test_truncated_manifest(ckpt):
+    d, path = ckpt
+    mp = os.path.join(path, "manifest.json")
+    with open(mp) as f:
+        blob = f.read()
+    with open(mp, "w") as f:
+        f.write(blob[:len(blob) // 2])        # cut mid-JSON
+    with pytest.raises(CheckpointManifestError, match="truncated"):
+        restore(d, 3, TREE)
+    with pytest.raises(ValueError):           # legacy except clauses
+        restore(d, 3, TREE)
+    with pytest.raises(CheckpointError):
+        restore(d, 3, TREE)
+
+
+def test_digest_mismatch(ckpt):
+    d, path = ckpt
+    lp = os.path.join(path, "leaves.npz")
+    with np.load(lp) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays["w"][0, 0] += 1                    # single bit-rotted leaf
+    np.savez(lp, **arrays)
+    with pytest.raises(CheckpointDigestError):
+        restore(d, 3, TREE)
+    with pytest.raises(ValueError, match="digest"):   # legacy idiom
+        restore(d, 3, TREE)
+    with pytest.raises(CheckpointError):
+        restore(d, 3, TREE)
+
+
+def test_error_types_are_distinct(ckpt):
+    """The three modes are catchable separately: a digest handler must
+    not swallow a missing-file error and vice versa."""
+    assert not issubclass(CheckpointMissingError, ValueError)
+    assert not issubclass(CheckpointDigestError, FileNotFoundError)
+    assert not issubclass(CheckpointManifestError, CheckpointDigestError)
+    d, path = ckpt
+    os.remove(os.path.join(path, "leaves.npz"))
+    with pytest.raises(CheckpointError) as ei:
+        restore(d, 3, TREE)
+    assert type(ei.value) is CheckpointMissingError
+
+
+def test_pre_digest_checkpoints_still_restore(ckpt):
+    """A manifest written before the digest existed (no content_digest
+    key) restores without verification — forward compat is explicit."""
+    d, path = ckpt
+    mp = os.path.join(path, "manifest.json")
+    with open(mp) as f:
+        manifest = json.load(f)
+    manifest["extra"].pop("content_digest")
+    with open(mp, "w") as f:
+        json.dump(manifest, f)
+    tree, _ = restore(d, 3, TREE)
+    np.testing.assert_array_equal(np.asarray(tree["b"]), TREE["b"])

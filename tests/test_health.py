@@ -1,0 +1,435 @@
+"""Fault-injected self-healing serving tests (ISSUE 8).
+
+The acceptance bar is the full chaos loop on an R=4 ensemble: inject
+stuck-at faults into exactly one replica, the probe must flag exactly
+that replica, quarantine must keep every served prediction on the
+healthy majority (== the digital oracle), auto-repair must readmit the
+chip, and no request may be dropped or served by a quarantined chip —
+for the sync engine, the async engine, and the streaming front-end.
+
+On top of that: the fault model's unit semantics (disjoint stuck-at
+draws, retention drift, nominal = identity), the BIT-IDENTITY guarantee
+(no FaultConfig ⇒ no fault machinery ⇒ the masked ensemble vote with an
+all-True mask equals the unmasked vote exactly), request deadlines,
+admission control, and the queue-wait percentiles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tm
+from repro.core.variations import (FAULT_NONE, FAULT_STUCK_HRS,
+                                   FAULT_STUCK_LRS, HRS_MEAN_OHM,
+                                   LRS_MEAN_OHM, FaultConfig,
+                                   VariationConfig, apply_fault_overlay,
+                                   sample_fault_mask)
+from repro.serve import (AsyncServeEngine, BatcherConfig, EngineConfig,
+                         HealthConfig, HealthProbe, QueueFull, RepairConfig,
+                         RepairPolicy, ServeEngine, ensemble_vote,
+                         program_replica_pool)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+D2D_ONLY = VariationConfig(d2d=True, c2c=False, csa_offset=False)
+INJURY = FaultConfig(stuck_lrs_rate=0.15, stuck_hrs_rate=0.15)
+
+
+def make_engine(small_cfg, random_ta, *, n_replicas=4, routing="ensemble",
+                engine_cls=ServeEngine, vcfg=D2D_ONLY, **ecfg_kw):
+    ecfg_kw.setdefault("batcher",
+                       BatcherConfig(max_batch=32, bucket_sizes=(8, 16, 32)))
+    ecfg_kw.setdefault("health", HealthConfig(n_probes=64, seed=5))
+    return engine_cls.from_ta_state(
+        random_ta, small_cfg, n_replicas=n_replicas,
+        key=jax.random.PRNGKey(7), vcfg=vcfg,
+        ecfg=EngineConfig(routing=routing, **ecfg_kw))
+
+
+# ------------------------------------------------------------ fault model
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(stuck_lrs_rate=-0.1)
+    with pytest.raises(ValueError):
+        FaultConfig(stuck_lrs_rate=0.7, stuck_hrs_rate=0.7)  # sum > 1
+    with pytest.raises(ValueError):
+        FaultConfig(drift_rate=-1.0)
+    assert FaultConfig().is_nominal
+    assert FaultConfig(drift_rate=0.5, read_age=0.0).is_nominal
+    assert not FaultConfig(stuck_lrs_rate=0.01).is_nominal
+    assert not FaultConfig(drift_rate=0.5, read_age=1.0).is_nominal
+
+
+def test_fault_mask_rates_and_disjointness():
+    fcfg = FaultConfig(stuck_lrs_rate=0.2, stuck_hrs_rate=0.1)
+    m = np.asarray(sample_fault_mask(jax.random.PRNGKey(0), (400, 400),
+                                     fcfg))
+    assert m.dtype == np.int8
+    assert set(np.unique(m)) <= {FAULT_NONE, FAULT_STUCK_LRS,
+                                 FAULT_STUCK_HRS}
+    assert abs((m == FAULT_STUCK_LRS).mean() - 0.2) < 0.01
+    assert abs((m == FAULT_STUCK_HRS).mean() - 0.1) < 0.01
+
+
+def test_fault_overlay_semantics():
+    r = jnp.full((2, 3), 10_000.0)
+    mask = jnp.array([[FAULT_STUCK_LRS, FAULT_STUCK_HRS, FAULT_NONE]] * 2,
+                     jnp.int8)
+    out = np.asarray(apply_fault_overlay(
+        r, mask, FaultConfig(stuck_lrs_rate=0.1)))
+    assert out[0, 0] == LRS_MEAN_OHM          # stuck cells pin to nominal
+    assert out[0, 1] == HRS_MEAN_OHM
+    assert out[0, 2] == 10_000.0              # healthy, no drift configured
+    # retention drift: conductance decays -> resistance inflates
+    aged = np.asarray(apply_fault_overlay(
+        r, mask, FaultConfig(stuck_lrs_rate=0.1, drift_rate=0.5,
+                             read_age=2.0)))
+    np.testing.assert_allclose(aged[0, 2], 10_000.0 * np.exp(1.0))
+    assert aged[0, 0] == LRS_MEAN_OHM         # stuck cells do not drift
+    # nominal overlay is the identity object, not a copy
+    nominal = FaultConfig()
+    assert apply_fault_overlay(r, mask, nominal) is r
+
+
+def test_nominal_injection_is_identity(small_cfg, random_ta, keys):
+    """No FaultConfig (or a nominal one) ⇒ inject_faults returns the
+    very same pool — the no-fault path carries zero fault machinery."""
+    inc = tm.include_mask(random_ta, small_cfg)
+    pool = program_replica_pool(inc, keys["program"], 4, D2D_ONLY)
+    assert pool.inject_faults(jax.random.PRNGKey(0), None) is pool
+    assert pool.inject_faults(jax.random.PRNGKey(0), FaultConfig()) is pool
+    assert pool.fault_mask is None
+
+
+def test_injection_targets_only_selected_replicas(small_cfg, random_ta,
+                                                  keys):
+    inc = tm.include_mask(random_ta, small_cfg)
+    pool = program_replica_pool(inc, keys["program"], 4, D2D_ONLY)
+    injured = pool.inject_faults(jax.random.PRNGKey(9), INJURY,
+                                 replicas=[2])
+    mask = np.asarray(injured.fault_mask)
+    per_chip = (mask != 0).sum(axis=(1, 2))
+    assert per_chip[2] > 0
+    assert per_chip[[0, 1, 3]].sum() == 0
+    for i in (0, 1, 3):
+        np.testing.assert_array_equal(np.asarray(injured.r_stack[i]),
+                                      np.asarray(pool.r_stack[i]))
+    assert (np.asarray(injured.r_stack[2])
+            != np.asarray(pool.r_stack[2])).any()
+    assert injured.version == pool.version    # hardware hurt, model same
+
+
+def test_repair_restores_chip_and_treedef(small_cfg, random_ta, keys):
+    inc = tm.include_mask(random_ta, small_cfg)
+    pool = program_replica_pool(inc, keys["program"], 4, D2D_ONLY)
+    injured = pool.inject_faults(jax.random.PRNGKey(9), INJURY,
+                                 replicas=[2])
+    repaired = injured.repair_replica(2, jax.random.PRNGKey(11))
+    assert repaired.fault_mask is None        # pre-injury treedef is back
+    assert repaired.version == pool.version
+    assert jax.tree_util.tree_structure(repaired) == \
+        jax.tree_util.tree_structure(pool)
+    for i in (0, 1, 3):                       # other chips bit-untouched
+        np.testing.assert_array_equal(np.asarray(repaired.r_stack[i]),
+                                      np.asarray(pool.r_stack[i]))
+
+
+# -------------------------------------------------- nominal bit-identity
+
+def test_masked_vote_all_true_is_bit_identical(small_cfg, random_ta,
+                                               boolean_batch, keys):
+    """The quarantine mask is a traced vote argument: all-True must
+    reproduce the unmasked vote bit-for-bit in both modes."""
+    inc = tm.include_mask(random_ta, small_cfg)
+    pool = program_replica_pool(inc, keys["program"], 4, D2D_ONLY)
+    from repro import api
+    lits = tm.literals(jnp.asarray(boolean_batch))
+    sums = api.class_sums(pool.state(small_cfg), lits, None)
+    all_true = jnp.ones(4, bool)
+    for mode in ("majority", "sum"):
+        np.testing.assert_array_equal(
+            np.asarray(ensemble_vote(sums, mode)),
+            np.asarray(ensemble_vote(sums, mode, mask=all_true)))
+
+
+def test_engine_without_faults_matches_digital(small_cfg, random_ta,
+                                               boolean_batch):
+    """A health-enabled engine that never saw a fault serves the same
+    bits as the digital oracle (the golden-suite guarantee rides on
+    this identity at nominal)."""
+    eng = make_engine(small_cfg, random_ta,
+                      vcfg=VariationConfig.nominal())
+    eng.submit_many(list(boolean_batch))
+    preds = np.array([r.pred for r in eng.drain()])
+    digital = np.asarray(tm.predict(random_ta, jnp.asarray(boolean_batch),
+                                    small_cfg))
+    np.testing.assert_array_equal(preds, digital)
+
+
+# --------------------------------------------------- probe + quarantine
+
+def test_probe_flags_exactly_the_injured_replica(small_cfg, random_ta):
+    eng = make_engine(small_cfg, random_ta)
+    h0 = eng.probe()
+    assert h0 == {i: 1.0 for i in range(4)}
+    assert eng.quarantined == []
+    eng.inject_faults(jax.random.PRNGKey(99), INJURY, replicas=[1])
+    h1 = eng.probe()
+    assert h1[1] < 0.75                       # collapses, not a close call
+    assert all(h1[i] == 1.0 for i in (0, 2, 3))
+    assert eng.quarantined == [1]
+
+
+def test_probe_insensitive_to_read_noise(small_cfg, random_ta):
+    """Full C2C + CSA noise: healthy chips probe far above both
+    thresholds (rare single-row sum flips from a marginal CSA offset
+    are tolerated) — the probe never confuses read noise with damage."""
+    eng = make_engine(small_cfg, random_ta, vcfg=VariationConfig())
+    h = eng.probe()
+    assert all(v >= 0.95 for v in h.values()), h
+    assert eng.quarantined == []
+
+
+def test_quarantined_replica_never_serves(small_cfg, random_ta,
+                                          boolean_batch):
+    eng = make_engine(small_cfg, random_ta, routing="round_robin")
+    eng.inject_faults(jax.random.PRNGKey(99), INJURY, replicas=[1])
+    eng.probe()
+    assert eng.quarantined == [1]
+    for lo in range(0, len(boolean_batch), 8):     # one batch per chunk
+        eng.submit_many(list(boolean_batch[lo:lo + 8]))
+        eng.pump(force=True)
+    responses = eng.drain()
+    assert len(responses) == len(boolean_batch)
+    assert all(r.replica != 1 for r in responses)
+    assert {r.replica for r in responses} == {0, 2, 3}   # rotation intact
+    assert eng.router.rows_dispatched[1] == 0
+
+
+def test_ensemble_degrades_to_healthy_majority(small_cfg, random_ta,
+                                               boolean_batch):
+    """With one chip injured AND quarantined, ensemble predictions stay
+    equal to the digital oracle (healthy-majority-correct)."""
+    eng = make_engine(small_cfg, random_ta)
+    eng.inject_faults(jax.random.PRNGKey(99), INJURY, replicas=[1])
+    eng.probe()
+    eng.submit_many(list(boolean_batch))
+    preds = np.array([r.pred for r in eng.drain()])
+    digital = np.asarray(tm.predict(random_ta, jnp.asarray(boolean_batch),
+                                    small_cfg))
+    np.testing.assert_array_equal(preds, digital)
+    assert eng.router.rows_dispatched[1] == 0     # masked chip served 0
+
+
+def test_last_healthy_chip_is_never_quarantined(small_cfg, random_ta):
+    eng = make_engine(small_cfg, random_ta, n_replicas=1)
+    eng.inject_faults(jax.random.PRNGKey(99), INJURY)
+    h = eng.probe()
+    assert h[0] < 0.75
+    assert eng.quarantined == []              # floor of one
+    events = eng.metrics.summary()["quarantine_events"]
+    assert events and events[-1]["kind"] == "held_last_healthy"
+
+
+def test_hysteresis_band_holds(small_cfg, random_ta, keys):
+    inc = tm.include_mask(random_ta, small_cfg)
+    pool = program_replica_pool(inc, keys["program"], 2, D2D_ONLY)
+    probe = HealthProbe.commit(pool, small_cfg,
+                               HealthConfig(quarantine_threshold=0.75,
+                                            readmit_threshold=0.9))
+    # healthy chip in the band: held, not quarantined
+    assert probe.classify({0: 0.8}, set()) == {0: "hold"}
+    # quarantined chip in the band: held, not readmitted (no flapping)
+    assert probe.classify({0: 0.8}, {0}) == {0: "hold"}
+    assert probe.classify({0: 0.7}, set()) == {0: "quarantine"}
+    assert probe.classify({0: 0.95}, {0}) == {0: "readmit"}
+    with pytest.raises(ValueError, match="readmit"):
+        HealthConfig(quarantine_threshold=0.9, readmit_threshold=0.5)
+
+
+# --------------------------------------------------------- chaos loops
+
+def _chaos_loop(eng, small_cfg, random_ta, boolean_batch):
+    """injure -> detect -> quarantine -> serve degraded -> repair ->
+    readmit, asserting zero drops and oracle-correct answers throughout."""
+    digital = np.asarray(tm.predict(random_ta, jnp.asarray(boolean_batch),
+                                    small_cfg))
+    rids = eng.submit_many(list(boolean_batch[:16]))
+    eng.inject_faults(jax.random.PRNGKey(99), INJURY, replicas=[2])
+    h = eng.probe()
+    assert h[2] < 0.75 and all(h[i] == 1.0 for i in (0, 1, 3))
+    assert eng.quarantined == [2]
+    rids += eng.submit_many(list(boolean_batch[16:32]))
+    policy = RepairPolicy(eng, RepairConfig())
+    events = policy.repair()
+    assert events[2]["readmitted"] and events[2]["attempts"] == 1
+    assert eng.quarantined == []
+    assert eng.probe() == {i: 1.0 for i in range(4)}
+    rids += eng.submit_many(list(boolean_batch[32:]))
+    responses = eng.drain()
+    assert [r.rid for r in responses] == rids          # nothing dropped
+    assert not any(r.expired for r in responses)
+    np.testing.assert_array_equal(np.array([r.pred for r in responses]),
+                                  digital)
+    s = eng.summary()
+    assert s["expired"] == 0 and s["rejected"] == 0
+    kinds = [e["kind"] for e in s["quarantine_events"]]
+    assert kinds == ["quarantine", "readmit"]
+    assert s["fault_injections"] == [{"replicas": [2]}]
+    assert eng.version == 0        # injure/repair never bumped the model
+
+
+def test_chaos_loop_sync(small_cfg, random_ta, boolean_batch):
+    eng = make_engine(small_cfg, random_ta)
+    _chaos_loop(eng, small_cfg, random_ta, boolean_batch)
+
+
+def test_chaos_loop_async(small_cfg, random_ta, boolean_batch):
+    eng = make_engine(small_cfg, random_ta, engine_cls=AsyncServeEngine)
+    _chaos_loop(eng, small_cfg, random_ta, boolean_batch)
+
+
+def test_chaos_loop_streaming(small_cfg, random_ta, boolean_batch):
+    """Streaming front-end across an injure/quarantine/repair cycle:
+    every window gets a decision, none served by the quarantined chip,
+    and the decisions equal the digital oracle's."""
+    from repro.core.booleanize import fit_uniform
+    from repro.serve import StreamConfig, StreamServer
+    mels, window, hop = 4, 2, 1
+    rng = np.random.default_rng(0)
+    stream = rng.normal(size=(66, mels)).astype(np.float32)
+    booleanizer = fit_uniform(stream, bits=4)
+    cfg = tm.TMConfig(n_classes=4, clauses_per_class=8,
+                      n_features=window * mels * 4, n_states=100)
+    inc = jax.random.bernoulli(jax.random.PRNGKey(5), 0.1,
+                               (cfg.n_clauses, cfg.n_literals))
+    ta = jnp.where(inc, cfg.n_states + 1, cfg.n_states).astype(
+        cfg.state_dtype)
+    eng = make_engine(cfg, ta)
+    server = StreamServer(eng, booleanizer,
+                          StreamConfig(window=window, hop=hop, vote=1))
+    def feed(lo, hi):
+        for t in range(lo, hi):
+            server.feed("u", stream[t:t + 1])
+            server.pump()
+    feed(0, 22)
+    eng.inject_faults(jax.random.PRNGKey(99), INJURY, replicas=[3])
+    eng.probe()
+    assert eng.quarantined == [3]
+    feed(22, 44)
+    RepairPolicy(eng, RepairConfig()).check()
+    assert eng.quarantined == []
+    feed(44, 66)
+    server.drain()
+    decisions = server.sessions["u"].decisions
+    from repro.core.booleanize import StreamingBooleanizer
+    rows = StreamingBooleanizer(booleanizer, window,
+                                hop).transform_offline(stream)
+    assert len(decisions) == len(rows)                 # no window dropped
+    digital = np.asarray(tm.predict(
+        ta, jnp.asarray(rows.reshape(len(rows), -1)
+                        [:, :cfg.n_features].astype(np.uint8)), cfg))
+    np.testing.assert_array_equal(np.array([d.pred for d in decisions]),
+                                  digital)
+    assert eng.summary()["expired"] == 0
+
+
+# ------------------------------------------------- deadlines + admission
+
+def test_request_deadline_expires_queued(small_cfg, random_ta,
+                                         boolean_batch):
+    clock = FakeClock()
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=jax.random.PRNGKey(7),
+        vcfg=VariationConfig.nominal(), clock=clock,
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=8,
+                                                bucket_sizes=(8,))))
+    doomed = eng.submit(boolean_batch[0], deadline_s=0.5)
+    safe = eng.submit(boolean_batch[1])
+    clock.advance(1.0)
+    responses = eng.drain()
+    assert [r.rid for r in responses] == [doomed, safe]
+    exp = responses[0]
+    assert exp.expired and exp.pred == -1
+    np.testing.assert_array_equal(exp.class_sums,
+                                  np.zeros(small_cfg.n_classes, np.int32))
+    assert not responses[1].expired and responses[1].pred >= 0
+    assert eng.summary()["expired"] == 1
+    # a deadline that has NOT elapsed dispatches normally
+    ok = eng.submit(boolean_batch[2], deadline_s=10.0)
+    clock.advance(0.1)
+    assert not eng.drain()[-1].expired
+    assert eng.result(ok).pred >= 0
+
+
+def test_admission_control_rejects_then_recovers(small_cfg, random_ta,
+                                                 boolean_batch):
+    eng = ServeEngine.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=jax.random.PRNGKey(7),
+        vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(max_queue_depth=2,
+                          batcher=BatcherConfig(max_batch=8,
+                                                bucket_sizes=(8,))))
+    eng.submit(boolean_batch[0])
+    eng.submit(boolean_batch[1])
+    with pytest.raises(QueueFull, match="max_queue_depth"):
+        eng.submit(boolean_batch[2])
+    assert eng.summary()["rejected"] == 1
+    eng.pump(force=True)                      # queue drains -> admit again
+    rid = eng.submit(boolean_batch[2])
+    eng.pump(force=True)
+    assert eng.result(rid).pred >= 0
+    assert eng.summary()["rejected"] == 1     # no new rejections
+
+
+def test_queue_wait_percentiles_in_summary(small_cfg, random_ta,
+                                           boolean_batch):
+    eng = make_engine(small_cfg, random_ta,
+                      vcfg=VariationConfig.nominal())
+    eng.submit_many(list(boolean_batch))
+    eng.drain()
+    s = eng.summary()
+    assert s["queue_p50_ms"] <= s["queue_p95_ms"] <= s["queue_p99_ms"]
+    assert s["expired"] == 0 and s["rejected"] == 0
+
+
+# ----------------------------------------------------- coalesced faults
+
+def test_coalesced_fault_inject_probe_repair():
+    from repro.core import coalesced as co
+    ccfg = co.CoalescedConfig(n_classes=4, n_clauses=32, n_features=16,
+                              n_states=100)
+    key = jax.random.PRNGKey(1)
+    inc = jax.random.bernoulli(key, 0.1, (ccfg.n_clauses,
+                                          2 * ccfg.n_features))
+    ta = jnp.where(inc, ccfg.n_states + 1, ccfg.n_states).astype(
+        ccfg.state_dtype)
+    w = jax.random.randint(jax.random.PRNGKey(2), (ccfg.n_clauses,
+                                                   ccfg.n_classes), -3, 4,
+                           dtype=ccfg.state_dtype)
+    eng = ServeEngine.from_coalesced(
+        ta, w, ccfg,
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=32,
+                                                bucket_sizes=(8, 16, 32)),
+                          health=HealthConfig(n_probes=64, seed=5)))
+    assert eng.probe() == {0: 1.0}
+    eng.inject_faults(jax.random.PRNGKey(99),
+                      FaultConfig(stuck_lrs_rate=0.25, stuck_hrs_rate=0.25))
+    h = eng.probe()
+    assert h[0] < 0.75
+    assert eng.quarantined == []              # single chip: floor of one
+    RepairPolicy(eng, RepairConfig()).check()
+    assert eng.pool.fault_mask is None
+    assert eng.probe() == {0: 1.0}
