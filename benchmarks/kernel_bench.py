@@ -13,6 +13,15 @@ fused-kernel backend and regenerates the committed tuning table
 (``src/repro/kernels/tuning_table.json``) that ``ServeEngine`` and
 ``BatcherConfig.for_max_batch`` consume via the capability registry.
 
+ISSUE 9 additions: the plane-packed backends (``analog-pallas-packed2``
+/ ``coalesced-pallas-packed2``) join the sweep under their own
+(backend, shape-bucket) keys, and the run reports a **before/after
+pair** per shape bucket — the packed backend's best tile latency and
+resident-model bytes per dispatch next to the plane-packed backend's.
+Full mode writes the pair table to ``BENCH_kernel.json`` at the repo
+root; the resident-bytes column is analytic (exact from the shapes), so
+it transfers to hardware even though the latencies are interpret-mode.
+
   PYTHONPATH=src python -m benchmarks.kernel_bench            # full sweep,
                                                               # writes table
   PYTHONPATH=src python -m benchmarks.kernel_bench --smoke    # CI: tiny
@@ -23,6 +32,9 @@ fused-kernel backend and regenerates the committed tuning table
 from __future__ import annotations
 
 import argparse
+import json
+import math
+import os
 import time
 
 import jax
@@ -106,6 +118,58 @@ def bench(reps: int = 3):
     return rows, checks
 
 
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Plane-packed "after" backends next to their packed "before"
+# counterparts (ISSUE 9): same math, resident conductance planes
+# collapsed to the uint32 index bitplane + double-buffered HBM->VMEM
+# streaming.
+PLANE_PAIRS = (("analog-pallas-packed", "analog-pallas-packed2"),
+               ("coalesced-pallas-packed", "coalesced-pallas-packed2"))
+
+
+def resident_bytes(backend_name: str, shape: dict) -> int:
+    """Analytic resident-model operand bytes ONE dispatch streams at
+    ``shape`` (nominal programming — no deviation plane).
+
+    The dense analog kernels stream two f32 planes (conductance +
+    leak); the plane-packed analog kernel streams one uint32 LRS/HRS
+    index bitplane — the 64x resident reduction.  Coalesced kernels
+    stream the include plane (uint32 bitplane when packed)."""
+    c = (shape["n_clauses"] if "n_clauses" in shape
+         else shape["n_classes"] * shape["clauses_per_class"])
+    l = 2 * shape["n_features"]
+    lw = math.ceil(l / 32)
+    if backend_name.startswith("coalesced"):
+        return 4 * c * (lw if "packed" in backend_name else l)
+    if backend_name.endswith("packed2"):
+        return 4 * c * lw
+    return 2 * 4 * c * l
+
+
+def plane_pair_report(entries):
+    """Before/after rows per (pair, shape bucket) out of the sweep:
+    best-tile latency and analytic resident bytes per dispatch."""
+    rows = []
+    for before, after in PLANE_PAIRS:
+        common = sorted(set(entries.get(before, {}))
+                        & set(entries.get(after, {})))
+        for skey in common:
+            eb, ea = entries[before][skey], entries[after][skey]
+            lat_b = min(eb["tile_latency_us"].values())
+            lat_a = min(ea["tile_latency_us"].values())
+            rb = resident_bytes(before, eb["shape"])
+            ra = resident_bytes(after, ea["shape"])
+            rows.append({
+                "before": before, "after": after, "shape_bucket": skey,
+                "latency_us_before": lat_b, "latency_us_after": lat_a,
+                "latency_ratio": lat_a / lat_b if lat_b else None,
+                "resident_bytes_before": rb, "resident_bytes_after": ra,
+                "resident_bytes_ratio": ra / rb if rb else None,
+            })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -140,8 +204,28 @@ def main(argv=None):
         print(f"[kernel_bench] FAIL: required backend(s) not tuned: "
               f"{missing} (tuned: {sorted(entries)})")
         raise SystemExit(1)
+
+    # ISSUE 9 before/after: packed vs plane-packed per shape bucket.
+    pairs = plane_pair_report(entries)
+    for p in pairs:
+        print(f"[kernel_bench]   {p['before']} -> {p['after']} "
+              f"@ {p['shape_bucket']}: "
+              f"{p['latency_us_before']:.0f} -> "
+              f"{p['latency_us_after']:.0f} us "
+              f"({p['latency_ratio']:.2f}x), resident "
+              f"{p['resident_bytes_before']} -> "
+              f"{p['resident_bytes_after']} B/dispatch "
+              f"({p['resident_bytes_ratio']:.4f}x)")
+    # The win the acceptance bar asks for: latency OR resident-bytes
+    # improvement on at least one shape bucket of the analog pair.
+    analog_pairs = [p for p in pairs
+                    if p["after"] == "analog-pallas-packed2"]
+    win = any(p["latency_ratio"] < 1.0 or p["resident_bytes_ratio"] < 1.0
+              for p in analog_pairs)
+
     if args.smoke:
         ok = all(e["tiles"] and e["bucket_sizes"] for _, _, e in flat)
+        ok = ok and (win or not analog_pairs)
         print(f"[kernel_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
               f"{len(flat)} (backend, shape) cells tuned "
               "(nothing written)")
@@ -150,6 +234,18 @@ def main(argv=None):
         return None
     path = autotune.save_table(entries, args.out)
     print(f"[kernel_bench] wrote {path} ({len(flat)} cells)")
+    if pairs:
+        pair_path = os.path.join(REPO, "BENCH_kernel.json")
+        with open(pair_path, "w") as f:
+            json.dump({"jax_backend": jax.default_backend(),
+                       "note": ("latencies are interpret-mode on this "
+                                "backend unless jax_backend == tpu; the "
+                                "resident-bytes columns are analytic and "
+                                "transfer to hardware"),
+                       "plane_pairs": pairs,
+                       "analog_pair_win": win}, f, indent=2)
+        print(f"[kernel_bench] wrote {pair_path} "
+              f"(analog pair win: {win})")
     return entries
 
 

@@ -42,6 +42,15 @@ interleaved like the sync/async pair).  Rows carry ``host_cpus`` and
 their total TA-cell budgets; the smoke adds a coalesced leg that must
 select a ``coalesced*`` backend with zero fallbacks.
 
+ISSUE 9 additions: the default datapath is now **plane-packed** — the
+programmed conductance stack rides as a uint32 LRS/HRS index bitplane
+(+ a per-cell deviation plane off-nominal) and serving selects the
+``*-packed2`` backends.  The report adds a second before/after pair at
+the headline cell: ``planes_before_r4_b64`` (packed wire, dense
+resident planes, backend ``analog-pallas-packed``) vs the plane-packed
+default, with the ``resident_bytes_per_dispatch`` drop — the resident
+HBM traffic a real accelerator would stream per dispatch.
+
   PYTHONPATH=src python -m benchmarks.serve_bench [--requests 192]
   PYTHONPATH=src python -m benchmarks.serve_bench --host-devices 8
   PYTHONPATH=src python -m benchmarks.serve_bench --smoke   # CI, no JSON
@@ -85,8 +94,8 @@ def make_model(key):
 
 
 def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin",
-                backend=None, packed=True, static_buckets=False,
-                engine_cls=ServeEngine, mesh=None):
+                backend=None, packed=True, pack_planes=True,
+                static_buckets=False, engine_cls=ServeEngine, mesh=None):
     # CSA offset off so serving stays on the fused Pallas kernel path
     # (capability selection would reject the pallas backends otherwise;
     # see repro.api.select_backend).
@@ -101,7 +110,8 @@ def make_engine(cfg, ta, *, max_batch, n_replicas, routing="round_robin",
         ta, cfg, n_replicas=n_replicas, key=jax.random.PRNGKey(3),
         vcfg=VariationConfig(csa_offset=False),
         ecfg=EngineConfig(batcher=batcher, routing=routing,
-                          backend=backend, packed=packed),
+                          backend=backend, packed=packed,
+                          pack_planes=pack_planes),
         mesh=mesh)
 
 
@@ -173,6 +183,46 @@ def run_async_pair(cfg, ta, xs, *, max_batch, n_replicas, repeats=3,
         summary["max_batch"] = max_batch
         summary["async"] = is_async
         rows[is_async] = summary
+    return rows[False], rows[True]
+
+
+def run_planes_pair(cfg, ta, xs, *, max_batch, n_replicas, repeats=3,
+                    packed=True):
+    """Dense resident planes vs plane-packed at the headline cell,
+    runs interleaved (ISSUE 9).
+
+    Both engines use the packed literal wire and measured tuning; only
+    the resident format differs — ``pack_planes=False`` serves on
+    ``analog-pallas-packed`` (two dense f32 conductance/leak planes per
+    dispatch), the default serves on ``analog-pallas-packed2`` (uint32
+    index bitplane + deviation plane).  The transferable number is the
+    ``resident_bytes_per_dispatch`` drop."""
+    engines = {}
+    for planes in (False, True):
+        eng = make_engine(cfg, ta, max_batch=max_batch,
+                          n_replicas=n_replicas, routing="round_robin",
+                          packed=packed, pack_planes=planes)
+        eng.submit_many([xs[0]] * max_batch)      # warm the kernel cache
+        eng.drain()
+        engines[planes] = eng
+    best = {False: (float("inf"), None), True: (float("inf"), None)}
+    for _ in range(max(1, repeats)):
+        for planes in (False, True):
+            eng = engines[planes]
+            eng.metrics = type(eng.metrics)()
+            t0 = time.monotonic()
+            eng.submit_many(list(xs))
+            eng.drain()
+            wall = time.monotonic() - t0
+            if wall < best[planes][0]:
+                best[planes] = (wall, eng.summary())
+    rows = {}
+    for planes in (False, True):
+        wall, summary = best[planes]
+        summary["wall_s"] = wall
+        summary["wall_throughput_rps"] = len(xs) / wall
+        summary["max_batch"] = max_batch
+        rows[planes] = summary
     return rows[False], rows[True]
 
 
@@ -356,7 +406,8 @@ def main(argv=None):
     ap.add_argument("--serial-requests", type=int, default=48,
                     help="requests for the serial baseline (slow path)")
     ap.add_argument("--backend", default=None,
-                    choices=("analog-pallas-packed", "analog-pallas",
+                    choices=("analog-pallas-packed2",
+                             "analog-pallas-packed", "analog-pallas",
                              "analog-jnp"),
                     help="forward-backend preference (repro.api name)")
     ap.add_argument("--packed", action=argparse.BooleanOptionalAction,
@@ -438,6 +489,25 @@ def main(argv=None):
           f"({sync_row['wall_throughput_rps']:.1f} req/s paired), "
           f"overlap {100 * async_row['overlap_fraction']:.0f}%")
 
+    # Plane-packed resident format at the headline cell (ISSUE 9):
+    # dense f32 conductance planes vs the uint32 index bitplane, runs
+    # interleaved; the resident-bytes column is exact, the wall-clock
+    # is interpret-mode color.
+    planes_before, planes_after = run_planes_pair(
+        cfg, ta, xs, max_batch=64, n_replicas=4, packed=args.packed,
+        repeats=args.repeats)
+    resident_ratio = (
+        planes_after["resident_bytes_per_dispatch"]
+        / planes_before["resident_bytes_per_dispatch"]
+        if planes_before["resident_bytes_per_dispatch"] else None)
+    print(f"[serve_bench]   planes R=4 batch=64: "
+          f"{planes_after['backend']} resident "
+          f"{planes_before['resident_bytes_per_dispatch']:.0f} -> "
+          f"{planes_after['resident_bytes_per_dispatch']:.0f} B/dispatch "
+          f"({resident_ratio:.4f}x), "
+          f"{planes_after['wall_throughput_rps']:.1f} vs "
+          f"{planes_before['wall_throughput_rps']:.1f} req/s paired")
+
     # Capacity head-to-head (ISSUE 6): replicated analog vs one
     # coalesced shared pool at equal device budget, runs interleaved —
     # the same 8-class workload served by R routed per-class chips vs a
@@ -503,17 +573,25 @@ def main(argv=None):
         degraded_ok = (deg["quarantined_during_degraded"] == [1]
                        and deg["recovered"]
                        and deg["forward_fallbacks"] == [])
+        planes_ok = (
+            planes_after["backend"] == "analog-pallas-packed2"
+            and planes_after["forward_fallbacks"] == []
+            and planes_after["resident_bytes_per_dispatch"]
+            < planes_before["resident_bytes_per_dispatch"])
         ok = (row["speedup_vs_serial"] >= 1.5
               and row["forward_fallbacks"] == []
               and async_row["forward_fallbacks"] == []
               and coalesced_ok
-              and degraded_ok)
+              and degraded_ok
+              and planes_ok)
         print(f"[serve_bench] SMOKE {'PASS' if ok else 'FAIL'}: "
               f"{row['speedup_vs_serial']:.1f}x serial on "
               f"{row['backend']}, async {async_speedup:.2f}x sync, "
               f"coalesced leg on {cap_coalesced['backend']} "
               f"({'clean' if coalesced_ok else 'FALLBACK'}), "
-              f"degraded leg {'healed' if degraded_ok else 'FAILED'} "
+              f"degraded leg {'healed' if degraded_ok else 'FAILED'}, "
+              f"planes leg {resident_ratio:.4f}x resident "
+              f"({'clean' if planes_ok else 'FAILED'}) "
               f"(committed baseline untouched)")
         if args.smoke_out:
             with open(args.smoke_out, "w") as f:
@@ -524,7 +602,10 @@ def main(argv=None):
                            "capacity_analog_r4_b64": cap_analog,
                            "capacity_coalesced_b64": cap_coalesced,
                            "capacity_coalesced_vs_analog": cap_ratio,
-                           "degraded_ensemble_r4_b64": deg},
+                           "degraded_ensemble_r4_b64": deg,
+                           "planes_before_r4_b64": planes_before,
+                           "planes_after_r4_b64": planes_after,
+                           "resident_bytes_ratio_planes": resident_ratio},
                           f, indent=2, default=str)
             print(f"[serve_bench] wrote smoke report to {args.smoke_out}")
         if not ok:
@@ -601,6 +682,15 @@ def main(argv=None):
             f"{os.cpu_count()} CPU core(s)"),
         "bytes_per_dispatch_before": before["bytes_per_dispatch"],
         "bytes_per_dispatch_after": after["bytes_per_dispatch"],
+        # ISSUE 9 pair: dense f32 resident planes vs the plane-packed
+        # index bitplane at the same cell, runs interleaved.
+        "planes_before_r4_b64": planes_before,
+        "planes_after_r4_b64": planes_after,
+        "resident_bytes_per_dispatch_before": (
+            planes_before["resident_bytes_per_dispatch"]),
+        "resident_bytes_per_dispatch_after": (
+            planes_after["resident_bytes_per_dispatch"]),
+        "resident_bytes_ratio_planes": resident_ratio,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2, default=str)
@@ -613,6 +703,11 @@ def main(argv=None):
           f"{headline:.2f}x the same-host before-config; operand "
           f"bytes/dispatch {before['bytes_per_dispatch']:.0f} -> "
           f"{after['bytes_per_dispatch']:.0f}")
+    print(f"[serve_bench] plane-packed resident R=4 batch=64: "
+          f"{report['resident_bytes_per_dispatch_before']:.0f} -> "
+          f"{report['resident_bytes_per_dispatch_after']:.0f} B/dispatch "
+          f"({'PASS' if resident_ratio and resident_ratio < 1.0 else 'FAIL'}"
+          f" < 1.0x)")
     print(f"[serve_bench] async overlap at R=4 batch=64: "
           f"{async_speedup:.2f}x the synchronous packed baseline "
           f"({'PASS' if async_speedup >= 1.0 else 'FAIL'} >= 1.0x), "

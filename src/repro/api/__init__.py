@@ -36,7 +36,8 @@ from repro.api.backends import class_sums, predict
 from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
                                 CAP_FUSED_KERNEL, CAP_MODELS_C2C,
                                 CAP_MODELS_CSA_OFFSET, CAP_PACKED_IO,
-                                CAP_REPLICA_VMAP, CAP_SHARDED, CAP_TPU_ONLY,
+                                CAP_PACKED_PLANES, CAP_REPLICA_VMAP,
+                                CAP_SHARDED, CAP_TPU_ONLY,
                                 KNOWN_CAPABILITIES, REF_SHAPE_KEY, Backend,
                                 Selection, clear_tuning, get_backend,
                                 get_tuning, list_backends, register_backend,
@@ -56,7 +57,7 @@ __all__ = [
     "KNOWN_CAPABILITIES",
     "CAP_ANALOG", "CAP_COALESCED", "CAP_DIGITAL", "CAP_FUSED_KERNEL",
     "CAP_MODELS_C2C", "CAP_MODELS_CSA_OFFSET", "CAP_PACKED_IO",
-    "CAP_REPLICA_VMAP", "CAP_SHARDED", "CAP_TPU_ONLY",
+    "CAP_PACKED_PLANES", "CAP_REPLICA_VMAP", "CAP_SHARDED", "CAP_TPU_ONLY",
     "STATE_TYPES", "CoalescedState", "CrossbarState", "DigitalState",
     "ReplicaStackState",
 ]

@@ -29,18 +29,27 @@ name                       states                   capability notes
 ``analog-pallas-packed``   Crossbar, ReplicaStack   packed literal wire,
                            (packed)                 unpack per K tile in
                                                     VMEM
+``analog-pallas-packed2``  Crossbar, ReplicaStack   + plane-packed resident
+                           (plane-packed)           operand, double-buffered
+                                                    HBM->VMEM DMA
 ``coalesced``              Coalesced                weighted digital tail;
                                                     GSPMD/sharded path
 ``coalesced-pallas``       Coalesced                fused kernel, W as the
                                                     combine matrix
 ``coalesced-pallas-packed`` Coalesced (packed)      packed literal wire +
                                                     weighted tail
+``coalesced-pallas-packed2`` Coalesced              + resident bitplane kept
+                           (plane-packed)           in HBM, double-buffered
+                                                    DMA pipeline
 =========================  =======================  =====================
 
 The packed backends only accept states carrying the packed include plane
 (``state.pack()``) and — having the highest priority — win selection for
 packed states; unpacked ``uint8`` literals remain supported everywhere
-(:func:`class_sums` auto-packs at the boundary).
+(:func:`class_sums` auto-packs at the boundary).  The ``*-packed2``
+backends additionally require the plane-packed resident format
+(``state.pack_planes()``) and outrank the ``*-packed`` tier for states
+that carry it.
 
 Use :func:`class_sums` / :func:`predict` for capability-based dispatch,
 or ``get_backend(name).fn`` to pin a backend explicitly.
@@ -56,8 +65,9 @@ import jax.numpy as jnp
 from repro.api.registry import (CAP_ANALOG, CAP_COALESCED, CAP_DIGITAL,
                                 CAP_FUSED_KERNEL, CAP_MODELS_C2C,
                                 CAP_MODELS_CSA_OFFSET, CAP_PACKED_IO,
-                                CAP_REPLICA_VMAP, CAP_SHARDED,
-                                register_backend, select_backend)
+                                CAP_PACKED_PLANES, CAP_REPLICA_VMAP,
+                                CAP_SHARDED, register_backend,
+                                select_backend)
 from repro.api.states import (CoalescedState, CrossbarState, DigitalState,
                               ReplicaStackState)
 from repro.core import coalesced as co
@@ -199,6 +209,33 @@ def analog_pallas_packed(state, lits: jax.Array,
         state.tm_cfg, width=state.icfg.width, **tiles))
 
 
+@register_backend("analog-pallas-packed2",
+                  state_types=(CrossbarState, ReplicaStackState),
+                  capabilities={CAP_ANALOG, CAP_FUSED_KERNEL,
+                                CAP_MODELS_C2C, CAP_REPLICA_VMAP,
+                                CAP_PACKED_IO, CAP_PACKED_PLANES},
+                  priority=40, predicate=lambda s: s.plane_packed)
+def analog_pallas_packed2(state, lits: jax.Array,
+                          key: Optional[jax.Array] = None,
+                          **tiles) -> jax.Array:
+    """Plane-packed analog kernel: the resident conductance stack stays
+    compressed in HBM (LRS/HRS index bitplane + additive deviation
+    plane, elided when nominal) and the kernel reconstructs ``g``/
+    ``leak`` tiles in VMEM behind double-buffered HBM->VMEM DMA.  Noise
+    semantics == ``analog-pallas-packed`` (C2C per read, scalar v_ref —
+    no CSA offset, so those reads fall back loudly)."""
+    litw = _as_packed_lits(lits)
+    l_valid = int(state.include.shape[-1])
+    if isinstance(state, ReplicaStackState):
+        return _to_i32(ops.imbue_class_sums_stack_planes(
+            litw, state.plane_index, state.plane_dev, state.icfg,
+            state.tm_cfg, key, vcfg=state.vcfg, l_valid=l_valid,
+            n_replicas=state.n_replicas, **tiles))
+    return _to_i32(ops.imbue_class_sums_planes(
+        litw, state.plane_index, state.plane_dev, state.icfg,
+        state.tm_cfg, key, vcfg=state.vcfg, l_valid=l_valid, **tiles))
+
+
 # ----------------------------------------------------------- coalesced
 
 @register_backend("coalesced", state_types=(CoalescedState,),
@@ -240,6 +277,24 @@ def coalesced_pallas_packed(state: CoalescedState, lits: jax.Array,
     del key
     return _to_i32(ops.coalesced_class_sums_packed(
         _as_packed_lits(lits), state.include_packed, state.weights,
+        **tiles))
+
+
+@register_backend("coalesced-pallas-packed2", state_types=(CoalescedState,),
+                  capabilities={CAP_DIGITAL, CAP_COALESCED,
+                                CAP_FUSED_KERNEL, CAP_PACKED_IO,
+                                CAP_PACKED_PLANES},
+                  priority=40, predicate=lambda s: s.plane_packed)
+def coalesced_pallas_packed2(state: CoalescedState, lits: jax.Array,
+                             key: Optional[jax.Array] = None,
+                             **tiles) -> jax.Array:
+    """Plane-packed coalesced kernel: the resident include bitplane
+    stays in HBM and streams through the kernel's own double-buffered
+    DMA pipeline (integer AND+popcount path — bit-identical to
+    ``coalesced-pallas-packed``)."""
+    del key
+    return _to_i32(ops.coalesced_class_sums_planes(
+        _as_packed_lits(lits), state.plane_index, state.weights,
         **tiles))
 
 

@@ -42,11 +42,12 @@ CAP_COALESCED = "coalesced_weights"         # weighted digital tail
 CAP_TPU_ONLY = "tpu_only"                   # no interpret-mode fallback
 CAP_PACKED_IO = "packed_io"                 # uint32 bitplane literal wire
 CAP_SHARDED = "sharded_dispatch"            # safe under NamedSharding
+CAP_PACKED_PLANES = "packed_planes"         # resident index+dev plane format
 
 KNOWN_CAPABILITIES = frozenset({
     CAP_DIGITAL, CAP_ANALOG, CAP_FUSED_KERNEL, CAP_MODELS_C2C,
     CAP_MODELS_CSA_OFFSET, CAP_REPLICA_VMAP, CAP_COALESCED, CAP_TPU_ONLY,
-    CAP_PACKED_IO, CAP_SHARDED,
+    CAP_PACKED_IO, CAP_SHARDED, CAP_PACKED_PLANES,
 })
 
 

@@ -30,6 +30,29 @@ bitplane (``include_packed [.., C, ceil(L/32)]``) as an extra child, and
 stream packed operands (32x less HBM traffic than f32 for one-bit data).
 Dense planes are kept, so every pre-existing backend still accepts a
 packed state.
+
+ISSUE 9 extends the same idea to the **resident operand** — the
+programmed conductance stack itself: ``state.pack_planes()`` attaches
+
+* ``plane_index`` — the LRS/HRS include-index bitplane (``[C, Lw]``
+  uint32; include -> LRS, exclude -> HRS).  It shares the
+  ``include_packed`` buffer, since both are ``pack_bits(include)``.
+* ``plane_dev`` — the per-cell ADDITIVE resistance deviation
+  ``r - r_nom`` (f32, ``[C, L]`` / ``[R, C, L]``), folding D2D draws and
+  fault overlays into one plane.  It is **elided (None)** when every
+  cell sits at its class-nominal resistance — a nominal chip's resident
+  operand is then the index bitplane alone, ~64x smaller than the two
+  f32 planes the dense kernels stream.
+
+The ``*-pallas-packed2`` backends reconstruct conductance tiles from
+these planes in VMEM (``CAP_PACKED_PLANES``) behind double-buffered
+HBM->VMEM DMA; nominal reconstruction is bit-exact by construction
+(``dev == 0`` -> ``r = r_nom`` in exact f32 arithmetic).  Off-nominal,
+packing *quantizes* each resistance to its own reconstruction
+(``r := fl(r_nom + fl(r - r_nom))``, at most 0.5 ulp, far below
+programming noise), so ``r == r_nom + plane_dev`` holds bitwise for
+every plane-packed state and the dense and packed2 kernels stream
+identical resistances — integer-sum parity is structural.
 """
 
 from __future__ import annotations
@@ -63,12 +86,47 @@ class _PackedMixin:
     def packed(self) -> bool:
         return self.include_packed is not None
 
+    @property
+    def plane_packed(self) -> bool:
+        """True when the resident conductance planes are packed (the
+        ``pack_planes()`` wire format the ``*-packed2`` backends key
+        their selection predicate on)."""
+        return getattr(self, "plane_index", None) is not None
+
     def pack(self):
         """This state with the packed include plane attached (idempotent)."""
         if self.packed:
             return self
         return dataclasses.replace(
             self, include_packed=bitpack.pack_bits(self.include))
+
+
+def _deviation_plane(r: jax.Array, include: jax.Array
+                     ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """``(r_quantized, r - r_nom)`` as f32, with the deviation ``None``
+    when every cell is class-nominal.
+
+    The resistances come back *quantized to their own reconstruction*:
+    ``r_quantized == r_nom + dev`` holds **bitwise** for every cell, by
+    construction.  ``fl(r - r_nom)`` alone cannot guarantee that —
+    Sterbenz exactness only covers draws within ``[r_nom/2, 2*r_nom]``,
+    and extreme D2D tails land outside it — so pack time snaps each
+    cell to the nearest plane-representable resistance (at most 0.5 ulp
+    away, orders of magnitude below programming noise).  Once a state
+    is plane-packed, the dense planes and the packed2 kernels therefore
+    stream *identical* resistances and integer parity is structural,
+    not probabilistic.  Nominal cells are untouched: their deviation is
+    exactly zero and the whole plane is elided.
+
+    The elision check syncs to the host once, at pack time — never on
+    the dispatch path — and is what makes a nominal chip's resident
+    operand the index bitplane alone.
+    """
+    r_nom = jnp.where(include, var.LRS_MEAN_OHM, var.HRS_MEAN_OHM)
+    dev = (r - r_nom).astype(jnp.float32)
+    if not bool((dev != 0.0).any()):
+        return r.astype(jnp.float32), None
+    return (r_nom + dev).astype(jnp.float32), dev
 
 
 def _register(cls, data_fields: Tuple[str, ...], meta_fields: Tuple[str, ...]):
@@ -135,6 +193,21 @@ class CrossbarState(_PackedMixin):
     vcfg: var.VariationConfig = var.VariationConfig()   # static (noise)
     include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
     fault_mask: Optional[jax.Array] = None       # [C, L] int8 fault codes
+    plane_index: Optional[jax.Array] = None      # [C, L/32] uint32 LRS/HRS
+    plane_dev: Optional[jax.Array] = None        # [C, L] f32 r - r_nom
+
+    def pack_planes(self) -> "CrossbarState":
+        """This chip with the resident conductance plane packed: the
+        LRS/HRS index bitplane plus the additive deviation plane
+        (elided for a nominal chip).  Implies :meth:`pack` — the index
+        bitplane IS the packed include plane, one shared buffer."""
+        if self.plane_packed:
+            return self
+        packed = self.pack()
+        r_q, dev = _deviation_plane(packed.r_mem, packed.include)
+        return dataclasses.replace(
+            packed, r_mem=r_q, plane_index=packed.include_packed,
+            plane_dev=dev)
 
     @classmethod
     def program(cls, include: jax.Array, key: jax.Array, tm_cfg: TMConfig,
@@ -178,7 +251,8 @@ class CrossbarState(_PackedMixin):
                 "crossbar geometry")
         r_mem = var.sample_device_resistance(key, include, self.vcfg)
         return dataclasses.replace(self, r_mem=r_mem, include=include,
-                                   include_packed=None, fault_mask=None)
+                                   include_packed=None, fault_mask=None,
+                                   plane_index=None, plane_dev=None)
 
     def inject_faults(self, key: jax.Array,
                       fcfg: Optional[var.FaultConfig] = None
@@ -201,7 +275,15 @@ class CrossbarState(_PackedMixin):
         r_mem = var.apply_fault_overlay(self.r_mem, mask, fcfg)
         if self.fault_mask is not None:
             mask = jnp.where(mask != 0, mask, self.fault_mask)
-        return dataclasses.replace(self, r_mem=r_mem, fault_mask=mask)
+        out = dataclasses.replace(self, r_mem=r_mem, fault_mask=mask)
+        if self.plane_packed:
+            # The fault overlay changed resistances, not TA actions: the
+            # index bitplane stays valid and the deviation plane
+            # re-derives from the injured resistances — keeping the old
+            # one would silently serve healthy values.
+            r_q, dev = _deviation_plane(r_mem, self.include)
+            out = dataclasses.replace(out, r_mem=r_q, plane_dev=dev)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -218,6 +300,22 @@ class ReplicaStackState(_PackedMixin):
     vcfg: var.VariationConfig = var.VariationConfig()   # static
     include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
     fault_mask: Optional[jax.Array] = None       # [R, C, L] int8 fault codes
+    plane_index: Optional[jax.Array] = None      # [C, L/32] uint32 LRS/HRS
+    plane_dev: Optional[jax.Array] = None        # [R, C, L] f32 r - r_nom
+
+    def pack_planes(self) -> "ReplicaStackState":
+        """The stack with the resident conductance planes packed: ONE
+        shared LRS/HRS index bitplane (TA actions are shared) plus the
+        per-replica additive deviation plane — elided entirely for a
+        nominal stack, where all R chips' resident operand collapses to
+        the single index bitplane.  Implies :meth:`pack`."""
+        if self.plane_packed:
+            return self
+        packed = self.pack()
+        r_q, dev = _deviation_plane(packed.r_stack, packed.include)
+        return dataclasses.replace(
+            packed, r_stack=r_q, plane_index=packed.include_packed,
+            plane_dev=dev)
 
     @classmethod
     def program(cls, include: jax.Array, key: jax.Array, n_replicas: int,
@@ -251,8 +349,10 @@ class ReplicaStackState(_PackedMixin):
         so routed dispatch reuses one compiled kernel for every chip."""
         fm = (None if self.fault_mask is None
               else self.fault_mask[i:i + 1])
+        pd = (None if self.plane_dev is None
+              else self.plane_dev[i:i + 1])
         return dataclasses.replace(self, r_stack=self.r_stack[i:i + 1],
-                                   fault_mask=fm)
+                                   fault_mask=fm, plane_dev=pd)
 
     @property
     def is_sharded(self) -> bool:
@@ -274,9 +374,11 @@ class ReplicaStackState(_PackedMixin):
     def replica(self, i: int) -> CrossbarState:
         """Chip ``i`` as a standalone ``CrossbarState``."""
         fm = None if self.fault_mask is None else self.fault_mask[i]
+        pd = None if self.plane_dev is None else self.plane_dev[i]
         return CrossbarState(r_mem=self.r_stack[i], include=self.include,
                              tm_cfg=self.tm_cfg, icfg=self.icfg,
-                             vcfg=self.vcfg, fault_mask=fm)
+                             vcfg=self.vcfg, fault_mask=fm,
+                             plane_index=self.plane_index, plane_dev=pd)
 
     def reprogram(self, include: jax.Array,
                   key: jax.Array) -> "ReplicaStackState":
@@ -296,7 +398,8 @@ class ReplicaStackState(_PackedMixin):
             lambda k: var.sample_device_resistance(k, include, self.vcfg)
         )(keys)
         return dataclasses.replace(self, r_stack=r_stack, include=include,
-                                   include_packed=None, fault_mask=None)
+                                   include_packed=None, fault_mask=None,
+                                   plane_index=None, plane_dev=None)
 
     def inject_faults(self, key: jax.Array,
                       fcfg: Optional[var.FaultConfig] = None,
@@ -325,7 +428,13 @@ class ReplicaStackState(_PackedMixin):
             injured = jnp.where(sel[:, None, None], injured, self.r_stack)
         if self.fault_mask is not None:
             mask = jnp.where(mask != 0, mask, self.fault_mask)
-        return dataclasses.replace(self, r_stack=injured, fault_mask=mask)
+        out = dataclasses.replace(self, r_stack=injured, fault_mask=mask)
+        if self.plane_packed:
+            # Same rule as CrossbarState: actions (index bitplane)
+            # unchanged, deviations re-derived from the injured stack.
+            r_q, dev = _deviation_plane(injured, self.include)
+            out = dataclasses.replace(out, r_stack=r_q, plane_dev=dev)
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -343,6 +452,20 @@ class CoalescedState(_PackedMixin):
     cfg: CoalescedConfig                    # static
     include_packed: Optional[jax.Array] = None   # [C, L/32] uint32 bitplane
     fault_mask: Optional[jax.Array] = None       # [C, L] int8 fault codes
+    plane_index: Optional[jax.Array] = None      # [C, L/32] uint32 bitplane
+
+    def pack_planes(self) -> "CoalescedState":
+        """The coalesced model in the plane-packed wire format.  The
+        pool is digital — there is no conductance deviation to carry —
+        so the "resident plane" is the include bitplane itself, marked
+        as ``plane_index`` so ``select_backend`` routes to
+        ``coalesced-pallas-packed2`` (the double-buffered DMA kernel).
+        Implies :meth:`pack` (one shared buffer)."""
+        if self.plane_packed:
+            return self
+        packed = self.pack()
+        return dataclasses.replace(packed,
+                                   plane_index=packed.include_packed)
 
     @property
     def include(self) -> jax.Array:
@@ -392,7 +515,7 @@ class CoalescedState(_PackedMixin):
                 f"model shapes {self.ta_state.shape}/{self.weights.shape}")
         return dataclasses.replace(self, ta_state=ta_state,
                                    weights=weights, include_packed=None,
-                                   fault_mask=None)
+                                   fault_mask=None, plane_index=None)
 
     def inject_faults(self, key: jax.Array,
                       fcfg: Optional[var.FaultConfig] = None
@@ -414,19 +537,19 @@ class CoalescedState(_PackedMixin):
         if self.fault_mask is not None:
             mask = jnp.where(mask != 0, mask, self.fault_mask)
         return dataclasses.replace(self, ta_state=ta, fault_mask=mask,
-                                   include_packed=None)
+                                   include_packed=None, plane_index=None)
 
 
 _register(DigitalState, ("include", "ta_state", "include_packed"),
           ("tm_cfg",))
 _register(CrossbarState, ("r_mem", "include", "include_packed",
-                          "fault_mask"),
+                          "fault_mask", "plane_index", "plane_dev"),
           ("tm_cfg", "icfg", "vcfg"))
 _register(ReplicaStackState, ("r_stack", "include", "include_packed",
-                              "fault_mask"),
+                              "fault_mask", "plane_index", "plane_dev"),
           ("tm_cfg", "icfg", "vcfg"))
 _register(CoalescedState, ("ta_state", "weights", "include_packed",
-                           "fault_mask"),
+                           "fault_mask", "plane_index"),
           ("cfg",))
 
 STATE_TYPES = (DigitalState, CrossbarState, ReplicaStackState,

@@ -18,6 +18,10 @@ for the packed representation used end-to-end:
 * :func:`unpack_words_f32` — the in-kernel unpack used by the Pallas
   packed kernels: one ``[bt, kw]`` word block -> ``[bt, 32*kw]`` f32
   bits in VMEM, right before the violation matmul.
+* :func:`unpack_words_f32_cols` — the column-axis twin used by the
+  plane-packed analog kernels: one ``[kw, ct]`` include-index word
+  block -> ``[32*kw, ct]`` f32 bits, i.e. the transposed-plane layout
+  the conductance reconstruction consumes.
 
 The layouts of the np and jnp packers are asserted identical by the
 round-trip tests (``tests/test_packed*.py``).
@@ -96,4 +100,22 @@ def unpack_words_f32(words: jax.Array, *, n_bits: int) -> jax.Array:
         raise ValueError(f"n_bits={n_bits} != {kw}*{WORD}")
     expanded = jnp.repeat(words, WORD, axis=1)                 # [bt, n_bits]
     shift = jax.lax.broadcasted_iota(jnp.uint32, (bt, n_bits), 1) % WORD
+    return ((expanded >> shift) & jnp.uint32(1)).astype(jnp.float32)
+
+
+def unpack_words_f32_cols(words: jax.Array, *, n_bits: int) -> jax.Array:
+    """In-kernel unpack along axis 0: ``[kw, ct] uint32`` ->
+    ``[n_bits, ct] f32``.
+
+    ``n_bits`` must equal ``32 * kw``.  Bit ``j`` of word row ``w``
+    becomes row ``32*w + j`` — the transposed ``[L, C]`` plane layout of
+    the analog kernels' conductance operands, so the plane-packed
+    kernels can reconstruct ``g``/``leak`` tiles in VMEM from an index
+    bitplane that is 32x smaller in HBM.
+    """
+    kw, ct = words.shape
+    if n_bits != kw * WORD:
+        raise ValueError(f"n_bits={n_bits} != {kw}*{WORD}")
+    expanded = jnp.repeat(words, WORD, axis=0)                 # [n_bits, ct]
+    shift = jax.lax.broadcasted_iota(jnp.uint32, (n_bits, ct), 0) % WORD
     return ((expanded >> shift) & jnp.uint32(1)).astype(jnp.float32)

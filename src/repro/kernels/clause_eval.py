@@ -143,6 +143,58 @@ def tm_infer_packed_kernel(litw_ref, incw_t_ref, pol_ref, out_ref, acc_ref,
                                 preferred_element_type=jnp.float32)
 
 
+def tm_infer_planes_kernel(litw_ref, incw_hbm, pol_ref, out_ref, acc_ref,
+                           *, kw, nk):
+    """Double-buffered packed path: the resident include bitplane stays
+    in ANY/HBM memory space and the kernel DMAs one ``[kw, ct]`` word
+    chunk at a time into a 2-slot VMEM scratch, starting chunk ``k+1``'s
+    copy before counting chunk ``k``'s violations — kernel-level
+    compute/transfer overlap on top of the packed format's 32x traffic
+    reduction.  Arithmetic is the integer AND+popcount path of
+    :func:`tm_infer_packed_kernel`, so results are identical bit-for-bit.
+    """
+    j = pl.program_id(1)
+    ct = acc_ref.shape[1]
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def body(inc_scr, inc_sem):
+        def cp(slot, k):
+            return pltpu.make_async_copy(
+                incw_hbm.at[pl.dslice(k * kw, kw), pl.dslice(j * ct, ct)],
+                inc_scr.at[slot], inc_sem.at[slot])
+
+        cp(0, 0).start()
+
+        def loop(k, carry):
+            slot = k % 2
+            nxt = k + 1
+
+            @pl.when(nxt < nk)
+            def _prefetch():
+                cp(nxt % 2, nxt).start()
+
+            cp(slot, k).wait()
+            lit_words = litw_ref[:, pl.dslice(k * kw, kw)]
+            acc_ref[...] = _packed_viol_block(lit_words, inc_scr[slot],
+                                              acc_ref[...], kw)
+            return carry
+
+        jax.lax.fori_loop(0, nk, loop, 0)
+
+    pl.run_scoped(body,
+                  inc_scr=pltpu.VMEM((2, kw, ct), jnp.uint32),
+                  inc_sem=pltpu.SemaphoreType.DMA((2,)))
+
+    @pl.when(j == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    clauses = (acc_ref[...] == 0).astype(jnp.float32)
+    out_ref[...] += jnp.dot(clauses, pol_ref[...],
+                            preferred_element_type=jnp.float32)
+
+
 def clause_eval_call(lit0, inc_t, *, bt, ct, kt, interpret):
     """``[B, L] x [L, C] -> [B, C]`` clause outputs (padded shapes)."""
     b, l = lit0.shape
@@ -213,6 +265,37 @@ def clause_eval_packed_call(litw, incw_t, *, bt, ct, kt, interpret):
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(litw, incw_t)
+
+
+def tm_infer_planes_call(litw, incw_t, pol, *, bt, ct, kt, interpret):
+    """``[B, L/32] x [L/32, C] x [C, M] -> [B, M]`` fused packed sums
+    with the include bitplane left resident in HBM and streamed through
+    the kernel's own double-buffered DMA pipeline (grid is (B, C) only;
+    K is internal)."""
+    if kt % WORD:
+        raise ValueError(f"kt={kt} must be a multiple of {WORD} (packed)")
+    kw = kt // WORD
+    b, lw = litw.shape
+    c = incw_t.shape[1]
+    m = pol.shape[1]
+    if lw % kw:
+        raise ValueError(f"word rows {lw} not divisible by kt/32={kw}")
+    grid = (b // bt, c // ct)
+    return pl.pallas_call(
+        partial(tm_infer_planes_kernel, kw=kw, nk=lw // kw),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, lw), lambda i, j: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((ct, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, m), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bt, ct), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(litw, incw_t, pol)
 
 
 def tm_infer_packed_call(litw, incw_t, pol, *, bt, ct, kt, interpret):

@@ -24,6 +24,16 @@ host queue through HBM, unpacking (if at all) per K tile in VMEM:
   ``imbue_class_sums_stack_packed(litw, ...)``      -> [R, B, M]
   ``coalesced_class_sums_packed(litw, incw, w)``    -> [B, M] weighted tail
 
+Plane-packed (resident-operand) variants — the *programmed conductance
+stack* is also compressed: an LRS/HRS include-index bitplane (32x
+smaller than one f32 plane) plus an optional per-cell additive
+resistance-deviation plane (``dev = r - r_nom``; D2D draws and fault
+overlays fold into it, nominal stacks elide it entirely), reconstructed
+in VMEM per K chunk behind double-buffered HBM->VMEM DMA:
+  ``imbue_class_sums_planes(litw, idx, dev, ...)``  -> [B, M]
+  ``imbue_class_sums_stack_planes(litw, ...)``      -> [R, B, M]
+  ``coalesced_class_sums_planes(litw, incw, w)``    -> [B, M] weighted tail
+
 Packed K tiles count bits and must be multiples of 32 (one uint32 word);
 padding therefore happens on the word axis (``kt // 32`` words).
 
@@ -420,6 +430,141 @@ def imbue_class_sums_stack_packed(
         return jax.vmap(lambda r: one(r, None))(r_stack)
     keys = jax.random.split(key, r_stack.shape[0])
     return jax.vmap(one)(r_stack, keys)
+
+
+@partial(jax.jit, static_argnames=("icfg", "cfg", "vcfg", "l_valid", "bt",
+                                   "ct", "kt", "interpret"))
+def imbue_class_sums_planes(
+    litw: jax.Array,          # [B, ceil(L/32)] uint32 packed literals
+    plane_index: jax.Array,   # [C, ceil(L/32)] uint32 include-index bitplane
+    plane_dev: jax.Array | None,  # [C, L] f32 additive r deviation, or None
+    icfg,                     # IMBUEConfig (static)
+    cfg: TMConfig,
+    key: jax.Array | None = None,
+    *,
+    vcfg=None,
+    l_valid: int,
+    bt: int = BT, ct: int = CT, kt: int = KT_ANALOG,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused analog inference from a plane-packed chip -> ``[B, M]``.
+
+    The resident operand is the include-index bitplane plus (if any cell
+    deviates from its class-nominal resistance) the additive deviation
+    plane; the kernel reconstructs ``g``/``leak`` tiles in VMEM with the
+    exact ``core.imbue.conductances`` op order, so nominal results are
+    bit-identical to :func:`imbue_class_sums_raw_packed` on the dense
+    planes.  ``l_valid`` is the true (unpadded) literal count — the
+    kernel masks word-padding columns that the dense path zero-pads.
+
+    C2C noise (``key`` + ``vcfg.c2c``) is drawn per read in jnp before
+    the kernel: the deviation plane becomes
+    ``apply_c2c(key, r_nom + dev, include, vcfg) - r_nom``.  The CSA
+    offset is NOT modeled (scalar reference), exactly like the dense
+    analog kernels — capability selection routes those reads elsewhere.
+    """
+    from repro.core.variations import (HRS_MEAN_OHM, I_LEAK_EXCLUDE,
+                                       I_LEAK_INCLUDE, LRS_MEAN_OHM,
+                                       VariationConfig, apply_c2c)
+    vcfg = vcfg or VariationConfig.nominal()
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kw = kt // bitpack.WORD
+    b = litw.shape[0]
+    dev = plane_dev
+    if key is not None and vcfg.c2c:
+        include = bitpack.unpack_bits(plane_index, l_valid).astype(bool)
+        r_nom = jnp.where(include, LRS_MEAN_OHM, HRS_MEAN_OHM)
+        r = r_nom if dev is None else r_nom + dev
+        dev = apply_c2c(key, r, include, vcfg) - r_nom
+    litw_p = _pad_to(_pad_to(litw.astype(jnp.uint32), 0, bt), 1, kw)
+    incw_t = _pad_to(_pad_to(plane_index.astype(jnp.uint32), 0, ct),
+                     1, kw).T
+    dev_t = (None if dev is None else
+             _pad_to(_pad_to(dev.astype(jnp.float32), 0, ct), 1, kt).T)
+    pol = polarity_matrix(cfg)
+    pol = pol * _nonempty_from_packed(
+        plane_index)[:, None].astype(jnp.float32)
+    pol = _pad_to(pol, 0, ct)
+    out = _ai.imbue_infer_planes_call(
+        litw_p, incw_t, dev_t, pol, icfg.reference_voltage(), icfg.v_read,
+        width=icfg.width, r_div=icfg.r_divider, r_lrs=LRS_MEAN_OHM,
+        r_hrs=HRS_MEAN_OHM, leak_inc=I_LEAK_INCLUDE,
+        leak_exc=I_LEAK_EXCLUDE, series_factor=icfg.series_factor,
+        l_valid=l_valid, bt=bt, ct=ct, kt=kt, interpret=interp)
+    return out[:b, :cfg.n_classes]
+
+
+@partial(jax.jit, static_argnames=("icfg", "cfg", "vcfg", "l_valid",
+                                   "n_replicas", "bt", "ct", "kt",
+                                   "interpret"))
+def imbue_class_sums_stack_planes(
+    litw: jax.Array,          # [B, ceil(L/32)] uint32 packed literals
+    plane_index: jax.Array,   # [C, ceil(L/32)] uint32 (shared TA actions)
+    plane_dev: jax.Array | None,  # [R, C, L] f32 deviations, or None
+    icfg,                     # IMBUEConfig (static)
+    cfg: TMConfig,
+    key: jax.Array | None = None,
+    *,
+    vcfg=None,
+    l_valid: int,
+    n_replicas: int,
+    bt: int = BT, ct: int = CT, kt: int = KT_ANALOG,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Plane-packed replica-stack inference -> ``[R, B, M]``.
+
+    The index bitplane is shared across the stack (TA actions are); the
+    deviation plane is per-replica (each chip drew its own D2D noise /
+    carries its own fault overlay) or None for a nominal stack.  Noise
+    semantics match :func:`imbue_class_sums_stack_packed`: one fresh C2C
+    draw per replica per read from the split of ``key``.  A nominal
+    stack with no C2C read is ONE kernel dispatch broadcast over R —
+    replicas are bit-identical by construction.
+    """
+    from repro.core.variations import VariationConfig
+    vcfg = vcfg or VariationConfig.nominal()
+
+    def one(dev_r, k):
+        return imbue_class_sums_planes(
+            litw, plane_index, dev_r, icfg, cfg, k, vcfg=vcfg,
+            l_valid=l_valid, bt=bt, ct=ct, kt=kt, interpret=interpret)
+
+    c2c = key is not None and vcfg.c2c
+    if plane_dev is None and not c2c:
+        out = one(None, None)
+        return jnp.broadcast_to(out, (n_replicas,) + out.shape)
+    keys = (jax.random.split(key, n_replicas) if key is not None else None)
+    if plane_dev is None:
+        return jax.vmap(lambda k: one(None, k))(keys)
+    if keys is None:
+        return jax.vmap(lambda d: one(d, None))(plane_dev)
+    return jax.vmap(one)(plane_dev, keys)
+
+
+@partial(jax.jit, static_argnames=("bt", "ct", "kt", "interpret"))
+def coalesced_class_sums_planes(litw: jax.Array, include_w: jax.Array,
+                                weights: jax.Array, *,
+                                bt: int = BT, ct: int = CT, kt: int = KT,
+                                interpret: bool | None = None) -> jax.Array:
+    """Fused coalesced inference with the include bitplane resident in
+    HBM and streamed through the kernel's double-buffered DMA pipeline.
+
+    Same integer AND+popcount arithmetic as
+    :func:`coalesced_class_sums_packed` — bit-identical results; the
+    difference is purely how the resident operand reaches VMEM (manual
+    2-slot prefetch instead of grid-blocked automatic copies).
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    kw = kt // bitpack.WORD
+    b, m = litw.shape[0], weights.shape[1]
+    litw_p = _pad_to(_pad_to(litw.astype(jnp.uint32), 0, bt), 1, kw)
+    incw_t = _pad_to(_pad_to(include_w.astype(jnp.uint32), 0, ct),
+                     1, kw).T
+    w = _pad_to(coalesced_combine(weights,
+                                  _nonempty_from_packed(include_w)), 0, ct)
+    out = _ce.tm_infer_planes_call(litw_p, incw_t, w, bt=bt, ct=ct,
+                                   kt=kt, interpret=interp)
+    return out[:b, :m]
 
 
 def imbue_class_sums_stacked(

@@ -115,13 +115,44 @@ EXPIRED = -3       # Response.replica value when the deadline expired queued
 # fallback warning on every construction.
 DEFAULT_BACKEND = "analog-pallas"
 DEFAULT_PACKED_BACKEND = "analog-pallas-packed"
+DEFAULT_PLANES_BACKEND = "analog-pallas-packed2"
 DEFAULT_SHARDED_BACKEND = "analog-jnp"
 # Coalesced pools get the same ladder in their own backend family: the
 # fused weighted-tail kernel, its packed-wire variant, and the GSPMD
 # jnp path ("coalesced") for class-sharded weights.
 DEFAULT_COALESCED_BACKEND = "coalesced-pallas"
 DEFAULT_COALESCED_PACKED_BACKEND = "coalesced-pallas-packed"
+DEFAULT_COALESCED_PLANES_BACKEND = "coalesced-pallas-packed2"
 DEFAULT_COALESCED_SHARDED_BACKEND = "coalesced"
+
+
+def _resident_model_nbytes(state, backend: "api.Backend") -> int:
+    """Programmed-model operand bytes the forward streams from HBM for
+    ONE dispatch of ``state`` under ``backend``.
+
+    Dense analog paths stream two f32 planes (conductance + leak) per
+    programmed cell; coalesced paths stream the include plane (uint32
+    bitplane when packed); plane-packed states stream the uint32 index
+    bitplane plus the optional f32 deviation plane — ISSUE 9's resident
+    reduction, surfaced as ``resident_bytes_per_dispatch``."""
+    caps = backend.capabilities
+    if api.CAP_PACKED_PLANES in caps and getattr(state, "plane_packed",
+                                                 False):
+        n = int(state.plane_index.size) * 4
+        dev = getattr(state, "plane_dev", None)
+        if dev is not None:
+            n += int(dev.size) * 4
+        return n
+    if isinstance(state, api.CoalescedState):
+        if api.CAP_PACKED_IO in caps and state.packed:
+            return int(state.include_packed.size) * 4
+        return int(state.include.size) * 4
+    r = getattr(state, "r_stack", None)
+    if r is None:
+        r = getattr(state, "r_mem", None)
+    if r is None:                        # DigitalState: the include plane
+        return int(state.include.size) * 4
+    return 2 * int(r.size) * 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,6 +167,13 @@ class EngineConfig:
     # selection lands on the packed_io kernels.  Bit-exact vs unpacked;
     # turn off to force the dense uint8 datapath.
     packed: bool = True
+    # Plane-packed resident model (ISSUE 9): after packing, fold the
+    # programmed conductance stack into an LRS/HRS index bitplane (+ a
+    # per-cell deviation plane when the pool is off-nominal) so the
+    # fused kernels stream ~64x fewer resident bytes per dispatch at
+    # nominal.  Bit-exact vs the dense planes; only takes effect when
+    # ``packed`` is also on (plane packing implies the packed wire).
+    pack_planes: bool = True
     # Backend *preference* for the forward path (repro.api registry name).
     # None -> DEFAULT_PACKED_BACKEND / DEFAULT_BACKEND (per ``packed``).
     # Selection is capability-checked against the pool's
@@ -231,6 +269,9 @@ class InFlight:
     # rows with the SAME read key (device future), for the agreement
     # comparison at collect time.
     shadow_preds: Optional[jax.Array] = None
+    # Resident-model operand bytes this dispatch streamed from HBM
+    # (see _resident_model_nbytes); lands in ServeMetrics at collect.
+    resident_nbytes: int = 0
 
 
 @dataclasses.dataclass
@@ -280,6 +321,13 @@ class ServeEngine:
         self.state = pool.state(tm_cfg)
         if ecfg.packed:
             self.state = self.state.pack()
+            # Plane-pack after packing (the index bitplane IS the packed
+            # include plane).  Sharded pools skip it: the packed2
+            # kernels are single-device custom calls, so a mesh engine
+            # would only buy a loud fallback.
+            if ecfg.pack_planes and not self.state.is_sharded and \
+                    hasattr(self.state, "pack_planes"):
+                self.state = self.state.pack_planes()
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._noise_free = not (pool.vcfg.c2c or pool.vcfg.csa_offset)
         # Capability-based backend selection, once, up front.  The noise
@@ -290,11 +338,15 @@ class ServeEngine:
         if isinstance(self.state, api.CoalescedState):
             default = (DEFAULT_COALESCED_SHARDED_BACKEND
                        if self.state.is_sharded
+                       else DEFAULT_COALESCED_PLANES_BACKEND
+                       if self.state.plane_packed
                        else DEFAULT_COALESCED_PACKED_BACKEND
                        if self.state.packed
                        else DEFAULT_COALESCED_BACKEND)
         else:
             default = (DEFAULT_SHARDED_BACKEND if self.state.is_sharded
+                       else DEFAULT_PLANES_BACKEND
+                       if self.state.plane_packed
                        else DEFAULT_PACKED_BACKEND if self.state.packed
                        else DEFAULT_BACKEND)
         prefer = ecfg.backend_preference() or default
@@ -340,6 +392,7 @@ class ServeEngine:
                             for i in range(pool.n_replicas)]
         else:
             self._slices = [self.state] * pool.n_replicas
+        self._refresh_resident_nbytes()
         self._fwd = self._build_forward()
         self._next_rid = 0
         self._submitted: List[int] = []
@@ -646,11 +699,17 @@ class ServeEngine:
                 _, shadow = self._fwd(self._slices[stable], lits, key,
                                       self._mask_one, bt=batch.bucket)
                 self.router.note_dispatch(stable, batch.bucket)
+            shadow_nbytes = (self._resident_full
+                             if self.ecfg.routing == "ensemble"
+                             else self._resident_slice)
             return InFlight(batch=batch, sums=sums, preds=preds,
                             replica=CANARY, t_dispatch=t_dispatch,
                             t_issue=self.clock(),
                             blocked_snapshot=self._blocked_s,
-                            version=canary.version, shadow_preds=shadow)
+                            version=canary.version, shadow_preds=shadow,
+                            resident_nbytes=_resident_model_nbytes(
+                                canary.state, self.backend)
+                            + shadow_nbytes)
         if self.ecfg.routing == "ensemble":
             sums, preds = self._fwd(self.state, lits, key,
                                     self._healthy_mask, bt=batch.bucket)
@@ -669,7 +728,10 @@ class ServeEngine:
                         replica=replica, t_dispatch=t_dispatch,
                         t_issue=self.clock(),
                         blocked_snapshot=self._blocked_s,
-                        version=self.pool.version)
+                        version=self.pool.version,
+                        resident_nbytes=(self._resident_full
+                                         if replica == ENSEMBLE
+                                         else self._resident_slice))
 
     def _take_canary_turn(self) -> Optional[_Canary]:
         """Deterministic traffic split: an accumulator hands ~fraction
@@ -728,7 +790,8 @@ class ServeEngine:
         # Pad rows (batch.n_padding of them) are dropped here by
         # construction: only batch.requests rows produce Responses.
         assert len(records) == batch.n_valid
-        self.metrics.record_batch(records, batch.bucket, batch.nbytes)
+        self.metrics.record_batch(records, batch.bucket, batch.nbytes,
+                                  resident_nbytes=fl.resident_nbytes)
         self.metrics.note_dispatch_timing(
             pack_s=batch.pack_s, wait_s=t_done - t_wait0,
             overlapped_s=overlapped)
@@ -824,6 +887,9 @@ class ServeEngine:
         state = pool.state(self.tm_cfg)
         if self.ecfg.packed:
             state = state.pack()
+            if self.ecfg.pack_planes and not state.is_sharded and \
+                    hasattr(state, "pack_planes"):
+                state = state.pack_planes()
         self.pool = pool
         self.state = state
         if hasattr(state, "replica_slice"):
@@ -831,6 +897,17 @@ class ServeEngine:
                             for i in range(pool.n_replicas)]
         else:
             self._slices = [state] * pool.n_replicas
+        self._refresh_resident_nbytes()
+
+    def _refresh_resident_nbytes(self) -> None:
+        """Per-dispatch resident operand bytes for the full state
+        (ensemble dispatch) and one replica slice (routed dispatch) —
+        recomputed whenever the pool changes, since fault injection can
+        grow a nominal plane-packed pool a deviation plane."""
+        self._resident_full = _resident_model_nbytes(self.state,
+                                                     self.backend)
+        self._resident_slice = _resident_model_nbytes(self._slices[0],
+                                                      self.backend)
 
     def arm_canary(self, state, version: int, fraction: float) -> None:
         """Mount a candidate single-chip state beside the stable pool.
@@ -848,6 +925,10 @@ class ServeEngine:
         if getattr(self.state, "packed", False) and \
                 not getattr(state, "packed", False):
             state = state.pack()     # match the serving wire format
+        if getattr(self.state, "plane_packed", False) and \
+                not getattr(state, "plane_packed", False) and \
+                hasattr(state, "pack_planes"):
+            state = state.pack_planes()  # match the resident format
         self._canary = _Canary(state=state, version=int(version),
                                fraction=float(fraction))
         self._canary_acc = 0.0
@@ -989,6 +1070,10 @@ class ServeEngine:
         out["backend"] = self.backend.name
         out["backend_preferred"] = self.selection.preferred
         out["packed_io"] = self.packed_io
+        out["plane_packed"] = bool(getattr(self.state, "plane_packed",
+                                           False))
+        out["resident_nbytes_full"] = self._resident_full
+        out["resident_nbytes_slice"] = self._resident_slice
         out["sharded"] = self.state.is_sharded
         out["mesh"] = (dict(self.mesh.shape) if self.mesh is not None
                        else None)

@@ -71,6 +71,13 @@ class ServeMetrics:
         self.padded_rows = 0
         self.valid_rows = 0
         self.bytes_moved = 0            # host->device operand bytes, total
+        # Resident-model operand bytes the fused forward streamed from
+        # HBM per dispatch (ISSUE 9): the conductance/include planes,
+        # NOT the literal wire.  Plane-packed states collapse the two
+        # dense f32 conductance+leak planes to a uint32 index bitplane
+        # (+ an optional f32 deviation plane), so this is where the
+        # packed-plane win shows up in serve_bench.
+        self.resident_bytes = 0
         self.t_first: Optional[float] = None
         self.t_last: Optional[float] = None
         # Capability-selection fallbacks (distinct reasons + count of
@@ -226,16 +233,20 @@ class ServeMetrics:
         return self.overlapped_s / busy if busy > 0 else 0.0
 
     def record_batch(self, records: List[RequestRecord], bucket: int,
-                     nbytes: int = 0) -> None:
+                     nbytes: int = 0, resident_nbytes: int = 0) -> None:
         """Account one dispatched batch; ``nbytes`` is the size of the
         literal operand that crossed host->device (the packed wire
-        format shrinks this ~32x vs f32, ~8x vs uint8)."""
+        format shrinks this ~32x vs f32, ~8x vs uint8) and
+        ``resident_nbytes`` the programmed-model operand bytes the
+        kernel streamed from HBM for this dispatch (plane-packed states
+        shrink this ~64x at nominal, ISSUE 9)."""
         self.records.extend(records)
         self.n_requests += len(records)
         self.batches += 1
         self.valid_rows += len(records)
         self.padded_rows += bucket - len(records)
         self.bytes_moved += int(nbytes)
+        self.resident_bytes += int(resident_nbytes)
         for r in records:
             self.requests_by_version[r.version] = \
                 self.requests_by_version.get(r.version, 0) + 1
@@ -282,6 +293,10 @@ class ServeMetrics:
                "bytes_moved": self.bytes_moved,
                "bytes_per_dispatch": (self.bytes_moved / self.batches
                                       if self.batches else 0.0),
+               "resident_bytes_moved": self.resident_bytes,
+               "resident_bytes_per_dispatch": (
+                   self.resident_bytes / self.batches
+                   if self.batches else 0.0),
                "forward_fallbacks": list(self.forward_fallbacks),
                "fallback_dispatches": self.fallback_dispatches,
                "host_pack_s": self.host_pack_s,

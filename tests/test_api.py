@@ -58,6 +58,12 @@ def states(small_cfg, random_ta, keys):
     out["crossbar_packed"] = out["crossbar"].pack()
     out["stack_packed"] = out["stack"].pack()
     out["coalesced_packed"] = out["coalesced"].pack()
+    # plane-packed twins (ISSUE 9): resident conductance planes folded
+    # into the LRS/HRS index bitplane (deviation plane elided — the
+    # fixture programs at nominal)
+    out["crossbar_planes"] = out["crossbar"].pack_planes()
+    out["stack_planes"] = out["stack"].pack_planes()
+    out["coalesced_planes"] = out["coalesced"].pack_planes()
     return out
 
 
@@ -65,7 +71,8 @@ def states(small_cfg, random_ta, keys):
 
 @pytest.mark.parametrize("name", ["digital", "crossbar", "stack",
                                   "coalesced", "digital_packed",
-                                  "stack_packed", "coalesced_packed"])
+                                  "stack_packed", "coalesced_packed",
+                                  "stack_planes", "coalesced_planes"])
 def test_state_pytree_roundtrip(states, name):
     s = states[name]
     leaves, treedef = jax.tree_util.tree_flatten(s)
@@ -166,9 +173,12 @@ def test_parity_matrix_all_backends_match_digital_reference(
     # analog{jnp,pallas} x {crossbar, stack} x {unpacked, packed} = 8,
     # analog-pallas-packed x {crossbar_packed, stack_packed} = 2,
     # coalesced{,-pallas} x {coalesced, coalesced_packed} = 4,
-    # coalesced-pallas-packed x {coalesced_packed} = 1
-    #   ->  20 (state, backend) cells
-    assert checked >= 20
+    # coalesced-pallas-packed x {coalesced_packed} = 1,
+    # + plane-packed (ISSUE 9): {crossbar,stack}_planes accepted by the
+    #   four analog backends = 8, coalesced_planes by the four
+    #   coalesced backends = 4
+    #   ->  32 (state, backend) cells
+    assert checked >= 32
 
 
 def test_predict_matches_digital_argmax(states, random_ta, small_cfg,
@@ -205,6 +215,22 @@ def test_selection_prefers_packed_backend_for_packed_state(states):
     sel_pin = api.select_backend(states["stack_packed"],
                                  prefer="analog-pallas")
     assert sel_pin.backend.name == "analog-pallas" and not sel_pin.fell_back
+
+
+def test_selection_prefers_planes_backend_for_plane_packed_state(states):
+    """A plane-packed state selects the packed2 kernel (priority 40);
+    a merely-packed state can never land on it (predicate gating)."""
+    sel = api.select_backend(states["stack_planes"])
+    assert sel.backend.name == "analog-pallas-packed2" and not sel.fell_back
+    assert api.CAP_PACKED_PLANES in sel.backend.capabilities
+    sel_c = api.select_backend(states["coalesced_planes"])
+    assert sel_c.backend.name == "coalesced-pallas-packed2"
+    assert not api.get_backend("analog-pallas-packed2").accepts(
+        states["stack_packed"])
+    # pack_planes implies pack: the index bitplane IS the include plane
+    assert states["stack_planes"].packed
+    assert states["stack_planes"].plane_index is \
+        states["stack_planes"].include_packed
 
 
 def test_selection_packed_state_with_csa_noise_falls_back(small_cfg, keys):

@@ -86,19 +86,19 @@ def test_entry_withheld_on_jax_backend_mismatch(small_cfg, random_ta, keys):
     the engine must run on defaults, not another platform's tiles."""
     shape_key = api.shape_bucket_key(small_cfg.n_clauses,
                                      small_cfg.n_literals)
-    api.register_tuning("analog-pallas-packed",
+    api.register_tuning("analog-pallas-packed2",
                         dict(ENTRY, jax_backend="tpu"),
                         shape_key=shape_key)
-    assert api.get_tuning("analog-pallas-packed",
+    assert api.get_tuning("analog-pallas-packed2",
                           shape_key=shape_key) is None
     eng = make_engine(small_cfg, random_ta, keys)
-    assert eng.backend.name == "analog-pallas-packed"
+    assert eng.backend.name == "analog-pallas-packed2"
     assert eng.tuning is None
     s = eng.summary()
     assert s["kernel_tiles"] == {}                  # default tiles
     assert s["buckets_tuned_for"] is None           # static ladder
     # same entry under the RUNTIME backend is consumed
-    api.register_tuning("analog-pallas-packed",
+    api.register_tuning("analog-pallas-packed2",
                         dict(ENTRY, jax_backend=jax.default_backend()),
                         shape_key=shape_key)
     eng2 = make_engine(small_cfg, random_ta, keys)
@@ -114,9 +114,10 @@ def test_entry_withheld_on_shape_bucket_mismatch(small_cfg, random_ta,
                                   small_cfg.n_literals)
     assert my_key != api.REF_SHAPE_KEY
     # the committed reference entry exists, but not for this bucket
-    assert api.get_tuning("analog-pallas-packed") is not None
-    assert api.get_tuning("analog-pallas-packed", shape_key=my_key) is None
-    api.register_tuning("analog-pallas-packed",
+    assert api.get_tuning("analog-pallas-packed2") is not None
+    assert api.get_tuning("analog-pallas-packed2",
+                          shape_key=my_key) is None
+    api.register_tuning("analog-pallas-packed2",
                         dict(ENTRY, jax_backend=jax.default_backend()),
                         shape_key="c1024-l4096")
     eng = make_engine(small_cfg, random_ta, keys)
@@ -170,7 +171,7 @@ def test_lazy_tune_measures_exactly_once(monkeypatch, small_cfg,
 
     monkeypatch.setattr(autotune, "autotune_backend", fake_measure)
     eng = make_engine(small_cfg, random_ta, keys, lazy_tune=True)
-    assert calls == ["analog-pallas-packed"]
+    assert calls == ["analog-pallas-packed2"]
     assert eng.tuning is not None and eng.tuning.get("lazy")
     assert eng.summary()["tuning_lazy"] is True
     assert eng.summary()["kernel_tiles"] == ENTRY["tiles"]
@@ -178,7 +179,7 @@ def test_lazy_tune_measures_exactly_once(monkeypatch, small_cfg,
     assert eng.batcher.cfg.bucket_sizes == (8, 16)
     # second engine: registry hit, no second measurement
     eng2 = make_engine(small_cfg, random_ta, keys, lazy_tune=True)
-    assert calls == ["analog-pallas-packed"]
+    assert calls == ["analog-pallas-packed2"]
     assert eng2.tuning == eng.tuning
 
 
@@ -217,9 +218,9 @@ def test_lazy_tune_real_measurement_roundtrip(small_cfg, random_ta, keys):
     produces consumable tiles + a bucket ladder."""
     shape_key = api.shape_bucket_key(small_cfg.n_clauses,
                                      small_cfg.n_literals)
-    api.clear_tuning("analog-pallas-packed")
+    api.clear_tuning("analog-pallas-packed2")
     eng = make_engine(small_cfg, random_ta, keys, lazy_tune=True)
-    entry = api.get_tuning("analog-pallas-packed", shape_key=shape_key)
+    entry = api.get_tuning("analog-pallas-packed2", shape_key=shape_key)
     assert entry is not None and entry["lazy"]
     assert entry["shape"]["n_features"] == small_cfg.n_features
     assert set(entry["tiles"]) == {"ct", "kt"}

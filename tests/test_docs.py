@@ -1,0 +1,97 @@
+"""Docs integrity gate: relative links and file anchors must resolve.
+
+Stdlib-only (regex over the committed markdown — no docs toolchain in
+the container), so it runs everywhere including the minimal-deps CI
+leg.  Checks every ``[text](target)`` in ``README.md`` and ``docs/``:
+
+* relative file links must point at files that exist in the repo
+  (broken cross-references between docs pages fail CI);
+* intra-page heading anchors (``#section``) must match a heading in
+  the target file, using GitHub's slug rules for the common cases;
+* absolute URLs are NOT fetched (no network in CI) — only their scheme
+  is sanity-checked.
+
+Inline code spans and fenced code blocks are stripped first so
+markdown-looking kernel snippets don't trip the scanner.
+"""
+
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = sorted(
+    [os.path.join(REPO, "README.md")] +
+    [os.path.join(REPO, "docs", f)
+     for f in os.listdir(os.path.join(REPO, "docs"))
+     if f.endswith(".md")])
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+CODE_SPAN_RE = re.compile(r"`[^`]*`")
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (the cases our docs use)."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _links(path):
+    with open(path) as f:
+        text = f.read()
+    text = FENCE_RE.sub("", text)
+    text = CODE_SPAN_RE.sub("", text)
+    return LINK_RE.findall(text)
+
+
+def _headings(path):
+    with open(path) as f:
+        text = FENCE_RE.sub("", f.read())
+    return {_slug(m.group(1))
+            for m in re.finditer(r"^#{1,6}\s+(.+)$", text, re.MULTILINE)}
+
+
+@pytest.mark.parametrize("path", DOC_FILES,
+                         ids=[os.path.relpath(p, REPO) for p in DOC_FILES])
+def test_markdown_links_resolve(path):
+    base = os.path.dirname(path)
+    for target in _links(path):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target):   # absolute URL
+            assert target.startswith(("http://", "https://")), \
+                f"{path}: suspicious link scheme {target!r}"
+            continue
+        target, _, anchor = target.partition("#")
+        dest = path if not target else os.path.normpath(
+            os.path.join(base, target))
+        assert os.path.exists(dest), \
+            f"{os.path.relpath(path, REPO)}: broken link -> {target}"
+        if anchor and dest.endswith(".md"):
+            assert anchor in _headings(dest), (
+                f"{os.path.relpath(path, REPO)}: anchor #{anchor} not a "
+                f"heading of {os.path.relpath(dest, REPO)}")
+
+
+def test_readme_exists_with_quickstart():
+    """The repo front page must exist and point at the runnable
+    30-second quickstart + the tier-1 verify command."""
+    readme = os.path.join(REPO, "README.md")
+    assert os.path.exists(readme)
+    with open(readme) as f:
+        text = f.read()
+    assert "examples/serve_quickstart.py" in text
+    assert "python -m pytest" in text
+    quickstart = os.path.join(REPO, "examples", "serve_quickstart.py")
+    assert os.path.exists(quickstart)
+
+
+def test_docs_pages_exist():
+    """The documented subsystem map: these pages are load-bearing (the
+    README and ROADMAP link into them)."""
+    for name in ("architecture.md", "serving.md", "backends.md",
+                 "autotune.md"):
+        assert os.path.exists(os.path.join(REPO, "docs", name)), name

@@ -1,0 +1,41 @@
+"""Docs drift gate: ``docs/backends.md`` must match the live registry.
+
+The backend table in the docs is generated, never hand-edited
+(``python -m repro.api.doctable``).  This tier-1 test renders the
+document from the CURRENT registry + committed tuning table and diffs
+it against the committed file, so:
+
+* registering a new backend without regenerating the docs fails CI
+  (the committed table is missing its row);
+* editing ``docs/backends.md`` by hand fails CI (the render wins);
+* a tuning-table regeneration that changes the tuned-bucket columns
+  must ship the regenerated docs in the same commit.
+
+Runs in the minimal-deps CI leg (stdlib + the repo itself only).
+"""
+
+import os
+
+from repro.api import doctable
+
+
+def test_backends_md_matches_live_registry():
+    assert os.path.exists(doctable.DEFAULT_OUT), (
+        f"missing {doctable.DEFAULT_OUT} — generate with "
+        "`PYTHONPATH=src python -m repro.api.doctable`")
+    with open(doctable.DEFAULT_OUT) as f:
+        committed = f.read()
+    assert committed == doctable.render(), (
+        "docs/backends.md has drifted from the live backend registry; "
+        "regenerate with `PYTHONPATH=src python -m repro.api.doctable` "
+        "(never edit it by hand)")
+
+
+def test_doctable_mentions_every_registered_backend():
+    """Belt-and-braces: every registry name appears in the render (the
+    equality test above would catch drift, but this one localizes a
+    missing row to the backend that lacks it)."""
+    from repro import api
+    text = doctable.render()
+    for b in api.list_backends():
+        assert f"`{b.name}`" in text, f"no docs row for {b.name}"

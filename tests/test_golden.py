@@ -5,7 +5,7 @@ to ``tm.forward`` — but if the *reference itself* drifted (a semantics
 change in ``core/tm.py``, a jax upgrade changing a kernel's rounding,
 all backends drifting together), the matrix would stay green while
 every committed result silently changed.  This suite closes that hole:
-``tests/golden/backends_v2.json`` carries the class sums + preds of a
+``tests/golden/backends_v3.json`` carries the class sums + preds of a
 fixed seed/model/batch, and EVERY registered backend must reproduce
 them bit-for-bit at ``VariationConfig.nominal()``.  v2 (ISSUE 6) adds
 the coalesced family (``coalesced-pallas``/``coalesced-pallas-packed``
@@ -13,6 +13,9 @@ and the packed coalesced state) and a ``backend_coverage`` map —
 {backend name: [golden states it accepts]} — that the registry-coverage
 meta-test (``test_registry_coverage.py``) checks against the live
 registry, so registering a backend without golden coverage fails CI.
+v3 (ISSUE 9) adds the plane-packed states (``*_planes``) and the
+``analog-pallas-packed2``/``coalesced-pallas-packed2`` backends that
+serve from the LRS/HRS index bitplane.
 
 The golden inputs (include mask, request batch) are recreated from
 seeds and guarded by committed SHA-256 digests, so a failure is
@@ -49,7 +52,7 @@ from repro.core.variations import VariationConfig
 from repro.kernels import ops
 
 GOLDEN_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                           "golden", "backends_v2.json")
+                           "golden", "backends_v3.json")
 
 # Fixed golden workload.  Changing ANY of these constants invalidates
 # the committed file — regenerate in the same commit.
@@ -96,6 +99,12 @@ def golden_states(cfg, inc, ta):
     states["crossbar_packed"] = states["crossbar"].pack()
     states["stack_packed"] = states["stack"].pack()
     states["coalesced_packed"] = states["coalesced"].pack()
+    # plane-packed twins (ISSUE 9): same model, resident conductance
+    # planes folded into the LRS/HRS index bitplane (+ deviation plane
+    # off-nominal — elided here, the golden model is nominal)
+    states["crossbar_planes"] = states["crossbar"].pack_planes()
+    states["stack_planes"] = states["stack"].pack_planes()
+    states["coalesced_planes"] = states["coalesced"].pack_planes()
     return states
 
 
@@ -188,9 +197,11 @@ def test_every_registered_backend_reproduces_golden(golden):
                         np.argmax(stacked[r], axis=-1), want_preds,
                         err_msg=f"{backend.name}/{name}")
             checked += 1
-    # digital family 5 + analog family 10 + coalesced family 5 cells
-    # (see test_api.py's parity-matrix census).
-    assert checked >= 20, f"only {checked} (backend, state) cells ran"
+    # digital family 5 + analog family 10 + coalesced family 5 cells,
+    # + 12 plane-packed cells (the 3 ``*_planes`` states against every
+    # backend that accepts them, incl. the packed2 pair) — see
+    # test_api.py's parity-matrix census.
+    assert checked >= 32, f"only {checked} (backend, state) cells ran"
 
 
 def test_predict_entrypoint_matches_golden(golden):
@@ -200,7 +211,8 @@ def test_predict_entrypoint_matches_golden(golden):
     states = golden_states(cfg, inc, ta)
     want = np.asarray(golden["preds"])
     for name in ("digital", "crossbar", "stack", "coalesced",
-                 "stack_packed", "coalesced_packed"):
+                 "stack_packed", "coalesced_packed",
+                 "stack_planes", "coalesced_planes"):
         got = np.asarray(api.predict(states[name], x))
         np.testing.assert_array_equal(got, want, err_msg=name)
 

@@ -223,14 +223,16 @@ def test_kernel_and_jnp_paths_agree(small_cfg, random_ta, boolean_batch,
 
 def test_default_engine_selects_packed_backend(small_cfg, random_ta, keys,
                                                boolean_batch):
-    """EngineConfig() defaults to the packed wire: the pool state gets a
-    packed include plane, selection lands on analog-pallas-packed, the
-    batcher queues uint32 words, and bytes-moved shrinks accordingly."""
+    """EngineConfig() defaults to the packed wire AND the plane-packed
+    resident format: the pool state gets a packed include plane (shared
+    with the LRS/HRS index bitplane), selection lands on
+    analog-pallas-packed2, the batcher queues uint32 words, and
+    bytes-moved shrinks accordingly."""
     eng = ServeEngine.from_ta_state(
         random_ta, small_cfg, n_replicas=2, key=keys["route"],
         vcfg=VariationConfig.nominal(), ecfg=EngineConfig())
-    assert eng.state.packed
-    assert eng.backend.name == "analog-pallas-packed"
+    assert eng.state.packed and eng.state.plane_packed
+    assert eng.backend.name == "analog-pallas-packed2"
     assert eng.packed_io and eng.batcher.packed
     eng.submit_many(list(boolean_batch[:16]))
     eng.drain()
@@ -258,7 +260,7 @@ def test_engine_consumes_registry_tuning_table(small_cfg, random_ta, keys):
     shape_key = api.shape_bucket_key(small_cfg.n_clauses,
                                      small_cfg.n_literals)
     saved = api.tuning_snapshot()
-    api.register_tuning("analog-pallas-packed",
+    api.register_tuning("analog-pallas-packed2",
                         {"tiles": {"ct": 32, "kt": 128},
                          "bucket_sizes": [8, 24, 96]},
                         shape_key=shape_key)
@@ -267,11 +269,11 @@ def test_engine_consumes_registry_tuning_table(small_cfg, random_ta, keys):
             random_ta, small_cfg, n_replicas=1, key=keys["route"],
             vcfg=VariationConfig.nominal(),
             ecfg=EngineConfig(batcher=BatcherConfig.for_max_batch(64)))
-        assert eng.backend.name == "analog-pallas-packed"
+        assert eng.backend.name == "analog-pallas-packed2"
         assert eng.shape_key == shape_key
         # 96 exceeds max_batch and is dropped; max_batch caps the ladder
         assert eng.batcher.cfg.bucket_sizes == (8, 24, 64)
-        assert eng.batcher.cfg.tuned_for == "analog-pallas-packed"
+        assert eng.batcher.cfg.tuned_for == "analog-pallas-packed2"
         assert eng.summary()["kernel_tiles"] == {"ct": 32, "kt": 128}
         # an explicit (hand-picked) ladder is NEVER overridden
         eng2 = ServeEngine.from_ta_state(
@@ -468,7 +470,7 @@ def test_coalesced_engine_matches_offline_forward(engine_cls):
         np.stack([r.class_sums for r in resps]), ref)
     assert [r.pred for r in resps] == list(np.argmax(ref, axis=-1))
     s = eng.summary()
-    assert s["backend"] == "coalesced-pallas-packed"
+    assert s["backend"] == "coalesced-pallas-packed2"
     assert s["packed_io"] and s["forward_fallbacks"] == []
     assert s["n_replicas"] == 1
     assert s["hardware"]["energy_nj_per_dp"] > 0

@@ -180,7 +180,7 @@ def test_coalesced_engine_streams_bit_exact(kws):
     eng = ServeEngine.from_coalesced(
         ta, w, ccfg, ecfg=EngineConfig(batcher=BatcherConfig(
             max_batch=16, bucket_sizes=(8, 16))))
-    assert eng.backend.name == "coalesced-pallas-packed"
+    assert eng.backend.name == "coalesced-pallas-packed2"
     assert not eng.selection.fell_back
     server = StreamServer(eng, kws["booleanizer"],
                           StreamConfig(window=WINDOW, hop=HOP, vote=VOTE))

@@ -62,9 +62,9 @@ def _spy_batches(engine):
     seen = []
     orig = engine.metrics.record_batch
 
-    def spy(records, bucket, nbytes=0):
+    def spy(records, bucket, nbytes=0, **kw):
         seen.append({r.version for r in records})
-        orig(records, bucket, nbytes)
+        orig(records, bucket, nbytes, **kw)
 
     engine.metrics.record_batch = spy
     return seen
