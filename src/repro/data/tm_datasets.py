@@ -148,6 +148,81 @@ def kws6_windows(frames, labels, windower) -> Tuple[np.ndarray, np.ndarray]:
     return np.concatenate(rows), np.concatenate(ys)
 
 
+def synthetic_sensor_anomaly(
+    key: jax.Array,
+    n_streams: int = 60,
+    n_frames: int = 64,
+    n_sensors: int = 8,
+    anomaly_rate: float = 0.3,
+    burst_frames: int = 12,
+    noise: float = 0.05,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sensor-stream stand-in for the anomaly workload (ISSUE 10).
+
+    Each stream is a smooth multichannel baseline — per-sensor sinusoids
+    with random phase/frequency plus a slow shared drift — and, on
+    ``anomaly_rate`` of the streams, one injected fault burst of
+    ``burst_frames`` frames: a high-frequency ring (strongest on the
+    odd sensors) plus a DC shift, the classic bearing-fault signature.
+    Within-burst frames are labeled 1, everything else 0, so windows
+    containing any burst frame carry anomaly evidence.
+
+    Returns ``(frames [N, T, S] float32, frame_labels [N, T] int32)`` —
+    raw frame streams for ``StreamingBooleanizer``, per-frame labels
+    for ``sensor_anomaly_windows`` to roll up per window.
+    """
+    if burst_frames > n_frames:
+        raise ValueError(f"burst_frames {burst_frames} exceeds n_frames "
+                         f"{n_frames}")
+    kflag, kstart, kph, kfreq, kn = jax.random.split(key, 5)
+    flags = jax.random.bernoulli(kflag, anomaly_rate, (n_streams,))
+    start = jax.random.randint(kstart, (n_streams,), 0,
+                               n_frames - burst_frames + 1)
+    phase = jax.random.uniform(kph, (n_streams, n_sensors))
+    freq = 0.5 + jax.random.uniform(kfreq, (n_streams, n_sensors))
+    t = jnp.arange(n_frames, dtype=jnp.float32) / n_frames     # [T]
+    s = jnp.arange(n_sensors, dtype=jnp.float32)               # [S]
+    frame = jnp.arange(n_frames)
+
+    def stream(flag, st, ph, fr):
+        base = jnp.sin(2 * jnp.pi * (4.0 * fr[None, :] * t[:, None]
+                                     + ph[None, :]))           # [T, S]
+        base = base + 0.3 * jnp.sin(
+            2 * jnp.pi * (t[:, None] + s[None, :] / n_sensors))
+        in_burst = flag & (frame >= st) & (frame < st + burst_frames)
+        ring = (jnp.sin(2 * jnp.pi * 24.0 * t)[:, None]
+                * (1.0 + (s[None, :] % 2)))
+        x = base + jnp.where(in_burst[:, None], 1.8 * ring + 1.2, 0.0)
+        return x, in_burst.astype(jnp.int32)
+
+    x, labels = jax.vmap(stream)(flags, start, phase, freq)
+    x = x + noise * jax.random.normal(kn, x.shape)
+    return x.astype(jnp.float32), labels
+
+
+def sensor_anomaly_windows(frames, frame_labels,
+                           windower) -> Tuple[np.ndarray, np.ndarray]:
+    """Offline windowing of sensor streams for training/eval.
+
+    ``windower`` is a fitted ``StreamingBooleanizer``; window ``i``
+    covers frames ``[i*hop, i*hop + window)`` and is labeled 1 iff ANY
+    frame in that span is anomalous — a burst shorter than the window
+    must still alert.  Returns
+    ``(rows [NW, window*S*K] uint8, y [NW] int64)``.
+    """
+    frames = np.asarray(frames)
+    frame_labels = np.asarray(frame_labels)
+    rows, ys = [], []
+    for i in range(frames.shape[0]):
+        r = windower.transform_offline(frames[i])
+        n = len(r)
+        idx = (windower.hop * np.arange(n)[:, None]
+               + np.arange(windower.window)[None, :])
+        rows.append(r)
+        ys.append(frame_labels[i][idx].max(axis=1).astype(np.int64))
+    return np.concatenate(rows), np.concatenate(ys)
+
+
 @dataclasses.dataclass(frozen=True)
 class PaperModelStats:
     """One row of the paper's Table IV (published model statistics)."""

@@ -161,10 +161,13 @@ def main(argv=None):
           f"{summary['batches']} batches (mean {summary['mean_batch']:.1f}"
           f"/batch, {100 * summary['padding_overhead']:.1f}% padding): "
           f"analog acc {summary['analog_accuracy']:.3f}")
+    # throughput_rps is None (not a number) until the served span is
+    # positive — a one-tick run has no meaningful rate.
+    tput = summary["throughput_rps"]
     print(f"[serve] sim latency p50/p95/p99: {summary['p50_ms']:.1f}/"
           f"{summary['p95_ms']:.1f}/{summary['p99_ms']:.1f} ms; "
-          f"{summary['throughput_rps']:.0f} inf/s (CPU interp); "
-          f"replica rows {summary['replica_load_rows']}")
+          f"{f'{tput:.0f}' if tput is not None else 'n/a'} inf/s "
+          f"(CPU interp); replica rows {summary['replica_load_rows']}")
     print(f"[serve] overlap: {100 * summary['overlap_fraction']:.0f}% of "
           f"device time hidden behind host work "
           f"(pack {summary['host_pack_s'] * 1e3:.1f} ms, blocked wait "

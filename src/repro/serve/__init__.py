@@ -24,8 +24,10 @@ Layers (see each module's docstring):
   quarantine/readmit decisions.
 """
 
-from repro.serve.batching import (Batch, BatcherConfig, DynamicBatcher,
-                                  QueueFull, Request)
+from repro.serve.batching import (QOS_BULK, QOS_CLASSES, QOS_LATENCY, Batch,
+                                  BatcherConfig, DynamicBatcher,
+                                  NonBooleanInput, QueueFull, Request,
+                                  validate_qos)
 from repro.serve.engine import (CANARY, DEFAULT_BACKEND,
                                 DEFAULT_COALESCED_BACKEND,
                                 DEFAULT_SHARDED_BACKEND, ENSEMBLE, EXPIRED,
@@ -37,13 +39,15 @@ from repro.serve.metrics import (RequestRecord, ServeMetrics,
 from repro.serve.replica import (CoalescedPool, ReplicaPool, RouterState,
                                  ensemble_vote, program_replica_pool)
 from repro.serve.stream import (Decision, StreamConfig, StreamServer,
-                                StreamSession, majority_vote)
+                                StreamSession, majority_vote, margin_of)
 from repro.serve.swap import (HotSwapper, RepairConfig, RepairPolicy,
                               SwapConfig, hot_swap, reprogrammed_pool,
                               restore_pool, snapshot_pool)
 
 __all__ = [
-    "Batch", "BatcherConfig", "DynamicBatcher", "QueueFull", "Request",
+    "QOS_BULK", "QOS_CLASSES", "QOS_LATENCY",
+    "Batch", "BatcherConfig", "DynamicBatcher", "NonBooleanInput",
+    "QueueFull", "Request", "validate_qos",
     "CANARY", "DEFAULT_BACKEND", "DEFAULT_COALESCED_BACKEND",
     "DEFAULT_SHARDED_BACKEND", "ENSEMBLE", "EXPIRED",
     "AsyncServeEngine", "EngineConfig", "InFlight", "Response",
@@ -53,7 +57,7 @@ __all__ = [
     "CoalescedPool", "ReplicaPool", "RouterState", "ensemble_vote",
     "program_replica_pool",
     "Decision", "StreamConfig", "StreamServer", "StreamSession",
-    "majority_vote",
+    "majority_vote", "margin_of",
     "HotSwapper", "RepairConfig", "RepairPolicy", "SwapConfig",
     "hot_swap", "reprogrammed_pool", "restore_pool", "snapshot_pool",
 ]

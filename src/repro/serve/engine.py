@@ -93,8 +93,9 @@ from repro.core import tm
 from repro.core.imbue import IMBUEConfig
 from repro.core.tm import TMConfig
 from repro.core.variations import VariationConfig
-from repro.serve.batching import Batch, BatcherConfig, DynamicBatcher, \
-    QueueFull, pack_request_np
+from repro.serve.batching import (QOS_BULK, Batch, BatcherConfig,
+                                  DynamicBatcher, QueueFull,
+                                  pack_request_np, validate_qos)
 from repro.serve.health import HealthConfig, HealthProbe
 from repro.serve.metrics import RequestRecord, ServeMetrics, hardware_figures
 from repro.serve.replica import ReplicaPool, RouterState, ensemble_vote, \
@@ -519,7 +520,8 @@ class ServeEngine:
     # --------------------------------------------------------------- intake
 
     def submit(self, x: np.ndarray, *,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               qos: str = QOS_BULK) -> int:
         """Queue one request (``[F]`` Boolean features); returns its id.
 
         ``deadline_s`` (ISSUE 8) is a *request* deadline relative to
@@ -530,34 +532,54 @@ class ServeEngine:
         shapes batch cutting.)  With ``EngineConfig.max_queue_depth``
         set, a full queue raises :class:`QueueFull` — the typed
         admission-control rejection — and the rejection is metered.
+
+        ``qos`` (ISSUE 10) picks the request's deadline class:
+        ``"latency"`` requests cut (small) batches early and are popped
+        first among ready queues; ``"bulk"`` (the default — the exact
+        pre-QoS behaviour) waits out the full ``max_wait_s`` to ride
+        large buckets.  Per-class ``BatcherConfig`` depth limits reject
+        a full class with :class:`QueueFull` without touching the other.
         """
+        validate_qos(qos)
         if (self.ecfg.max_queue_depth is not None
                 and len(self.batcher) >= self.ecfg.max_queue_depth):
-            self.metrics.note_rejected()
+            self.metrics.note_rejected(qos=qos)
             raise QueueFull(
                 f"queue depth {len(self.batcher)} is at "
                 f"max_queue_depth={self.ecfg.max_queue_depth}; retry "
                 "after pump() or raise the limit")
+        class_depth = self.batcher.cfg.queue_depth_for(qos)
+        if (class_depth is not None
+                and self.batcher.depth(qos) >= class_depth):
+            self.metrics.note_rejected(qos=qos)
+            raise QueueFull(
+                f"{qos} class depth {self.batcher.depth(qos)} is at its "
+                f"per-class limit {class_depth}; retry after pump() or "
+                "raise the limit")
         rid = self._next_rid
         self._next_rid += 1
-        self.batcher.submit(rid, x, self.clock(), deadline_s=deadline_s)
+        self.batcher.submit(rid, x, self.clock(), deadline_s=deadline_s,
+                            qos=qos)
         self._submitted.append(rid)
         return rid
 
     def submit_many(self, xs: Sequence[np.ndarray], *,
-                    deadline_s: Optional[float] = None) -> List[int]:
-        return [self.submit(x, deadline_s=deadline_s) for x in xs]
+                    deadline_s: Optional[float] = None,
+                    qos: str = QOS_BULK) -> List[int]:
+        return [self.submit(x, deadline_s=deadline_s, qos=qos)
+                for x in xs]
 
     # ------------------------------------------------------------- serving
 
-    def _reap_expired(self) -> None:
+    def _reap_expired(self, now: Optional[float] = None) -> None:
         """Resolve queued requests whose deadline has passed: each gets
         an ``expired=True`` Response (never dispatched) and a metrics
         tick.  Requests already abandoned via :meth:`discard` are
         dropped without a retained Response, matching the served path."""
-        now = self.clock()
+        if now is None:
+            now = self.clock()
         for req in self.batcher.reap_expired(now):
-            self.metrics.note_expired()
+            self.metrics.note_expired(qos=req.qos)
             if req.rid in self._discard:
                 self._discard.discard(req.rid)
                 continue
@@ -568,12 +590,20 @@ class ServeEngine:
                 version=self.pool.version, expired=True)
 
     def pump(self, force: bool = False) -> int:
-        """Cut and dispatch every due batch; returns #requests served."""
+        """Cut and dispatch every due batch; returns #requests served.
+
+        Expiry is re-checked at EVERY cut with the same clock reading
+        the cut uses: dispatches take real time, so during a multi-batch
+        drain a still-queued request's deadline can pass between cuts —
+        it must resolve ``expired=True``, never dispatch late (the
+        batcher's cut paths also reap internally, making the invariant
+        hold for direct ``cut(force=True)`` callers)."""
         self._prune_consumed()
-        self._reap_expired()
         served = 0
         while True:
-            batch = self.batcher.cut(self.clock(), force=force)
+            now = self.clock()
+            self._reap_expired(now)
+            batch = self.batcher.cut(now, force=force)
             if batch is None:
                 return served
             self._dispatch(batch)
@@ -786,7 +816,7 @@ class ServeEngine:
                 rid=req.rid, t_enqueue=req.t_enqueue,
                 t_dispatch=fl.t_dispatch, t_done=t_done,
                 bucket=batch.bucket, n_valid=batch.n_valid,
-                replica=fl.replica, version=fl.version))
+                replica=fl.replica, version=fl.version, qos=req.qos))
         # Pad rows (batch.n_padding of them) are dropped here by
         # construction: only batch.requests rows produce Responses.
         assert len(records) == batch.n_valid

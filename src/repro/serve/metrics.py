@@ -15,14 +15,16 @@ Two timebases coexist on purpose:
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import energy
 from repro.core.mapping import csa_count_packed
 from repro.core.tm import TMConfig
+from repro.serve.batching import QOS_BULK
 
 
 @dataclasses.dataclass
@@ -37,6 +39,7 @@ class RequestRecord:
     n_valid: int
     replica: int
     version: int = 0        # pool model generation that served it (ISSUE 7)
+    qos: str = QOS_BULK     # QoS class that shaped its batching (ISSUE 10)
 
     @property
     def latency_s(self) -> float:
@@ -48,9 +51,18 @@ class RequestRecord:
 
 
 def _percentile(sorted_vals: np.ndarray, q: float) -> float:
-    if len(sorted_vals) == 0:
+    """Nearest-rank percentile: smallest value with at least ``q`` of
+    the sample at or below it, i.e. index ``ceil(q*n) - 1``.
+
+    The previous ``int(round(q * (n - 1)))`` went through Python's
+    banker's rounding, which lands on the wrong rank at even window
+    sizes (n=4, q=0.5 -> round(1.5) -> index 2, the *third* order
+    statistic, where the nearest-rank median is the second).
+    """
+    n = len(sorted_vals)
+    if n == 0:
         return float("nan")
-    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    i = min(n - 1, max(0, math.ceil(q * n) - 1))
     return float(sorted_vals[i])
 
 
@@ -119,6 +131,15 @@ class ServeMetrics:
         self.probe_rounds = 0
         self.quarantine_events: List[dict] = []
         self.fault_injections: List[dict] = []
+        # Per-QoS-class accounting (ISSUE 10): a bounded window of
+        # (latency_s, queue_wait_s) pairs per class for percentiles,
+        # plus lifetime served/rejected/expired counters.  The summary
+        # block is elided while only the default ``bulk`` class has ever
+        # been seen, so pre-QoS engines keep byte-identical summaries.
+        self.qos_records: Dict[str, Deque[Tuple[float, float]]] = {}
+        self.qos_counts: Dict[str, int] = {}
+        self.qos_rejected: Dict[str, int] = {}
+        self.qos_expired: Dict[str, int] = {}
         # Streaming sessions (ISSUE 5): per-session keyword-decision
         # aggregates — count, first/last decision clock time, and a
         # BOUNDED window of recent latencies (always-on sessions must
@@ -158,13 +179,27 @@ class ServeMetrics:
             return None
         return self.canary_agree_rows / self.canary_rows
 
-    def note_expired(self, n: int = 1) -> None:
+    # Per-class percentile window: smaller than RECORDS_WINDOW (the
+    # classes partition it) but big enough for a stable p99.
+    QOS_WINDOW = 8192
+
+    def _qos_window(self, qos: str) -> Deque[Tuple[float, float]]:
+        win = self.qos_records.get(qos)
+        if win is None:
+            win = self.qos_records[qos] = deque(maxlen=self.QOS_WINDOW)
+        return win
+
+    def note_expired(self, n: int = 1, qos: Optional[str] = None) -> None:
         """Account ``n`` requests whose deadline elapsed while queued."""
         self.expired_requests += int(n)
+        if qos is not None:
+            self.qos_expired[qos] = self.qos_expired.get(qos, 0) + int(n)
 
-    def note_rejected(self, n: int = 1) -> None:
+    def note_rejected(self, n: int = 1, qos: Optional[str] = None) -> None:
         """Account ``n`` submissions refused by admission control."""
         self.rejected_requests += int(n)
+        if qos is not None:
+            self.qos_rejected[qos] = self.qos_rejected.get(qos, 0) + int(n)
 
     def note_health(self, health: Dict[int, float]) -> None:
         """Record one probe round's per-replica agreement scores."""
@@ -250,6 +285,8 @@ class ServeMetrics:
         for r in records:
             self.requests_by_version[r.version] = \
                 self.requests_by_version.get(r.version, 0) + 1
+            self._qos_window(r.qos).append((r.latency_s, r.queue_wait_s))
+            self.qos_counts[r.qos] = self.qos_counts.get(r.qos, 0) + 1
         t0 = min(r.t_enqueue for r in records)
         t1 = max(r.t_done for r in records)
         self.t_first = t0 if self.t_first is None else min(self.t_first, t0)
@@ -273,11 +310,49 @@ class ServeMetrics:
                 "queue_p95_ms": _percentile(waits, 0.95),
                 "queue_p99_ms": _percentile(waits, 0.99)}
 
-    def throughput(self) -> float:
-        """Served requests per second of simulation wall-clock."""
-        if not self.n_requests or self.t_last == self.t_first:
-            return float("nan")
-        return self.n_requests / (self.t_last - self.t_first)
+    def throughput(self) -> Optional[float]:
+        """Served requests per second of simulation wall-clock.
+
+        None (JSON null, never inf/NaN — the summary must stay
+        strict-JSON serializable) until the served span is positive: a
+        single dispatch landing within one clock tick has
+        ``t_last == t_first`` and no meaningful rate.
+        """
+        if not self.n_requests or self.t_first is None:
+            return None
+        elapsed = self.t_last - self.t_first
+        if elapsed <= 0:
+            return None
+        return self.n_requests / elapsed
+
+    def qos_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-QoS-class served counts, latency and queue-wait
+        percentiles (recent window), and rejected/expired counters."""
+        out: Dict[str, Dict[str, float]] = {}
+        classes = (set(self.qos_records) | set(self.qos_rejected)
+                   | set(self.qos_expired))
+        for qos in sorted(classes):
+            win = self.qos_records.get(qos, ())
+            lats = np.sort([lat for lat, _ in win]) * 1e3
+            waits = np.sort([w for _, w in win]) * 1e3
+
+            def pct(vals, q):
+                # None, not NaN, for a class seen only via rejections:
+                # the summary must stay strict-JSON serializable.
+                return _percentile(vals, q) if len(vals) else None
+
+            out[qos] = {
+                "requests": self.qos_counts.get(qos, 0),
+                "p50_ms": pct(lats, 0.50),
+                "p95_ms": pct(lats, 0.95),
+                "p99_ms": pct(lats, 0.99),
+                "queue_p50_ms": pct(waits, 0.50),
+                "queue_p95_ms": pct(waits, 0.95),
+                "queue_p99_ms": pct(waits, 0.99),
+                "rejected": self.qos_rejected.get(qos, 0),
+                "expired": self.qos_expired.get(qos, 0),
+            }
+        return out
 
     def padding_overhead(self) -> float:
         """Fraction of dispatched kernel rows that were padding."""
@@ -310,6 +385,13 @@ class ServeMetrics:
         sessions = self.sessions_summary()
         if sessions:                    # streaming only — keep plain
             out["sessions"] = sessions  # serving summaries noise-free
+        # Per-class block only once a NON-default class has been seen
+        # (served, rejected, or expired): bulk-only engines — i.e. every
+        # pre-QoS caller — keep their summary keys unchanged.
+        qos_classes = (set(self.qos_records) | set(self.qos_rejected)
+                       | set(self.qos_expired))
+        if qos_classes - {QOS_BULK}:
+            out["qos"] = self.qos_summary()
         # Hot-swap blocks appear only once a swap or canary actually
         # happened — a plain always-v0 deployment keeps its summary
         # unchanged (and strictly JSON-serializable: int keys stringify).

@@ -44,7 +44,10 @@ from typing import Deque, Dict, Iterable, List, Optional
 import numpy as np
 
 from repro.core.booleanize import Booleanizer, StreamingBooleanizer
+from repro.serve.batching import QOS_BULK, QueueFull, validate_qos
 from repro.serve.engine import ServeEngine
+
+DECISION_MODES = ("argmax", "margin")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +61,24 @@ class StreamConfig:
     # an always-on session cannot grow host memory forever; the full
     # count/rate survive in ServeMetrics aggregates.
     history: int = 4096
+    # QoS class every window of a session submits under (ISSUE 10):
+    # "bulk" (default, the pre-QoS behaviour) or "latency".  Per-session
+    # override via StreamServer.session(sid, qos=...).
+    qos: str = QOS_BULK
+    # Per-window decision rule.  "argmax" (default): pred = argmax of
+    # the class sums — the KWS workload.  "margin": threshold the
+    # class-sum MARGIN of ``margin_class`` over the best other class
+    # (TM class sums are calibrated evidence totals, so the margin is a
+    # native confidence score) — the anomaly-detection workload: pred =
+    # margin_class iff margin >= margin_threshold.  Pure post-dispatch
+    # arithmetic on Response.class_sums; the engine path is identical,
+    # so nominal bit-exactness extends to margins.
+    decision: str = "argmax"
+    margin_class: int = 1    # class whose margin is thresholded
+    margin_threshold: float = 0.0
+    # Admission control: max live sessions a StreamServer accepts (None
+    # = unbounded).  Session s max_sessions+1 raises QueueFull.
+    max_sessions: Optional[int] = None
 
     def __post_init__(self):
         if self.window < 1 or self.hop < 1 or self.vote < 1:
@@ -65,6 +86,31 @@ class StreamConfig:
                              f"{self.window}/{self.hop}/{self.vote}")
         if self.history < 1:
             raise ValueError(f"history must be >= 1, got {self.history}")
+        validate_qos(self.qos)
+        if self.decision not in DECISION_MODES:
+            raise ValueError(f"unknown decision mode {self.decision!r}; "
+                             f"expected one of {DECISION_MODES}")
+        if self.margin_class < 0:
+            raise ValueError(f"margin_class must be >= 0, got "
+                             f"{self.margin_class}")
+        if self.max_sessions is not None and self.max_sessions < 1:
+            raise ValueError(f"max_sessions must be >= 1, got "
+                             f"{self.max_sessions}")
+
+
+def margin_of(class_sums, margin_class: int) -> float:
+    """Class-sum margin of ``margin_class`` over the best other class.
+
+    The scalar the anomaly workload thresholds; also the offline
+    reference the bit-exactness tests compare streamed margins against
+    (computed from ``api.class_sums`` on the same windows).
+    """
+    sums = np.asarray(class_sums, dtype=np.int64)
+    if not 0 <= margin_class < sums.shape[-1]:
+        raise ValueError(f"margin_class {margin_class} out of range for "
+                         f"{sums.shape[-1]} classes")
+    others = np.delete(sums, margin_class, axis=-1)
+    return float(sums[margin_class] - others.max())
 
 
 def majority_vote(preds: Iterable[int]) -> int:
@@ -88,6 +134,9 @@ class Decision:
                              # (ISSUE 7: sessions ride through hot-swaps
                              # with zero dropped windows; this is the
                              # per-decision evidence of which model read)
+    # Class-sum margin this window's decision thresholded (margin mode
+    # only; None under argmax — the KWS summary stays unchanged).
+    margin: Optional[float] = None
 
 
 class StreamSession:
@@ -126,11 +175,33 @@ class StreamSession:
 
     def feed(self, frames) -> List[int]:
         """Push raw ``[T, F]`` frames; submits every window they complete
-        to the shared engine.  Returns the submitted request ids."""
+        to the shared engine under the session's QoS class.  Returns the
+        submitted request ids."""
         rows = self.windows.push(frames)
-        rids = [self.engine.submit(row) for row in rows]
+        rids = [self.engine.submit(row, qos=self.scfg.qos)
+                for row in rows]
         self._pending.extend(rids)
         return rids
+
+    def _decide(self, resp) -> tuple:
+        """Per-window (pred, margin) under the session's decision mode.
+
+        Margin mode: pred = ``margin_class`` iff its class-sum margin
+        clears ``margin_threshold``; otherwise the argmax over the
+        REMAINING classes (original indexing).  Derived from
+        ``Response.class_sums`` only — no engine/dispatch change, so the
+        streamed margin bit-equals the offline ``api.class_sums``
+        margin at nominal.
+        """
+        if self.scfg.decision != "margin" or resp.expired:
+            return int(resp.pred), None     # expired: keep the -1 marker
+        sums = np.asarray(resp.class_sums, dtype=np.int64)
+        mc = self.scfg.margin_class
+        margin = margin_of(sums, mc)
+        if margin >= self.scfg.margin_threshold:
+            return mc, margin
+        others = np.delete(np.arange(sums.shape[-1]), mc)
+        return int(others[sums[others].argmax()]), margin
 
     def collect(self) -> List[Decision]:
         """Turn already-served windows into decisions (in stream order).
@@ -148,13 +219,15 @@ class StreamSession:
             if resp is None:
                 break
             self._pending.popleft()
-            self._votes.append(int(resp.pred))
+            pred, margin = self._decide(resp)
+            self._votes.append(pred)
             d = Decision(session=self.sid, index=self._n_decided,
-                         pred=int(resp.pred),
+                         pred=pred,
                          keyword=majority_vote(self._votes),
                          votes=len(self._votes),
                          latency_s=resp.latency_s,
-                         version=resp.version)
+                         version=resp.version,
+                         margin=margin)
             self._n_decided += 1
             self.decisions.append(d)
             self.engine.metrics.note_decision(self.sid, resp.latency_s,
@@ -192,6 +265,13 @@ class StreamServer:
     :class:`StreamConfig`), ``pump()`` advances the engine and collects
     every session's newly served windows, ``drain()`` force-serves the
     queue and collects everything outstanding.
+
+    Admission control (ISSUE 10): with ``StreamConfig.max_sessions``
+    set, creating a live session beyond the limit raises
+    :class:`QueueFull` (metered); a :meth:`close` frees a slot.  A
+    session can override the server-wide QoS class at creation:
+    ``session(sid, qos="latency")`` — mixed-QoS sessions share one
+    engine, which is the standing heavy-traffic bench scenario.
     """
 
     def __init__(self, engine: ServeEngine, booleanizer: Booleanizer,
@@ -201,11 +281,31 @@ class StreamServer:
         self.scfg = scfg
         self.sessions: Dict[str, StreamSession] = {}
 
-    def session(self, sid: str) -> StreamSession:
+    def session(self, sid: str, *, qos: Optional[str] = None,
+                decision: Optional[str] = None) -> StreamSession:
+        """Get or lazily create a session.  ``qos``/``decision``
+        override the server-wide :class:`StreamConfig` for a NEW
+        session only (an existing sid keeps its config — overrides on a
+        live session would corrupt its vote/margin semantics)."""
         sid = str(sid)
         if sid not in self.sessions:
+            if (self.scfg.max_sessions is not None
+                    and len(self.sessions) >= self.scfg.max_sessions):
+                self.engine.metrics.note_rejected(
+                    qos=qos if qos is not None else self.scfg.qos)
+                raise QueueFull(
+                    f"live sessions {len(self.sessions)} at "
+                    f"max_sessions={self.scfg.max_sessions}; close() a "
+                    "session or raise the limit")
+            scfg = self.scfg
+            if qos is not None or decision is not None:
+                scfg = dataclasses.replace(
+                    scfg,
+                    qos=qos if qos is not None else scfg.qos,
+                    decision=(decision if decision is not None
+                              else scfg.decision))
             self.sessions[sid] = StreamSession(sid, self.engine,
-                                               self.booleanizer, self.scfg)
+                                               self.booleanizer, scfg)
         return self.sessions[sid]
 
     def feed(self, sid: str, frames) -> List[int]:

@@ -1,0 +1,443 @@
+"""QoS classes + the ISSUE 10 bugfix regressions.
+
+Three failing-before/passing-after regression suites:
+
+* drain/expiry race — a request whose client SLO passes BETWEEN two cuts
+  of one multi-batch drain must resolve ``expired=True``, never dispatch
+  late (sync and async engines, plus the batcher's own ``cut`` paths);
+* non-Boolean packing — ``pack_request_np``'s uint8 complement wraps for
+  x > 1 (both planes pack as 1), so both wire formats must REJECT with
+  the typed ``NonBooleanInput`` instead of silently corrupting;
+* metrics edges — nearest-rank percentiles must not banker's-round to
+  the wrong rank at even window sizes, and a zero-elapsed serving span
+  must yield ``throughput() is None`` (strict JSON), not inf/NaN.
+
+Plus the QoS tentpole edges: latency-class early cuts never starve
+bulk, per-class ``QueueFull`` sheds exactly the full class, per-class
+percentile windows stay bounded, and margin-threshold streaming
+decisions bit-equal the digital oracle's class-sum margins at nominal.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tm
+from repro.core.booleanize import StreamingBooleanizer, fit_quantile
+from repro.core.tm import TMConfig
+from repro.core.variations import VariationConfig
+from repro.data.tm_datasets import (sensor_anomaly_windows,
+                                    synthetic_sensor_anomaly)
+from repro.serve import (QOS_BULK, QOS_LATENCY, AsyncServeEngine,
+                         BatcherConfig, DynamicBatcher, EngineConfig,
+                         NonBooleanInput, QueueFull, RequestRecord,
+                         ServeEngine, ServeMetrics, StreamConfig,
+                         StreamServer, margin_of)
+from repro.serve.batching import pack_request_np
+from repro.serve.metrics import _percentile
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_engine(small_cfg, random_ta, clock, engine_cls=ServeEngine,
+                batcher=None, **ecfg_kw):
+    batcher = batcher or BatcherConfig(max_batch=8, bucket_sizes=(8,))
+    return engine_cls.from_ta_state(
+        random_ta, small_cfg, n_replicas=2, key=jax.random.PRNGKey(7),
+        vcfg=VariationConfig.nominal(), clock=clock,
+        ecfg=EngineConfig(batcher=batcher, **ecfg_kw))
+
+
+# ------------------------------------- bugfix 1: drain vs expiry race
+
+def _advancing_dispatch(eng, clock, dt):
+    """Wrap ``_dispatch`` so every dispatch consumes ``dt`` of (fake)
+    wall-clock — the real-world condition that makes a multi-batch
+    drain outlive a queued request's SLO."""
+    orig = eng._dispatch
+
+    def dispatch_and_tick(batch):
+        orig(batch)
+        clock.advance(dt)
+
+    eng._dispatch = dispatch_and_tick
+
+
+@pytest.mark.parametrize("engine_cls", [ServeEngine, AsyncServeEngine])
+def test_drain_reaps_requests_expiring_mid_drain(small_cfg, random_ta,
+                                                 boolean_batch,
+                                                 engine_cls):
+    """Regression (ISSUE 10): requests whose expiry passes BETWEEN two
+    cuts of one drain must come back ``expired=True``, not dispatch
+    late.  Before the fix, ``pump`` reaped once up front and then kept
+    cutting with fresh clock reads, so the second batch dispatched
+    requests already past their deadline."""
+    clock = FakeClock()
+    eng = make_engine(small_cfg, random_ta, clock, engine_cls=engine_cls)
+    rids = [eng.submit(boolean_batch[i], deadline_s=0.5)
+            for i in range(16)]
+    # The first cut dispatches 8 requests and "takes" 1s — past the
+    # remaining 8 requests' 0.5s deadline.
+    _advancing_dispatch(eng, clock, 1.0)
+    responses = {r.rid: r for r in eng.drain()}
+    assert len(responses) == 16
+    served = [r for r in rids if not responses[r].expired]
+    expired = [r for r in rids if responses[r].expired]
+    assert served == rids[:8]
+    assert expired == rids[8:]
+    for rid in expired:
+        assert responses[rid].pred == -1
+        np.testing.assert_array_equal(
+            responses[rid].class_sums,
+            np.zeros(small_cfg.n_classes, np.int32))
+    assert eng.summary()["expired"] == 8
+
+
+def test_batcher_forced_cut_never_returns_expired():
+    """The batcher-level half of the invariant: every ``cut`` path —
+    forced included — sets expired requests aside for ``reap_expired``
+    instead of batching them."""
+    clock = FakeClock()
+    b = DynamicBatcher(BatcherConfig(max_batch=8, bucket_sizes=(8,)))
+    b.submit(0, np.ones(4, np.uint8), clock(), deadline_s=0.5)
+    b.submit(1, np.ones(4, np.uint8), clock())          # no expiry
+    clock.advance(1.0)
+    batch = b.cut(clock(), force=True)
+    assert batch is not None and [r.rid for r in batch.requests] == [1]
+    assert [r.rid for r in b.reap_expired(clock())] == [0]
+    assert len(b) == 0
+    # all-expired queue: the forced cut yields nothing at all
+    b.submit(2, np.ones(4, np.uint8), clock(), deadline_s=0.1)
+    clock.advance(1.0)
+    assert b.cut(clock(), force=True) is None
+    assert [r.rid for r in b.reap_expired(clock())] == [2]
+
+
+# --------------------------------- bugfix 2: non-Boolean input packing
+
+def test_pack_request_rejects_non_boolean():
+    """Regression (ISSUE 10): uint8 ``1 - x`` wraps for x=2 (-> 255),
+    so packbits saw BOTH the literal and its complement as 1.  Both
+    wire formats must reject x=2 with the typed error — that is how
+    the packed and unpacked paths agree on non-Boolean inputs."""
+    bad = np.array([2, 0, 1, 0], np.uint8)
+    with pytest.raises(NonBooleanInput, match="Boolean"):
+        pack_request_np(bad)
+    for packed in (False, True):
+        b = DynamicBatcher(BatcherConfig(max_batch=8, bucket_sizes=(8,)),
+                           packed=packed)
+        with pytest.raises(NonBooleanInput, match="Boolean"):
+            b.submit(0, bad, now=0.0)
+        assert len(b) == 0                  # nothing half-enqueued
+    # valid Boolean inputs still pack: literal plane then complement
+    ok = pack_request_np(np.array([1, 0], np.uint8))
+    assert ok.dtype == np.uint32
+    # bits: x=[1,0], ~x=[0,1] -> little-endian 0b1001 = 9
+    assert ok.tolist() == [0b1001]
+
+
+def test_engine_submit_rejects_non_boolean(small_cfg, random_ta):
+    """The engine surfaces the typed error pre-enqueue: no rid leaks
+    into bookkeeping, later drains are unaffected."""
+    eng = make_engine(small_cfg, random_ta, FakeClock())
+    with pytest.raises(NonBooleanInput):
+        eng.submit(np.full(small_cfg.n_features, 2, np.uint8))
+    assert len(eng.batcher) == 0
+    assert eng.drain() == []
+
+
+# -------------------------------------- bugfix 3: metrics edge cases
+
+def test_percentile_nearest_rank():
+    """Regression (ISSUE 10): ``int(round(q*(n-1)))`` banker's-rounds
+    to the wrong rank at even window sizes — the n=4 median came back
+    as the THIRD order statistic.  Nearest-rank is ``ceil(q*n) - 1``."""
+    four = np.array([1.0, 2.0, 3.0, 4.0])
+    assert _percentile(four, 0.50) == 2.0       # was 3.0 before the fix
+    assert _percentile(four, 0.25) == 1.0
+    assert _percentile(four, 0.75) == 3.0
+    assert _percentile(four, 1.00) == 4.0
+    assert _percentile(four, 0.0) == 1.0        # clamped to the floor
+    ten = np.arange(1.0, 11.0)
+    assert _percentile(ten, 0.90) == 9.0        # ceil(9) - 1 = index 8
+    assert _percentile(ten, 0.99) == 10.0
+    assert np.isnan(_percentile(np.array([]), 0.5))
+
+
+def _record(rid, t0, t1, qos=QOS_BULK):
+    return RequestRecord(rid=rid, t_enqueue=t0, t_dispatch=t0, t_done=t1,
+                         bucket=8, n_valid=1, replica=0, qos=qos)
+
+
+def test_throughput_zero_elapsed_is_none_and_json_strict():
+    """Regression (ISSUE 10): one dispatch landing within a single
+    clock tick made ``summary()`` divide by zero (inf/NaN req/s).  The
+    rate is now None until the span is positive, and the whole summary
+    stays strict-JSON."""
+    m = ServeMetrics()
+    assert m.throughput() is None               # no traffic at all
+    m.record_batch([_record(0, 5.0, 5.0)], bucket=8)
+    assert m.throughput() is None               # zero elapsed
+    s = m.summary()
+    assert s["throughput_rps"] is None
+    json.dumps(s, allow_nan=False)              # no inf/NaN anywhere
+    m.record_batch([_record(1, 5.0, 7.0)], bucket=8)
+    assert m.throughput() == pytest.approx(1.0)  # 2 requests / 2 s
+
+
+# --------------------------------------------------- QoS class edges
+
+def test_latency_cuts_early_bulk_waits(small_cfg, random_ta,
+                                       boolean_batch):
+    """Latency requests cut at their shorter deadline; bulk keeps
+    waiting for its own — and is cut the first pump after it fires
+    (early latency cuts never starve bulk)."""
+    clock = FakeClock()
+    cfg = BatcherConfig(max_batch=8, bucket_sizes=(8,),
+                        max_wait_s=10e-3, latency_max_wait_s=1e-3)
+    eng = make_engine(small_cfg, random_ta, clock, batcher=cfg)
+    bulk = eng.submit(boolean_batch[0])                  # t = 0
+    lat = eng.submit(boolean_batch[1], qos=QOS_LATENCY)  # t = 0
+    clock.advance(2e-3)              # past latency wait, not bulk's
+    eng.pump()
+    assert eng.result(lat) is not None and eng.result(lat).pred >= 0
+    assert eng.poll(bulk) is None                # still queued, NOT cut
+    # keep latency traffic flowing — bulk must still be served the
+    # first pump after ITS deadline fires
+    for i in range(4):
+        eng.submit(boolean_batch[2 + i], qos=QOS_LATENCY)
+        clock.advance(2e-3)
+        eng.pump()
+    assert clock() >= 10e-3
+    resp = eng.result(bulk)
+    assert resp is not None and resp.pred >= 0 and not resp.expired
+    s = eng.summary()
+    assert s["expired"] == 0
+    # per-class observability: both classes report percentiles, and the
+    # bulk class's queue wait reflects its longer deadline
+    qs = s["qos"]
+    assert set(qs) == {QOS_LATENCY, QOS_BULK}
+    assert qs[QOS_LATENCY]["requests"] == 5
+    assert qs[QOS_BULK]["requests"] == 1
+    assert qs[QOS_LATENCY]["queue_p99_ms"] < qs[QOS_BULK]["queue_p99_ms"]
+
+
+def test_batches_never_mix_qos_classes():
+    clock = FakeClock()
+    b = DynamicBatcher(BatcherConfig(max_batch=8, bucket_sizes=(8,)))
+    for rid in range(4):
+        b.submit(rid, np.ones(4, np.uint8), clock(),
+                 qos=QOS_LATENCY if rid % 2 else QOS_BULK)
+    batches = []
+    while True:
+        batch = b.cut(clock(), force=True)
+        if batch is None:
+            break
+        batches.append(batch)
+    assert [bt.qos for bt in batches] == [QOS_LATENCY, QOS_BULK]
+    for bt in batches:
+        assert {r.qos for r in bt.requests} == {bt.qos}
+
+
+def test_per_class_queue_full_sheds_only_that_class(small_cfg, random_ta,
+                                                    boolean_batch):
+    cfg = BatcherConfig(max_batch=8, bucket_sizes=(8,),
+                        latency_queue_depth=2, bulk_queue_depth=4)
+    eng = make_engine(small_cfg, random_ta, FakeClock(), batcher=cfg)
+    for i in range(2):
+        eng.submit(boolean_batch[i], qos=QOS_LATENCY)
+    with pytest.raises(QueueFull, match="latency"):
+        eng.submit(boolean_batch[2], qos=QOS_LATENCY)
+    # the bulk class is untouched by the full latency class
+    for i in range(4):
+        eng.submit(boolean_batch[3 + i])
+    with pytest.raises(QueueFull, match="bulk"):
+        eng.submit(boolean_batch[7])
+    qs = eng.summary()["qos"]
+    assert qs[QOS_LATENCY]["rejected"] == 1
+    assert qs[QOS_BULK]["rejected"] == 1
+    eng.pump(force=True)                      # drain -> both admit again
+    eng.submit(boolean_batch[0], qos=QOS_LATENCY)
+    eng.submit(boolean_batch[1])
+    assert eng.summary()["rejected"] == 2     # no new rejections
+
+
+def test_qos_percentile_windows_stay_bounded():
+    m = ServeMetrics()
+    m.QOS_WINDOW = 16                         # shrink for the test
+    for lo in range(0, 100, 10):
+        m.record_batch([_record(lo + i, float(lo + i), float(lo + i) + 1.0,
+                                qos=QOS_LATENCY) for i in range(10)],
+                       bucket=16)
+    assert len(m.qos_records[QOS_LATENCY]) == 16      # window, bounded
+    qs = m.summary()["qos"]
+    assert qs[QOS_LATENCY]["requests"] == 100         # lifetime count
+    assert qs[QOS_LATENCY]["p50_ms"] == pytest.approx(1000.0)
+
+
+def test_bulk_only_summary_has_no_qos_block(small_cfg, random_ta,
+                                            boolean_batch):
+    """Migration guarantee: engines that never use a non-default class
+    keep their summary keys exactly as before."""
+    eng = make_engine(small_cfg, random_ta, FakeClock())
+    eng.submit_many(list(boolean_batch[:4]))
+    eng.drain()
+    assert "qos" not in eng.summary()
+
+
+# ------------------------------ anomaly workload: margin decisions
+
+SENSORS, ABITS, AWINDOW, AHOP = 4, 2, 4, 2
+
+
+@pytest.fixture(scope="module")
+def anomaly():
+    """Small sensor-anomaly fixture: streams, booleanizer, and a
+    2-class TM at the window shape (training-free sparse includes)."""
+    frames, flabels = synthetic_sensor_anomaly(
+        jax.random.PRNGKey(0), n_streams=6, n_frames=24,
+        n_sensors=SENSORS, anomaly_rate=0.5)
+    booleanizer = fit_quantile(np.asarray(frames).reshape(-1, SENSORS),
+                               bits=ABITS)
+    cfg = TMConfig(n_classes=2, clauses_per_class=8,
+                   n_features=AWINDOW * SENSORS * ABITS, n_states=100)
+    inc = jax.random.bernoulli(jax.random.PRNGKey(5), 0.1,
+                               (cfg.n_clauses, cfg.n_literals))
+    ta = jnp.where(inc, cfg.n_states + 1, cfg.n_states).astype(
+        cfg.state_dtype)
+    return dict(frames=np.asarray(frames), flabels=np.asarray(flabels),
+                booleanizer=booleanizer, cfg=cfg, ta=ta)
+
+
+def test_sensor_anomaly_dataset_shapes_and_labels():
+    frames, flabels = synthetic_sensor_anomaly(
+        jax.random.PRNGKey(1), n_streams=8, n_frames=32, n_sensors=4,
+        anomaly_rate=1.0, burst_frames=8)
+    assert frames.shape == (8, 32, 4) and frames.dtype == jnp.float32
+    assert flabels.shape == (8, 32) and flabels.dtype == jnp.int32
+    # every stream carries exactly one 8-frame burst at rate 1.0
+    np.testing.assert_array_equal(np.asarray(flabels).sum(axis=1),
+                                  np.full(8, 8))
+    # window labels: 1 iff ANY frame in the window is anomalous
+    bz = fit_quantile(np.asarray(frames).reshape(-1, 4), bits=2)
+    w = StreamingBooleanizer(bz, 4, 2)
+    rows, y = sensor_anomaly_windows(frames, flabels, w)
+    n_windows = (32 - 4) // 2 + 1
+    assert rows.shape == (8 * n_windows, w.n_boolean_features)
+    assert set(np.unique(y)) <= {0, 1} and y.sum() > 0
+    lab = np.asarray(flabels)
+    for i in range(n_windows):                # spot-check stream 0
+        assert y[i] == int(lab[0, i * 2:i * 2 + 4].max())
+
+
+def test_margin_of_matches_manual():
+    assert margin_of(np.array([3, 7, 5]), 1) == 2.0
+    assert margin_of(np.array([9, 7, 5]), 1) == -2.0
+    with pytest.raises(ValueError, match="margin_class"):
+        margin_of(np.array([1, 2]), 2)
+
+
+@pytest.mark.parametrize("engine_cls", [ServeEngine, AsyncServeEngine])
+def test_margin_decisions_bit_equal_offline(anomaly, engine_cls):
+    """Streamed margin-mode decisions bit-equal the digital oracle: the
+    margin IS ``margin_of(tm.forward(...))`` per window, and the alert
+    rule is a pure threshold on it."""
+    eng = engine_cls.from_ta_state(
+        anomaly["ta"], anomaly["cfg"], n_replicas=1,
+        key=jax.random.PRNGKey(3), vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                                bucket_sizes=(8, 16))))
+    thr = 1.0
+    scfg = StreamConfig(window=AWINDOW, hop=AHOP, vote=3,
+                        decision="margin", margin_class=1,
+                        margin_threshold=thr, qos=QOS_LATENCY)
+    server = StreamServer(eng, anomaly["booleanizer"], scfg)
+    stream = anomaly["frames"][0]
+    for lo in range(0, len(stream), 5):
+        server.feed("s0", stream[lo:lo + 5])
+        server.pump()
+    server.drain()
+    decisions = server.sessions["s0"].decisions
+    rows = StreamingBooleanizer(anomaly["booleanizer"], AWINDOW,
+                                AHOP).transform_offline(stream)
+    assert len(decisions) == len(rows)
+    sums = np.asarray(tm.forward(anomaly["ta"], jnp.asarray(rows),
+                                 anomaly["cfg"]))
+    margins = [margin_of(s, 1) for s in sums]
+    assert [d.margin for d in decisions] == margins       # bit-equal
+    expect_pred = [1 if mg >= thr else 0 for mg in margins]
+    assert [d.pred for d in decisions] == expect_pred
+    # latency-class windows show up in the per-class block
+    assert eng.summary()["qos"][QOS_LATENCY]["requests"] == len(rows)
+
+
+def test_argmax_sessions_have_no_margin(anomaly):
+    """KWS-style argmax sessions are untouched: Decision.margin stays
+    None and preds equal the plain argmax."""
+    eng = ServeEngine.from_ta_state(
+        anomaly["ta"], anomaly["cfg"], n_replicas=1,
+        key=jax.random.PRNGKey(3), vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                                bucket_sizes=(8, 16))))
+    server = StreamServer(eng, anomaly["booleanizer"],
+                          StreamConfig(window=AWINDOW, hop=AHOP, vote=1))
+    server.feed("a", anomaly["frames"][1])
+    server.drain()
+    rows = StreamingBooleanizer(anomaly["booleanizer"], AWINDOW,
+                                AHOP).transform_offline(
+                                    anomaly["frames"][1])
+    preds = np.argmax(np.asarray(tm.forward(
+        anomaly["ta"], jnp.asarray(rows), anomaly["cfg"])), axis=-1)
+    ds = server.sessions["a"].decisions
+    assert [d.margin for d in ds] == [None] * len(rows)
+    np.testing.assert_array_equal([d.pred for d in ds], preds)
+
+
+def test_stream_server_max_sessions_and_qos_override(anomaly):
+    eng = ServeEngine.from_ta_state(
+        anomaly["ta"], anomaly["cfg"], n_replicas=1,
+        key=jax.random.PRNGKey(3), vcfg=VariationConfig.nominal(),
+        ecfg=EngineConfig(batcher=BatcherConfig(max_batch=16,
+                                                bucket_sizes=(8, 16))))
+    scfg = StreamConfig(window=AWINDOW, hop=AHOP, max_sessions=2)
+    server = StreamServer(eng, anomaly["booleanizer"], scfg)
+    a = server.session("a", qos=QOS_LATENCY)
+    assert a.scfg.qos == QOS_LATENCY
+    assert server.session("b").scfg.qos == QOS_BULK
+    assert server.session("a") is a           # existing sid: no re-admit
+    with pytest.raises(QueueFull, match="max_sessions"):
+        server.session("c")
+    assert eng.summary()["rejected"] == 1
+    server.close("b")                         # frees a slot
+    assert server.session("c") is not None
+
+
+def test_stream_config_validation():
+    with pytest.raises(ValueError, match="QoS"):
+        StreamConfig(qos="realtime")
+    with pytest.raises(ValueError, match="decision"):
+        StreamConfig(decision="softmax")
+    with pytest.raises(ValueError, match="max_sessions"):
+        StreamConfig(max_sessions=0)
+    with pytest.raises(ValueError, match="latency_max_wait_s"):
+        BatcherConfig(latency_max_wait_s=0.0)
+    with pytest.raises(ValueError, match="latency_queue_depth"):
+        BatcherConfig(latency_queue_depth=0)
+    # defaults: latency waits a quarter of the bulk deadline
+    cfg = BatcherConfig(max_wait_s=8e-3)
+    assert cfg.wait_for(QOS_LATENCY) == pytest.approx(2e-3)
+    assert cfg.wait_for(QOS_BULK) == pytest.approx(8e-3)
+    assert BatcherConfig(latency_max_wait_s=1e-3).wait_for(
+        QOS_LATENCY) == pytest.approx(1e-3)

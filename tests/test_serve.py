@@ -75,7 +75,7 @@ def test_batcher_packed_mode_packs_once_at_submit():
     xs = [np.array([1, 0, 1, 1, 0], np.uint8) for _ in range(3)]
     for rid, x in enumerate(xs):
         b.submit(rid, x, clock())
-    assert b._queue[0].x.dtype == np.uint32          # packed in the queue
+    assert b._queues["bulk"][0].x.dtype == np.uint32  # packed in the queue
     batch = b.cut(clock(), force=True)
     assert batch.packed and batch.x.dtype == np.uint32
     assert batch.x.shape == (8, 1)                   # ceil(10/32) = 1 word
